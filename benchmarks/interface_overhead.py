@@ -1,0 +1,158 @@
+"""The paper's experiment (Fig. 1), adapted: runtime of the mpiBench
+operation set through (a) the raw substrate — bare ``jax.lax`` collectives
+inside ``shard_map`` — and (b) this library's modern interface, for varying
+message lengths and device counts.  The paper's claim to reproduce: *no
+recognizable disparity* between the two.
+
+Run directly (spawns subprocesses with N virtual devices):
+
+    PYTHONPATH=src python -m benchmarks.interface_overhead [--quick]
+
+Writes artifacts/bench/interface_overhead.json + a markdown table.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+OUT = ROOT / "artifacts" / "bench"
+
+# the measurement body executed in a subprocess with N virtual devices
+CHILD = r"""
+import json, sys, time
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro import core as mpx
+
+msg_lens = json.loads(sys.argv[1])   # element counts (f32)
+reps = int(sys.argv[2])
+
+comm = mpx.world()
+N = comm.size()
+name = comm.axis_names[0]
+lax = jax.lax
+
+def _perm():
+    return [(i, (i + 1) % N) for i in range(N)]
+
+# (op, raw-lax implementation, interface implementation) — the mpiBench set
+OPS = {
+    "barrier":        (lambda x: lax.psum(jnp.zeros((), x.dtype), name),
+                       lambda x: (comm.barrier(), x)[1] * 0.0),
+    "broadcast":      (lambda x: lax.all_gather(x[None] * 0, name)[0] + x,
+                       lambda x: comm.broadcast(x, root=0)),
+    "allreduce":      (lambda x: lax.psum(x, name),
+                       lambda x: comm.allreduce(x)),
+    "reduce":         (lambda x: lax.psum(x, name),
+                       lambda x: comm.reduce(x, root=0)),
+    "allgather":      (lambda x: lax.all_gather(x, name),
+                       lambda x: comm.allgather(x)),
+    "gather":         (lambda x: lax.all_gather(x, name),
+                       lambda x: comm.gather(x, root=0)),
+    "scatter":        (lambda x: lax.dynamic_slice_in_dim(
+                           lax.all_to_all(x, name, 0, 0, tiled=True),
+                           0, x.shape[0] // N, axis=0),
+                       lambda x: comm.scatter(x, root=0)),
+    "alltoall":       (lambda x: lax.all_to_all(x, name, 0, 0, tiled=True),
+                       lambda x: comm.alltoall(x)),
+    "reduce_scatter": (lambda x: lax.psum_scatter(x, name, tiled=True),
+                       lambda x: comm.reduce_scatter(x)),
+    "sendrecv":       (lambda x: lax.ppermute(x, name, _perm()),
+                       lambda x: comm.shift(x, offset=1)),
+    "scan":           (lambda x: jax.lax.associative_scan(
+                           jnp.add, lax.all_gather(x, name), axis=0)[
+                           lax.axis_index(name)],
+                       lambda x: comm.scan(x)),
+}
+
+def bench(fn, n_elems):
+    x = jnp.ones((max(N, n_elems // N * N),), jnp.float32)  # divisible shape
+    jitted = comm.spmd(fn)
+    out = jitted(x); jax.block_until_ready(out)              # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = jitted(x)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6           # us/call
+
+rows = []
+for n in msg_lens:
+    for op, (raw, iface) in OPS.items():
+        rows.append({
+            "devices": N, "msg_elems": n, "op": op,
+            "raw_us": bench(raw, n), "iface_us": bench(iface, n),
+        })
+print("RESULT " + json.dumps(rows))
+"""
+
+
+def run(devices: int, msg_lens: list[int], reps: int) -> list[dict]:
+    env = {
+        **os.environ,
+        "XLA_FLAGS": f"--xla_force_host_platform_device_count={devices}",
+        "PYTHONPATH": str(ROOT / "src"),
+    }
+    proc = subprocess.run(
+        [sys.executable, "-c", CHILD, json.dumps(msg_lens), str(reps)],
+        capture_output=True, text=True, env=env, timeout=1800, cwd=str(ROOT),
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-3000:])
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT "):
+            return json.loads(line[len("RESULT "):])
+    raise RuntimeError("no RESULT line")
+
+
+def geomean(xs):
+    import math
+
+    return math.exp(sum(math.log(max(x, 1e-9)) for x in xs) / len(xs))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--reps", type=int, default=30)
+    args = ap.parse_args(argv)
+
+    device_counts = [1, 2, 4, 8]
+    msg_lens = [2 ** n for n in range(1, 18, 4 if args.quick else 2)]
+    if args.quick:
+        device_counts = [1, 8]
+
+    all_rows = []
+    for d in device_counts:
+        all_rows += run(d, msg_lens, args.reps)
+        print(f"devices={d}: done")
+
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "interface_overhead.json").write_text(json.dumps(all_rows, indent=1))
+
+    # paper-style summary: geometric mean over the op set per (devices, len)
+    lines = ["| devices | msg elems | raw µs (geo) | interface µs (geo) | ratio |",
+             "|---|---|---|---|---|"]
+    worst = 0.0
+    for d in device_counts:
+        for n in msg_lens:
+            rows = [r for r in all_rows if r["devices"] == d and r["msg_elems"] == n]
+            g_raw = geomean([r["raw_us"] for r in rows])
+            g_ifc = geomean([r["iface_us"] for r in rows])
+            ratio = g_ifc / g_raw
+            worst = max(worst, ratio)
+            lines.append(f"| {d} | {n} | {g_raw:.1f} | {g_ifc:.1f} | {ratio:.3f} |")
+    table = "\n".join(lines)
+    (OUT / "interface_overhead.md").write_text(table + "\n")
+    print(table)
+    print(f"worst geomean ratio: {worst:.3f} (paper claim: ~1.0, 'no recognizable disparity')")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

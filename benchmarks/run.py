@@ -1,0 +1,55 @@
+"""Benchmark orchestrator — one benchmark per paper table/figure plus the
+roofline deliverables:
+
+* ``interface_overhead`` — the paper's Fig. 1 (mpiBench op set, raw vs
+  interface, message lengths × device counts);
+* ``hlo_parity``        — compiler-level zero-overhead proof (beyond-paper);
+* ``roofline``          — §Roofline tables from the dry-run artifacts;
+* ``train_throughput``  — end-to-end smoke-scale steps/s.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--skip", nargs="*", default=[])
+    args = ap.parse_args(argv)
+
+    from benchmarks import hlo_parity, interface_overhead, roofline, train_throughput
+
+    rc = 0
+    jobs = [
+        ("interface_overhead", lambda: interface_overhead.main(
+            ["--quick"] if args.quick else [])),
+        ("hlo_parity", lambda: hlo_parity.main()),
+        ("roofline(single-pod)", lambda: roofline.main(["--mesh", "pod_16x16"])),
+        ("roofline(multi-pod)", lambda: roofline.main(["--mesh", "multipod_2x16x16"])),
+        ("train_throughput", lambda: train_throughput.main(
+            ["--steps", "5"] if args.quick else [])),
+    ]
+    for name, fn in jobs:
+        if any(s in name for s in args.skip):
+            print(f"=== {name}: skipped")
+            continue
+        print(f"\n=== {name} ===")
+        t0 = time.time()
+        try:
+            r = fn()
+            rc = rc or (r or 0)
+        except Exception as e:  # pragma: no cover
+            print(f"{name} FAILED: {e}")
+            rc = 1
+        print(f"=== {name} done in {time.time()-t0:.0f}s")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

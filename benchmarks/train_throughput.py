@@ -1,0 +1,87 @@
+"""End-to-end train/serve throughput on the host devices (smoke-scale
+models; the production numbers are the §Roofline projections).
+
+    PYTHONPATH=src python -m benchmarks.train_throughput [--arch gemma2_9b]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+OUT = ROOT / "artifacts" / "bench"
+
+CHILD = r"""
+import json, sys, time
+import jax
+from repro.configs import base
+from repro.launch.mesh import make_host_mesh
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+arch, steps, batch, seq = sys.argv[1], int(sys.argv[2]), int(sys.argv[3]), int(sys.argv[4])
+cfg = base.get_smoke_config(arch)
+pcfg = base.get_parallel(arch)
+mesh = make_host_mesh()
+t = Trainer(cfg, pcfg, TrainerConfig(steps=steps, log_every=steps), mesh,
+            seq_len=seq, global_batch=batch)
+params, opt_state = t.init_state()
+step_fn = t.compile(params, opt_state)
+b = t.pipeline.device_batch(0, mesh, pcfg)
+params, opt_state, m = step_fn(params, opt_state, b)   # warm
+jax.block_until_ready(m["loss"])
+t0 = time.perf_counter()
+for i in range(steps):
+    b = t.pipeline.device_batch(i, mesh, pcfg)
+    params, opt_state, m = step_fn(params, opt_state, b)
+jax.block_until_ready(m["loss"])
+dt = time.perf_counter() - t0
+print("RESULT " + json.dumps({
+    "arch": arch, "steps": steps, "s_per_step": dt / steps,
+    "tokens_per_s": batch * seq * steps / dt,
+    "final_loss": float(m["loss"]),
+}))
+"""
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", nargs="*", default=["gemma2_9b", "mamba2_2_7b", "grok_1_314b"])
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args(argv)
+
+    env = {
+        **os.environ,
+        "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+        "PYTHONPATH": str(ROOT / "src"),
+    }
+    rows = []
+    for arch in args.archs:
+        proc = subprocess.run(
+            [sys.executable, "-c", CHILD, arch, str(args.steps), str(args.batch),
+             str(args.seq)],
+            capture_output=True, text=True, env=env, timeout=1800, cwd=str(ROOT),
+        )
+        if proc.returncode != 0:
+            print(f"{arch}: FAILED\n{proc.stderr[-1500:]}")
+            continue
+        for line in proc.stdout.splitlines():
+            if line.startswith("RESULT "):
+                r = json.loads(line[len("RESULT "):])
+                rows.append(r)
+                print(f"{arch}: {r['s_per_step']*1e3:.1f} ms/step, "
+                      f"{r['tokens_per_s']:.0f} tok/s (smoke scale, 8 virtual devs)")
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "train_throughput.json").write_text(json.dumps(rows, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

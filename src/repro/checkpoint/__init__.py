@@ -1,0 +1,4 @@
+"""Checkpointing built on the parallel-IO component (``repro.core.io``):
+sharded save/restore, async save, atomic step manifests, elastic re-shard."""
+
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401

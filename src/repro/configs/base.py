@@ -1,0 +1,272 @@
+"""Configuration schema: model, parallelism and workload shapes.
+
+Every assigned architecture is a :class:`ModelConfig` in its own module
+(``repro/configs/<id>.py``); the four workload shapes are fixed
+:class:`ShapeConfig` instances; :class:`ParallelConfig` carries the
+distribution plan (which the dry-run and the perf hillclimb toggle).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Any
+
+from repro.core.descriptors import Compression
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@dataclasses.dataclass
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+
+    # attention flavour
+    qkv_bias: bool = False
+    rope_theta: float = 10_000.0
+    attn_logit_softcap: float | None = None
+    final_logit_softcap: float | None = None
+    sliding_window: int | None = None
+    layer_pattern: str = "uniform"   # uniform | local_global (gemma-2 alternation)
+    post_norms: bool = False         # gemma-2 pre+post sandwich norms
+    query_scale: float | None = None  # override 1/sqrt(head_dim)
+
+    # embedding / head
+    tie_embeddings: bool = False
+    embed_scale: bool = False        # gemma-style sqrt(d_model) input scaling
+
+    # MoE
+    num_experts: int = 0
+    num_shared_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0
+    first_dense_layers: int = 0
+    capacity_factor: float = 1.25
+
+    # MLA (deepseek-v2)
+    mla: bool = False
+    q_lora: int = 0
+    kv_lora: int = 0
+    rope_head_dim: int = 0
+    nope_head_dim: int = 0
+    v_head_dim: int = 0
+
+    # SSM (mamba-2)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    attn_every: int = 0              # hybrid: shared attention block period
+
+    # enc-dec
+    encoder_layers: int = 0
+
+    # vlm
+    num_image_tokens: int = 0
+    prefix_lm: bool = False
+
+    # numerics
+    dtype: str = "bfloat16"
+    norm_eps: float = 1e-6
+    act: str = "silu"
+
+    # provenance
+    source: str = ""
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab padded to 256 so the logit dimension shards over any mesh
+        axis; synthetic labels are drawn below ``vocab_size``."""
+
+        return _round_up(self.vocab_size, 256)
+
+    @property
+    def ssm_d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_d_inner // self.ssm_head_dim
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for MODEL_FLOPS and reporting)."""
+
+        d, L = self.d_model, self.num_layers
+        emb = self.padded_vocab * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        if self.family in ("dense", "moe", "vlm", "encdec"):
+            if self.mla:
+                attn = (
+                    d * self.q_lora
+                    + self.q_lora * self.num_heads * (self.nope_head_dim + self.rope_head_dim)
+                    + d * (self.kv_lora + self.rope_head_dim)
+                    + self.kv_lora * self.num_heads * (self.nope_head_dim + self.v_head_dim)
+                    + self.num_heads * self.v_head_dim * d
+                )
+            else:
+                attn = (
+                    d * self.num_heads * self.head_dim
+                    + 2 * d * self.num_kv_heads * self.head_dim
+                    + self.num_heads * self.head_dim * d
+                )
+            if self.num_experts:
+                moe_l = L - self.first_dense_layers
+                shared = self.num_shared_experts * 3 * d * self.moe_d_ff
+                routed = self.num_experts * 3 * d * self.moe_d_ff
+                router = d * self.num_experts
+                mlp_total = (
+                    moe_l * (shared + routed + router)
+                    + self.first_dense_layers * 3 * d * self.d_ff
+                )
+            else:
+                mlp_total = L * 3 * d * self.d_ff
+            per_layer_total = L * attn + mlp_total + L * 2 * d
+            if self.family == "encdec":
+                # encoder layers + decoder cross-attention
+                enc = self.encoder_layers * (attn + 3 * d * self.d_ff + 2 * d)
+                cross = L * attn
+                per_layer_total += enc + cross
+            if self.family == "vlm":
+                per_layer_total += 1152 * d  # SigLIP-stub multimodal projector
+            return emb + per_layer_total
+        if self.family == "ssm":
+            di, ns, nh = self.ssm_d_inner, self.ssm_state, self.ssm_heads
+            blk = (
+                d * (2 * di + 2 * self.ssm_groups * ns + nh)   # in_proj
+                + self.ssm_conv * (di + 2 * self.ssm_groups * ns)
+                + di * d                                        # out_proj
+                + 2 * nh + di + d                               # A, D, dt_bias(+norm)
+            )
+            return emb + L * blk + L * d
+        if self.family == "hybrid":
+            di, ns, nh = self.ssm_d_inner, self.ssm_state, self.ssm_heads
+            blk = (
+                d * (2 * di + 2 * self.ssm_groups * ns + nh)
+                + self.ssm_conv * (di + 2 * self.ssm_groups * ns)
+                + di * d
+                + 2 * nh + di + d
+            )
+            attn = (
+                d * self.num_heads * self.head_dim * 2
+                + 2 * d * self.num_kv_heads * self.head_dim
+                + 3 * d * self.d_ff
+                + 4 * d
+            )
+            return emb + L * (blk + d) + attn  # one shared attention block
+        raise ValueError(self.family)
+
+    def active_param_count(self) -> int:
+        """Active (per-token) parameters for MoE (6·N_active·D FLOPs)."""
+
+        if not self.num_experts:
+            return self.param_count()
+        total = self.param_count()
+        d = self.d_model
+        moe_l = self.num_layers - self.first_dense_layers
+        routed_all = moe_l * self.num_experts * 3 * d * self.moe_d_ff
+        routed_active = moe_l * self.moe_top_k * 3 * d * self.moe_d_ff
+        return total - routed_all + routed_active
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass
+class ParallelConfig:
+    """Distribution plan; the hillclimb toggles live here."""
+
+    data_axes: tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+
+    fsdp: bool = True                    # params/opt-state sharded over data_axes
+    attn_plan: str = "tp_heads"          # tp_heads | sp (sequence-parallel attention)
+    attn_impl: str = "ref"               # ref | chunked (online-softmax) | pallas[_tpu]
+    shard_experts: bool = False          # EP: expert dim over model_axis
+    moe_dispatch: str = "global"         # global | per_row (data-local dispatch)
+    seq_shard_cache: bool = False        # decode: KV cache sharded over sequence
+    flash_decode_merge: bool = False     # + exact partial-softmax merge (optimized)
+    ring_attention: bool = False         # training SP via ring schedule (optimized)
+    overlap_fsdp: bool = False           # all_gather_matmul futures (optimized)
+    compression: Compression = Compression.NONE  # cross-pod grad payloads
+    remat: str = "full"                  # none | full | dots
+    microbatches: int = 1                # gradient-accumulation splits of the global batch
+    kv_cache_dtype: str = "bfloat16"     # bfloat16 | int8
+    moment_dtype: str = "float32"        # float32 | int8 (8-bit Adam moments)
+    scan_layers: bool = True
+
+    @property
+    def all_data_axes(self) -> tuple[str, ...]:
+        return self.data_axes
+
+
+# -- registry ----------------------------------------------------------------
+
+ARCHITECTURES = (
+    "qwen1_5_32b",
+    "phi4_mini_3_8b",
+    "gemma2_9b",
+    "granite_3_8b",
+    "seamless_m4t_large_v2",
+    "paligemma_3b",
+    "grok_1_314b",
+    "deepseek_v2_236b",
+    "zamba2_7b",
+    "mamba2_2_7b",
+)
+
+_ALIASES = {a.replace("_", "-"): a for a in ARCHITECTURES}
+
+
+def get_config(arch: str) -> ModelConfig:
+    arch = _ALIASES.get(arch, arch)
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.config()
+
+
+def get_parallel(arch: str, multi_pod: bool = False) -> ParallelConfig:
+    arch = _ALIASES.get(arch, arch)
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    p: ParallelConfig = mod.parallel()
+    if multi_pod:
+        p.data_axes = ("pod", "data")
+    return p
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests."""
+
+    arch = _ALIASES.get(arch, arch)
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.smoke_config()
+
+
+def shape_applicable(cfg: ModelConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Whether a (arch × shape) cell runs; reason if skipped (DESIGN.md §5)."""
+
+    if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return False, "long_500k requires sub-quadratic attention state (full-attention arch)"
+    return True, ""

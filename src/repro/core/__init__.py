@@ -1,0 +1,92 @@
+"""repro.core — a modern JAX interface for XLA collective communication.
+
+The paper's contribution ("A C++20 Interface for MPI 4.0") adapted to the
+TPU/XLA substrate: communicators over mesh axes, automatic datatype
+generation by aggregate reflection, requests as futures with continuations
+(and compiler-visible overlap), scoped enums + description objects +
+meaningful defaults, opt-in trace-time error checking, parallel IO and the
+tool (pvar/cvar) interface.  See DESIGN.md for the full mapping.
+
+Conventional import::
+
+    from repro import core as mpx
+
+    comm = mpx.world()
+
+    @comm.spmd
+    def program():
+        data = jnp.zeros(())
+        return comm.broadcast(data, root=0)
+"""
+
+from repro.core import errors  # noqa: F401
+from repro.core.communicator import Communicator, world  # noqa: F401
+from repro.core.datatypes import (  # noqa: F401
+    DataType,
+    datatype_of,
+    is_compliant,
+    pack,
+    register_aggregate,
+    unpack,
+)
+from repro.core.descriptors import (  # noqa: F401
+    Algorithm,
+    CollectiveSpec,
+    Compression,
+    FileSpec,
+    Mode,
+    ReduceOp,
+    ThreadLevel,
+    WindowSpec,
+)
+from repro.core.futures import (  # noqa: F401
+    Future,
+    PersistentRequest,
+    TraceFuture,
+    trace_when_all,
+    trace_when_any,
+    when_all,
+    when_any,
+)
+from repro.core.collectives import (  # noqa: F401
+    allgather,
+    allgatherv,
+    allreduce,
+    alltoall,
+    alltoallv,
+    barrier,
+    broadcast,
+    exscan,
+    gather,
+    reduce,
+    reduce_scatter,
+    scan,
+    scatter,
+    send_recv,
+    shift,
+)
+from repro.core.overlap import (  # noqa: F401
+    all_gather_matmul,
+    hierarchical_allreduce,
+    matmul_reduce_scatter,
+    merge_partial_attention,
+    ring_all_gather,
+    ring_all_gather_bidirectional,
+    ring_attention,
+    ring_reduce_scatter,
+)
+from repro.core.onesided import Window, create_window  # noqa: F401
+from repro.core import compress, io, tool  # noqa: F401
+from repro.core import _methods  # noqa: F401  (binds the method facade)
+
+
+def future(value) -> "Future | TraceFuture":
+    """``mpi::future(request)`` analogue: wrap a value or pass futures
+    through (requests returned by ``immediate_*`` already are futures)."""
+
+    if isinstance(value, (Future, TraceFuture)):
+        return value
+    return Future(value)
+
+
+set_error_checking = errors.set_error_checking

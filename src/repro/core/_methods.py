@@ -1,0 +1,115 @@
+"""Paper-style method facade: binds the collective/future API onto
+:class:`~repro.core.communicator.Communicator` so user code reads exactly
+like the paper's examples::
+
+    status = mpx.future(comm.immediate_broadcast(data, 0)) \
+        .then(lambda f: ...) \
+        .get()
+
+Binding lives here (not in ``communicator.py``) to keep the functional core
+import-cycle-free; counters for the MPI_T pvar interface are incremented at
+this layer.
+"""
+
+from __future__ import annotations
+
+import functools
+
+from repro.core import collectives, overlap, tool
+from repro.core.communicator import Communicator
+from repro.core.futures import PersistentRequest, TraceFuture
+
+
+def _counted(name, fn):
+    @functools.wraps(fn)
+    def wrapper(*a, **k):
+        tool.pvar_count(name)
+        return fn(*a, **k)
+
+    return wrapper
+
+
+def _bind() -> None:
+    # blocking collectives (chapter 6)
+    for name in (
+        "broadcast",
+        "allreduce",
+        "reduce",
+        "reduce_scatter",
+        "allgather",
+        "gather",
+        "scatter",
+        "alltoall",
+        "allgatherv",
+        "alltoallv",
+        "scan",
+        "exscan",
+        "send_recv",
+        "shift",
+        "barrier",
+    ):
+        fn = getattr(collectives, name)
+
+        def method(self, *a, _fn=fn, _name=name, **k):
+            tool.pvar_count(_name)
+            return _fn(self, *a, **k)
+
+        method.__name__ = name
+        method.__doc__ = fn.__doc__
+        setattr(Communicator, name, method)
+
+    # immediate (future-returning) forms — requests as futures (C3)
+    def immediate(self, name, *a, **k):
+        fn = getattr(collectives, name)
+        tool.pvar_count(f"immediate_{name}")
+        return TraceFuture(lambda: fn(self, *a, **k))
+
+    for name in (
+        "broadcast",
+        "allreduce",
+        "reduce",
+        "reduce_scatter",
+        "allgather",
+        "gather",
+        "scatter",
+        "alltoall",
+        "scan",
+        "exscan",
+        "send_recv",
+        "shift",
+        "barrier",
+    ):
+
+        def imethod(self, *a, _name=name, **k):
+            return immediate(self, _name, *a, **k)
+
+        imethod.__name__ = f"immediate_{name}"
+        imethod.__doc__ = (
+            f"Nonblocking {name}: returns a TraceFuture (MPI_I{name.capitalize()})."
+        )
+        setattr(Communicator, f"immediate_{name}", imethod)
+
+    # decomposed/overlappable forms
+    def immediate_ring_allgather(self, x, *, axis=0):
+        tool.pvar_count("immediate_ring_allgather")
+        return overlap.immediate_all_gather(self, x, axis=axis)
+
+    Communicator.immediate_ring_allgather = immediate_ring_allgather
+
+    # persistent operations (MPI_*_init / MPI_Start)
+    def persistent(self, fn, *example_args, in_specs=None, out_specs=None, **spmd_kw):
+        from jax.sharding import PartitionSpec as P
+
+        tool.pvar_count("persistent_init")
+        jitted = self.spmd(
+            fn,
+            in_specs=in_specs if in_specs is not None else P(),
+            out_specs=out_specs if out_specs is not None else P(),
+            **spmd_kw,
+        )
+        return PersistentRequest(jitted, example_args)
+
+    Communicator.persistent = persistent
+
+
+_bind()

@@ -1,0 +1,440 @@
+"""Trace-level collectives (paper §II, C1 — MPI 4.0 chapters 5–6).
+
+Every MPI collective used by mpiBench (and the rest of chapter 6) is exposed
+as a function over a :class:`~repro.core.communicator.Communicator`, usable
+inside ``comm.spmd`` regions.  All of them accept either arrays or arbitrary
+*compliant aggregates* (paper Listing 1): aggregates are packed through the
+reflection system in :mod:`repro.core.datatypes` so one collective moves one
+buffer per dtype group.
+
+Lowering notes (the "hardware adaptation" of MPI semantics to XLA SPMD):
+
+* rooted collectives (``broadcast``/``reduce``/``gather``) lower to their
+  unrooted XLA forms (masked ``all-reduce`` / ``all-gather``) because XLA has
+  no rooted collectives — the result is *replicated*, a strictly stronger
+  guarantee at identical wire cost on a ring;
+* ``scatter`` lowers to ``all-to-all`` + root row selection (1/n the bytes of
+  a broadcast);
+* vector (``v``) variants emulate raggedness with per-rank static counts +
+  padding, because SPMD programs are shape-static by construction;
+* ``send``/``recv`` pairs are expressed as :func:`send_recv` permutes
+  (``collective-permute``): partner patterns must be trace-time static, the
+  SPMD analogue of a matched send/recv.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import datatypes, errors
+from repro.core.communicator import Communicator
+from repro.core.descriptors import Algorithm, CollectiveSpec, ReduceOp, resolve
+
+Axes = tuple[str, ...]
+
+
+def _is_leaf_operand(x: Any) -> bool:
+    return isinstance(x, (jax.Array, np.ndarray, np.generic, int, float, bool, complex))
+
+
+def _check_root(comm: Communicator, root: int) -> None:
+    errors.check(
+        0 <= int(root) < comm.size(),
+        errors.ErrorClass.ERR_ROOT,
+        f"root {root} out of range for communicator of size {comm.size()}",
+    )
+
+
+def _single_axis(comm: Communicator) -> str:
+    errors.check(
+        len(comm.axis_names) == 1,
+        errors.ErrorClass.ERR_TOPOLOGY,
+        "this operation requires a single-axis communicator; use comm.split()",
+    )
+    return comm.axis_names[0]
+
+
+# ---------------------------------------------------------------------------
+# reduction kernels
+# ---------------------------------------------------------------------------
+
+
+def _reduce_array(x: jax.Array, axes: Axes, op: ReduceOp):
+    x = jnp.asarray(x)
+    if op is ReduceOp.SUM:
+        if x.dtype == jnp.bool_:
+            return lax.psum(x.astype(jnp.int32), axes) > 0
+        return lax.psum(x, axes)
+    if op is ReduceOp.MAX:
+        return lax.pmax(x, axes)
+    if op is ReduceOp.MIN:
+        return lax.pmin(x, axes)
+    if op is ReduceOp.LAND:
+        return lax.pmin((x != 0).astype(jnp.uint8), axes) != 0
+    if op is ReduceOp.LOR:
+        return lax.pmax((x != 0).astype(jnp.uint8), axes) != 0
+    if op is ReduceOp.LXOR:
+        return (lax.psum((x != 0).astype(jnp.int32), axes) % 2) != 0
+    # gather-based fallbacks (PROD and the bitwise family have no psum form)
+    g = lax.all_gather(x, axes, axis=0, tiled=False)
+    if op is ReduceOp.PROD:
+        return jnp.prod(g, axis=0)
+    if op is ReduceOp.BAND:
+        return functools.reduce(jnp.bitwise_and, _unstack(g))
+    if op is ReduceOp.BOR:
+        return functools.reduce(jnp.bitwise_or, _unstack(g))
+    if op is ReduceOp.BXOR:
+        return functools.reduce(jnp.bitwise_xor, _unstack(g))
+    errors.fail(errors.ErrorClass.ERR_OP, f"unsupported reduction {op}")
+
+
+def _unstack(g: jax.Array) -> list[jax.Array]:
+    return [g[i] for i in range(g.shape[0])]
+
+
+# ---------------------------------------------------------------------------
+# collectives
+# ---------------------------------------------------------------------------
+
+
+def broadcast(comm: Communicator, value: Any, root: int = 0, spec: CollectiveSpec | None = None):
+    """``MPI_Bcast``: every rank receives root's value.
+
+    Lowering: masked ``psum`` (zero everywhere but root), the standard SPMD
+    broadcast.  Accepts compliant aggregates.
+    """
+
+    _check_root(comm, root)
+    axes = comm.axis_names
+    rank = comm.rank()
+
+    def bcast_leaf(x: jax.Array):
+        masked = jnp.where(rank == root, x, jnp.zeros_like(x))
+        return _reduce_array(masked, axes, ReduceOp.SUM).astype(x.dtype)
+
+    if _is_leaf_operand(value):
+        return datatypes.apply_leafwise(bcast_leaf, value)
+    return datatypes.apply_packed(bcast_leaf, value)
+
+
+def allreduce(
+    comm: Communicator,
+    value: Any,
+    op: ReduceOp = ReduceOp.SUM,
+    spec: CollectiveSpec | None = None,
+):
+    """``MPI_Allreduce``."""
+
+    spec = resolve(spec, op=op)
+    axes = comm.axis_names
+
+    def ar_leaf(x):
+        return _reduce_array(x, axes, spec.op)
+
+    if _is_leaf_operand(value):
+        return datatypes.apply_leafwise(ar_leaf, value)
+    return datatypes.apply_packed(ar_leaf, value)
+
+
+def reduce(
+    comm: Communicator,
+    value: Any,
+    root: int = 0,
+    op: ReduceOp = ReduceOp.SUM,
+    spec: CollectiveSpec | None = None,
+):
+    """``MPI_Reduce``.  The result is replicated (stronger than MPI's
+    root-only guarantee; identical ring cost — see module docstring)."""
+
+    _check_root(comm, root)
+    return allreduce(comm, value, op=op, spec=spec)
+
+
+def reduce_scatter(
+    comm: Communicator,
+    value: Any,
+    op: ReduceOp = ReduceOp.SUM,
+    spec: CollectiveSpec | None = None,
+):
+    """``MPI_Reduce_scatter_block``: reduce then split dim ``spec.axis``."""
+
+    spec = resolve(spec, op=op)
+    errors.check(
+        spec.op is ReduceOp.SUM,
+        errors.ErrorClass.ERR_OP,
+        "reduce_scatter lowers to psum-scatter; only SUM is supported",
+    )
+    axes = comm.axis_names
+    n = comm.size()
+
+    def rs_leaf(x):
+        x = jnp.asarray(x)
+        errors.check(
+            x.ndim > spec.axis and x.shape[spec.axis] % n == 0,
+            errors.ErrorClass.ERR_COUNT,
+            f"reduce_scatter axis {spec.axis} of shape {x.shape} not divisible by {n}",
+        )
+        return lax.psum_scatter(x, axes, scatter_dimension=spec.axis, tiled=True)
+
+    if _is_leaf_operand(value):
+        return datatypes.apply_leafwise(rs_leaf, value)
+    # packed buffers are 1-D; scatter over dim 0
+    def rs_packed(buf):
+        errors.check(
+            buf.shape[0] % n == 0,
+            errors.ErrorClass.ERR_COUNT,
+            "packed extent not divisible by communicator size",
+        )
+        return lax.psum_scatter(buf, axes, scatter_dimension=0, tiled=True)
+
+    # NOTE: scattered aggregates cannot be unpacked (shape changed); return buffers.
+    bufs, _ = datatypes.pack(value)
+    return [rs_packed(b) for b in bufs]
+
+
+def allgather(comm: Communicator, value: Any, spec: CollectiveSpec | None = None):
+    """``MPI_Allgather``: concatenate (``tiled``) or stack ranks' values."""
+
+    spec = resolve(spec)
+    axes = comm.axis_names
+
+    def ag_leaf(x):
+        x = jnp.asarray(x)
+        return lax.all_gather(x, axes, axis=spec.axis, tiled=spec.tiled)
+
+    return datatypes.apply_leafwise(ag_leaf, value)
+
+
+def gather(comm: Communicator, value: Any, root: int = 0, spec: CollectiveSpec | None = None):
+    """``MPI_Gather`` (result replicated; see module docstring)."""
+
+    _check_root(comm, root)
+    return allgather(comm, value, spec=spec)
+
+
+def scatter(comm: Communicator, value: Any, root: int = 0, spec: CollectiveSpec | None = None):
+    """``MPI_Scatter``: rank ``i`` receives root's ``i``-th block along
+    ``spec.axis``.  Lowering: ``all-to-all`` + root row selection."""
+
+    _check_root(comm, root)
+    spec = resolve(spec)
+    axes = comm.axis_names
+    n = comm.size()
+
+    def sc_leaf(x):
+        x = jnp.asarray(x)
+        errors.check(
+            x.ndim > spec.axis and x.shape[spec.axis] % n == 0,
+            errors.ErrorClass.ERR_COUNT,
+            f"scatter axis {spec.axis} of shape {x.shape} not divisible by {n}",
+        )
+        # rank r's row j goes to rank j; afterwards select the root's row.
+        blocks = lax.all_to_all(
+            x, axes, split_axis=spec.axis, concat_axis=spec.axis, tiled=True
+        )
+        block = x.shape[spec.axis] // n
+        return lax.dynamic_slice_in_dim(blocks, root * block, block, axis=spec.axis)
+
+    return datatypes.apply_leafwise(sc_leaf, value)
+
+
+def alltoall(
+    comm: Communicator,
+    value: Any,
+    split_axis: int = 0,
+    concat_axis: int = 0,
+    spec: CollectiveSpec | None = None,
+):
+    """``MPI_Alltoall``."""
+
+    axes = comm.axis_names
+    n = comm.size()
+
+    def a2a_leaf(x):
+        x = jnp.asarray(x)
+        errors.check(
+            x.shape[split_axis] % n == 0,
+            errors.ErrorClass.ERR_COUNT,
+            f"alltoall split axis {split_axis} of {x.shape} not divisible by {n}",
+        )
+        return lax.all_to_all(
+            x, axes, split_axis=split_axis, concat_axis=concat_axis, tiled=True
+        )
+
+    return datatypes.apply_leafwise(a2a_leaf, value)
+
+
+# -- vector (ragged) variants ------------------------------------------------
+
+
+def allgatherv(comm: Communicator, value: jax.Array, counts: Sequence[int]):
+    """``MPI_Allgatherv``: per-rank leading-dim counts (trace-time static).
+
+    Each rank passes a buffer padded to ``max(counts)``; its valid prefix is
+    ``counts[rank]``.  Returns the tight concatenation (static shape
+    ``sum(counts)``) — raggedness via static counts, the SPMD idiom.
+    """
+
+    n = comm.size()
+    errors.check(
+        len(counts) == n,
+        errors.ErrorClass.ERR_COUNT,
+        f"counts has {len(counts)} entries for {n} ranks",
+    )
+    cmax = max(counts)
+    x = jnp.asarray(value)
+    errors.check(
+        x.shape[0] == cmax,
+        errors.ErrorClass.ERR_TRUNCATE,
+        f"allgatherv buffers must be padded to max(counts)={cmax}, got {x.shape[0]}",
+    )
+    g = lax.all_gather(x, comm.axis_names, axis=0, tiled=False)  # (n, cmax, ...)
+    pieces = [g[r, : counts[r]] for r in range(n)]
+    return jnp.concatenate(pieces, axis=0)
+
+
+def alltoallv(
+    comm: Communicator,
+    value: jax.Array,
+    send_counts: Sequence[int],
+):
+    """``MPI_Alltoallv`` with a symmetric count matrix row (each rank sends
+    ``send_counts[j]`` items to rank ``j``, padded blocks of ``max(counts)``).
+
+    Returns ``(received, recv_counts)`` where ``received`` is the tight
+    concatenation of the valid prefixes received from every peer.  Symmetric
+    counts keep the pattern SPMD-static; asymmetric alltoallv would require
+    per-rank programs (documented divergence).
+    """
+
+    n = comm.size()
+    errors.check(
+        len(send_counts) == n,
+        errors.ErrorClass.ERR_COUNT,
+        f"send_counts has {len(send_counts)} entries for {n} ranks",
+    )
+    cmax = max(send_counts)
+    x = jnp.asarray(value)
+    errors.check(
+        x.shape[0] == n * cmax,
+        errors.ErrorClass.ERR_TRUNCATE,
+        f"alltoallv buffer must be (n*max_count, ...) = {n * cmax}, got {x.shape[0]}",
+    )
+    swapped = lax.all_to_all(x, comm.axis_names, split_axis=0, concat_axis=0, tiled=True)
+    blocks = swapped.reshape((n, cmax) + swapped.shape[1:])
+    pieces = [blocks[r, : send_counts[r]] for r in range(n)]
+    return jnp.concatenate(pieces, axis=0), tuple(send_counts)
+
+
+# -- prefix reductions --------------------------------------------------------
+
+
+def scan(comm: Communicator, value: jax.Array, op: ReduceOp = ReduceOp.SUM):
+    """``MPI_Scan`` (inclusive prefix reduction over ranks)."""
+
+    return _prefix(comm, value, op, inclusive=True)
+
+
+def exscan(comm: Communicator, value: jax.Array, op: ReduceOp = ReduceOp.SUM):
+    """``MPI_Exscan`` (exclusive; rank 0 receives the identity)."""
+
+    return _prefix(comm, value, op, inclusive=False)
+
+
+def _prefix(comm: Communicator, value: jax.Array, op: ReduceOp, inclusive: bool):
+    errors.check(
+        op in (ReduceOp.SUM, ReduceOp.MAX, ReduceOp.MIN, ReduceOp.PROD),
+        errors.ErrorClass.ERR_OP,
+        f"scan does not support {op}",
+    )
+    x = jnp.asarray(value)
+    rank = comm.rank()
+    g = lax.all_gather(x, comm.axis_names, axis=0, tiled=False)  # (n, ...)
+    n = comm.size()
+    steps = jnp.arange(n).reshape((n,) + (1,) * x.ndim)
+    limit = rank + 1 if inclusive else rank
+    if op is ReduceOp.SUM:
+        masked = jnp.where(steps < limit, g, jnp.zeros_like(g))
+        return jnp.sum(masked, axis=0).astype(x.dtype)
+    if op is ReduceOp.PROD:
+        masked = jnp.where(steps < limit, g, jnp.ones_like(g))
+        return jnp.prod(masked, axis=0).astype(x.dtype)
+    if op is ReduceOp.MAX:
+        fill = jnp.full_like(g, _type_min(x.dtype))
+        return jnp.max(jnp.where(steps < limit, g, fill), axis=0)
+    fill = jnp.full_like(g, _type_max(x.dtype))
+    return jnp.min(jnp.where(steps < limit, g, fill), axis=0)
+
+
+def _type_min(dtype):
+    return (
+        jnp.finfo(dtype).min if jnp.issubdtype(dtype, jnp.floating) else jnp.iinfo(dtype).min
+    )
+
+
+def _type_max(dtype):
+    return (
+        jnp.finfo(dtype).max if jnp.issubdtype(dtype, jnp.floating) else jnp.iinfo(dtype).max
+    )
+
+
+# -- point-to-point -----------------------------------------------------------
+
+
+def send_recv(
+    comm: Communicator,
+    value: Any,
+    perm: Sequence[tuple[int, int]],
+):
+    """Matched ``MPI_Sendrecv``: rank ``s`` sends to ``d`` for each ``(s, d)``
+    pair.  Ranks not receiving from anyone get zeros (the SPMD convention).
+    Lowering: ``collective-permute``."""
+
+    axis = _single_axis(comm)
+    n = comm.size()
+    for s, d in perm:
+        errors.check(
+            0 <= s < n and 0 <= d < n,
+            errors.ErrorClass.ERR_RANK,
+            f"send_recv pair ({s}, {d}) out of range for size {n}",
+        )
+    srcs = [s for s, _ in perm]
+    errors.check(
+        len(set(srcs)) == len(srcs),
+        errors.ErrorClass.ERR_RANK,
+        "a rank may send to at most one destination per send_recv",
+    )
+
+    def p_leaf(x):
+        return lax.ppermute(jnp.asarray(x), axis, list(map(tuple, perm)))
+
+    if _is_leaf_operand(value):
+        return datatypes.apply_leafwise(p_leaf, value)
+    return datatypes.apply_packed(p_leaf, value)
+
+
+def shift(comm: Communicator, value: Any, offset: int = 1, wrap: bool = True):
+    """Ring shift (``MPI_Cart_shift`` + sendrecv): rank ``i`` sends to
+    ``i + offset``."""
+
+    n = comm.size()
+    if wrap:
+        perm = [(i, (i + offset) % n) for i in range(n)]
+    else:
+        perm = [(i, i + offset) for i in range(n) if 0 <= i + offset < n]
+    return send_recv(comm, value, perm)
+
+
+def barrier(comm: Communicator):
+    """``MPI_Barrier``: a zero-byte all-reduce + optimization barrier, the
+    SPMD synchronisation idiom (XLA's executional model already sequences
+    collectives; the barrier pins program order)."""
+
+    token = lax.psum(jnp.zeros((), jnp.float32), comm.axis_names)
+    return lax.optimization_barrier(token)

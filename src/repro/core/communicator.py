@@ -1,0 +1,217 @@
+"""Communicators (paper §II, C1/C4).
+
+``mpi::communicator`` wraps an ``MPI_Comm`` with managed/unmanaged lifetime.
+The TPU analogue of a communicator is *a mesh plus a subset of its named
+axes*: collectives address devices through axis names, sub-communicators are
+axis subsets (``MPI_Comm_split`` along topology dimensions), and "world" is a
+1-axis mesh over all devices.
+
+Lifetime semantics mirror the paper:
+
+* **managed** — the communicator built the mesh itself (``world()``,
+  ``Communicator.create``) and owns it;
+* **unmanaged** — it wraps a mesh owned by someone else (a training runtime's
+  mesh) and must not outlive it.
+* copy construction is deleted (Python: no implicit copies are taken); ``dup``
+  exists because MPI provides ``MPI_Comm_dup``; "move" is Python reference
+  semantics.
+
+Rank/size are *trace-level* notions inside :meth:`spmd` regions (SPMD code),
+exactly as MPI ranks are only meaningful inside the parallel program.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import errors
+
+
+def _flat_axis_index(axis_names: tuple[str, ...], mesh: Mesh):
+    """Linearised rank over possibly-multiple mesh axes (row-major)."""
+
+    idx = None
+    for name in axis_names:
+        component = jax.lax.axis_index(name)
+        size = mesh.shape[name]
+        idx = component if idx is None else idx * size + component
+    return idx
+
+
+class Communicator:
+    """A named-axis communicator over a :class:`jax.sharding.Mesh`."""
+
+    def __init__(
+        self,
+        mesh: Mesh,
+        axis_names: Sequence[str] | str | None = None,
+        *,
+        managed: bool = False,
+    ):
+        if isinstance(axis_names, str):
+            axis_names = (axis_names,)
+        if axis_names is None:
+            axis_names = tuple(mesh.axis_names)
+        axis_names = tuple(axis_names)
+        for a in axis_names:
+            errors.check(
+                a in mesh.axis_names,
+                errors.ErrorClass.ERR_TOPOLOGY,
+                f"axis {a!r} not in mesh axes {mesh.axis_names}",
+            )
+        self.mesh = mesh
+        self.axis_names = axis_names
+        self.managed = managed
+
+    # -- lifetime ----------------------------------------------------------
+
+    @classmethod
+    def create(cls, shape: Sequence[int], axis_names: Sequence[str], devices=None):
+        """Managed constructor: builds (and owns) a fresh mesh."""
+
+        devices = devices if devices is not None else jax.devices()
+        n = math.prod(shape)
+        errors.check(
+            n <= len(devices),
+            errors.ErrorClass.ERR_DIMS,
+            f"mesh of {n} devices requested, {len(devices)} available",
+        )
+        mesh = jax.make_mesh(
+            tuple(shape),
+            tuple(axis_names),
+            devices=devices[:n],
+            axis_types=(jax.sharding.AxisType.Auto,) * len(tuple(shape)),
+        )
+        return cls(mesh, axis_names, managed=True)
+
+    def dup(self) -> "Communicator":
+        """``MPI_Comm_dup`` analogue (the only sanctioned copy)."""
+
+        return Communicator(self.mesh, self.axis_names, managed=False)
+
+    def __copy__(self):  # copy ctor is "deleted"
+        errors.fail(
+            errors.ErrorClass.ERR_COMM,
+            "communicators are not copyable; use .dup() (MPI_Comm_dup)",
+        )
+
+    __deepcopy__ = __copy__
+
+    # -- topology ----------------------------------------------------------
+
+    def size(self) -> int:
+        return int(math.prod(self.mesh.shape[a] for a in self.axis_names))
+
+    def axis_size(self, name: str) -> int:
+        return int(self.mesh.shape[name])
+
+    def rank(self):
+        """Trace-level rank (only meaningful inside :meth:`spmd` bodies)."""
+
+        try:
+            return _flat_axis_index(self.axis_names, self.mesh)
+        except NameError as e:  # pragma: no cover - jax error type may vary
+            errors.fail(
+                errors.ErrorClass.ERR_COMM,
+                f"rank() is only available inside spmd regions: {e}",
+            )
+
+    def split(self, *axis_names: str) -> "Communicator":
+        """``MPI_Comm_split`` along topology axes: the returned communicator
+        spans ``axis_names``; ranks differing in the *other* axes land in
+        different sub-communicators (the color)."""
+
+        return Communicator(self.mesh, axis_names, managed=False)
+
+    def group(self) -> tuple[str, ...]:
+        """The axis-name group (``MPI_Comm_group`` analogue)."""
+
+        return self.axis_names
+
+    # -- SPMD region launcher ----------------------------------------------
+
+    def spmd(
+        self,
+        fn: Callable | None = None,
+        *,
+        in_specs: Any = P(),
+        out_specs: Any = P(),
+        jit: bool = True,
+        donate_argnums: tuple[int, ...] = (),
+        static_argnums: tuple[int, ...] = (),
+    ):
+        """Enter SPMD: run ``fn`` per-device under ``shard_map``.
+
+        This is the region inside which ``rank()`` and all trace-level
+        collectives are live — the analogue of the MPI program itself.
+        Usable as a decorator.
+        """
+
+        if fn is None:
+            return lambda f: self.spmd(
+                f,
+                in_specs=in_specs,
+                out_specs=out_specs,
+                jit=jit,
+                donate_argnums=donate_argnums,
+                static_argnums=static_argnums,
+            )
+        mapped = jax.shard_map(
+            fn,
+            mesh=self.mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            check_vma=False,
+        )
+        if jit:
+            mapped = jax.jit(
+                mapped, donate_argnums=donate_argnums, static_argnums=static_argnums
+            )
+        return mapped
+
+    def run(self, fn: Callable, *args, in_specs: Any = P(), out_specs: Any = P()):
+        """One-shot :meth:`spmd` invocation."""
+
+        return self.spmd(fn, in_specs=in_specs, out_specs=out_specs)(*args)
+
+    # -- sharding helpers ---------------------------------------------------
+
+    def sharding(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+    def device_put(self, value, spec: P):
+        return jax.device_put(value, self.sharding(spec))
+
+    def __repr__(self):
+        kind = "managed" if self.managed else "unmanaged"
+        return f"Communicator(axes={self.axis_names}, size={self.size()}, {kind})"
+
+
+_WORLD: Communicator | None = None
+
+
+def world(refresh: bool = False) -> Communicator:
+    """The ``mpi::world_communicator`` analogue: one axis over all devices.
+
+    Managed singleton; ``refresh=True`` rebuilds it (e.g. after an elastic
+    resize changed the device set).
+    """
+
+    global _WORLD
+    if _WORLD is None or refresh:
+        n = len(jax.devices())
+        _WORLD = Communicator.create((n,), ("world",))
+    return _WORLD
+
+
+def local_ranks(comm: Communicator) -> np.ndarray:
+    """Host-side rank layout (for tests and IO): the rank each device holds."""
+
+    sizes = [comm.mesh.shape[a] for a in comm.axis_names]
+    return np.arange(math.prod(sizes)).reshape(sizes)

@@ -1,0 +1,55 @@
+"""Wire compression for wide reductions (int8 with per-block scales).
+
+Used by :func:`repro.core.overlap.hierarchical_allreduce` for the cross-pod
+(DCN) stage of gradient reductions, with error feedback maintained by the
+optimizer (:mod:`repro.optim`).  A Pallas TPU kernel with identical semantics
+lives in :mod:`repro.kernels.quant`; this module is the pure-jnp reference
+and the CPU execution path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256  # elements per scale block
+
+
+def _pad_to_block(x: jax.Array, block: int) -> tuple[jax.Array, int]:
+    n = x.shape[0]
+    pad = (-n) % block
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), x.dtype)])
+    return x, pad
+
+
+def quantize_int8(x: jax.Array, block: int = BLOCK) -> tuple[jax.Array, jax.Array, int]:
+    """Flat tensor → (int8 payload, fp32 per-block scales, pad).
+
+    Symmetric per-block quantisation: ``scale = max|x| / 127``.
+    """
+
+    flat = x.reshape(-1).astype(jnp.float32)
+    flat, pad = _pad_to_block(flat, block)
+    blocks = flat.reshape(-1, block)
+    absmax = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale[:, 0], pad
+
+
+def dequantize_int8(
+    q: jax.Array, scale: jax.Array, pad: int, shape, dtype, block: int = BLOCK
+) -> jax.Array:
+    blocks = q.reshape(-1, block).astype(jnp.float32) * scale[:, None]
+    flat = blocks.reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape).astype(dtype)
+
+
+def compression_error(x: jax.Array, block: int = BLOCK) -> jax.Array:
+    """Residual ``x - dequant(quant(x))`` for error feedback."""
+
+    q, s, pad = quantize_int8(x, block)
+    return x - dequantize_int8(q, s, pad, x.shape, x.dtype, block)

@@ -1,0 +1,360 @@
+"""Automatic datatype generation via aggregate reflection (paper §II, C2).
+
+The paper uses Boost.PFR to introspect aggregate classes at compile time and
+derive ``MPI_Datatype``\\ s automatically, so user-defined types can be
+communicated without manual ``MPI_Type_create_struct`` calls.  The JAX
+analogue introspects Python aggregates (dataclasses, named tuples, dicts,
+sequences) with :mod:`dataclasses` reflection, registers them as pytrees on
+first use, and derives a :class:`DataType`: the treedef plus a *packed
+layout* — leaves grouped by dtype and raveled into one contiguous buffer per
+dtype group, so a single collective moves the whole object (the actual point
+of derived datatypes: one message, not N).
+
+The ``mpi::compliant`` concept maps onto :func:`is_compliant`:
+
+* arithmetic types (Python ``bool/int/float/complex``, NumPy scalars, any
+  real/complex/integer ``jnp`` dtype) are compliant and map to their XLA
+  equivalents explicitly;
+* enumerations are compliant (communicated as their underlying integers);
+* ``std::complex`` ↔ ``complex64/128``;
+* C-style arrays / ``std::array`` ↔ fixed-shape ``jax.Array`` / ``np.ndarray``
+  of compliant dtype;
+* ``std::pair`` / ``std::tuple`` ↔ tuples, and contiguous sequential
+  containers ↔ lists;
+* aggregates of compliant members (dataclasses, ``NamedTuple``, ``dict`` with
+  static keys) are compliant themselves, recursively.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from functools import partial
+from typing import Any, Hashable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import errors
+
+# ---------------------------------------------------------------------------
+# Compliance (the `mpi::compliant` concept)
+# ---------------------------------------------------------------------------
+
+#: Explicit arithmetic-type → dtype mapping (paper: "arithmetic types,
+#: enumerations and specializations of std::complex ... are mapped to their
+#: MPI equivalents explicitly").
+_SCALAR_DTYPES: dict[type, Any] = {
+    bool: jnp.bool_,
+    int: jnp.int32,
+    float: jnp.float32,
+    complex: jnp.complex64,
+}
+
+_COMPLIANT_KINDS = frozenset("biufc")  # bool, int, uint, float, complex
+
+
+def _dtype_ok(dtype) -> bool:
+    if np.dtype(dtype).kind in _COMPLIANT_KINDS:
+        return True
+    try:  # extended ml_dtypes floats (bfloat16, fp8, ...) report kind 'V'
+        return bool(jnp.issubdtype(dtype, jnp.floating))
+    except Exception:
+        return False
+
+
+def _leaf_dtype(value: Any) -> Any | None:
+    """dtype if ``value`` is a compliant *leaf*, else ``None``."""
+
+    if isinstance(value, enum.Enum):
+        return jnp.int32
+    t = builtin_type(value)
+    if t in _SCALAR_DTYPES:
+        return _SCALAR_DTYPES[t]
+    if isinstance(value, (np.ndarray, np.generic, jax.Array, jax.ShapeDtypeStruct)):
+        return value.dtype if _dtype_ok(value.dtype) else None
+    return None
+
+
+def builtin_type(value: Any) -> type:
+    # bool is a subclass of int: test in declaration order.
+    for t in (bool, int, float, complex):
+        if builtins_isinstance(value, t):
+            return t
+    return type(value)
+
+
+def builtins_isinstance(value: Any, t: type) -> bool:
+    return isinstance(value, t) and type(value) in (bool, int, float, complex)
+
+
+def is_compliant(value: Any) -> bool:
+    """The ``mpi::compliant`` concept, evaluated on an instance."""
+
+    if _leaf_dtype(value) is not None:
+        return True
+    if isinstance(value, (tuple, list)):
+        return all(is_compliant(v) for v in value)
+    if isinstance(value, dict):
+        return all(isinstance(k, Hashable) for k in value) and all(
+            is_compliant(v) for v in value.values()
+        )
+    if dataclasses.is_dataclass(value) and not isinstance(value, type):
+        register_aggregate(type(value))
+        return all(
+            is_compliant(getattr(value, f.name)) for f in dataclasses.fields(value)
+        )
+    return False
+
+
+# ---------------------------------------------------------------------------
+# Aggregate reflection → pytree registration (the Boost.PFR analogue)
+# ---------------------------------------------------------------------------
+
+_REGISTERED: set[type] = set()
+
+
+def register_aggregate(cls: type) -> type:
+    """Reflect a dataclass and register it as a pytree node (idempotent).
+
+    This is the PFR step: field names/order come from reflection, not from
+    user-written (un)flatten boilerplate.  Usable as a decorator::
+
+        @mpx.register_aggregate
+        @dataclasses.dataclass
+        class Particle: ...
+    """
+
+    if cls in _REGISTERED:
+        return cls
+    errors.check(
+        dataclasses.is_dataclass(cls),
+        errors.ErrorClass.ERR_TYPE,
+        f"{cls!r} is not an aggregate (dataclass) and cannot be reflected",
+    )
+    names = [f.name for f in dataclasses.fields(cls)]
+
+    def flatten(obj):
+        return tuple(getattr(obj, n) for n in names), None
+
+    def flatten_with_keys(obj):
+        return (
+            tuple((jax.tree_util.GetAttrKey(n), getattr(obj, n)) for n in names),
+            None,
+        )
+
+    def unflatten(_, children):
+        obj = object.__new__(cls)
+        for n, c in zip(names, children):
+            object.__setattr__(obj, n, c)
+        return obj
+
+    try:
+        jax.tree_util.register_pytree_with_keys(cls, flatten_with_keys, unflatten, flatten)
+    except ValueError:
+        pass  # registered elsewhere (e.g. by the user) — fine
+    _REGISTERED.add(cls)
+    return cls
+
+
+def _ensure_registered(obj: Any) -> None:
+    """Walk an aggregate, registering every unregistered dataclass type."""
+
+    if dataclasses.is_dataclass(obj) and not isinstance(obj, type):
+        register_aggregate(type(obj))
+        for f in dataclasses.fields(obj):
+            _ensure_registered(getattr(obj, f.name))
+    elif isinstance(obj, (tuple, list)):
+        for v in obj:
+            _ensure_registered(v)
+    elif isinstance(obj, dict):
+        for v in obj.values():
+            _ensure_registered(v)
+
+
+# ---------------------------------------------------------------------------
+# DataType: treedef + packed layout
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _LeafLayout:
+    shape: tuple[int, ...]
+    dtype: Any
+    group: int       # index of the dtype group this leaf packs into
+    offset: int      # element offset within the group buffer
+    size: int        # number of elements
+
+
+@dataclasses.dataclass(frozen=True)
+class DataType:
+    """Derived datatype: how an aggregate maps onto contiguous buffers.
+
+    ``pack`` produces one 1-D buffer per distinct leaf dtype (a *dtype
+    group*); ``unpack`` restores the original aggregate, with Python scalars
+    and enums coming back as 0-d arrays / ints (documented deviation: XLA
+    buffers cannot hold Python objects).
+    """
+
+    treedef: Any
+    leaves: tuple[_LeafLayout, ...]
+    group_dtypes: tuple[Any, ...]
+    group_sizes: tuple[int, ...]
+
+    @property
+    def extent(self) -> int:
+        """Total packed size in bytes (``MPI_Type_get_extent`` analogue)."""
+
+        return int(
+            sum(s * np.dtype(d).itemsize for s, d in zip(self.group_sizes, self.group_dtypes))
+        )
+
+    def pack(self, obj: Any) -> list[jax.Array]:
+        """Aggregate → list of contiguous per-dtype buffers (jit-safe)."""
+
+        leaves = jax.tree_util.tree_leaves(obj)
+        errors.check(
+            len(leaves) == len(self.leaves),
+            errors.ErrorClass.ERR_COUNT,
+            f"object has {len(leaves)} leaves, datatype describes {len(self.leaves)}",
+        )
+        parts: list[list[jax.Array]] = [[] for _ in self.group_dtypes]
+        for value, layout in zip(leaves, self.leaves):
+            arr = _as_array(value, layout.dtype)
+            errors.check(
+                tuple(arr.shape) == layout.shape,
+                errors.ErrorClass.ERR_TRUNCATE,
+                f"leaf shape {arr.shape} does not match datatype {layout.shape}",
+            )
+            parts[layout.group].append(arr.reshape(-1))
+        return [
+            jnp.concatenate(p) if len(p) > 1 else p[0]
+            for p in parts
+        ]
+
+    def unpack(self, buffers: list[jax.Array]) -> Any:
+        """Per-dtype buffers → aggregate (jit-safe)."""
+
+        errors.check(
+            len(buffers) == len(self.group_dtypes),
+            errors.ErrorClass.ERR_COUNT,
+            f"expected {len(self.group_dtypes)} buffers, got {len(buffers)}",
+        )
+        leaves = []
+        for layout in self.leaves:
+            buf = buffers[layout.group]
+            piece = jax.lax.dynamic_slice_in_dim(buf, layout.offset, layout.size)
+            leaves.append(piece.reshape(layout.shape).astype(layout.dtype))
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    def shape_dtype_structs(self) -> list[jax.ShapeDtypeStruct]:
+        """Stand-ins for the packed buffers (for AOT lowering)."""
+
+        return [
+            jax.ShapeDtypeStruct((s,), d)
+            for s, d in zip(self.group_sizes, self.group_dtypes)
+        ]
+
+
+def _as_array(value: Any, dtype: Any) -> jax.Array:
+    if isinstance(value, enum.Enum):
+        value = value.value
+    return jnp.asarray(value, dtype=dtype)
+
+
+_DATATYPE_CACHE: dict[Any, DataType] = {}
+
+
+def datatype_of(obj: Any) -> DataType:
+    """Derive (and cache) the :class:`DataType` of an aggregate instance.
+
+    The cache key is the structural signature (treedef + leaf shapes/dtypes),
+    so derivation cost is paid once per *type*, mirroring the paper's
+    compile-time generation.
+    """
+
+    _ensure_registered(obj)
+    leaves, treedef = jax.tree_util.tree_flatten(obj)
+    sig_parts = []
+    layouts_raw = []
+    for leaf in leaves:
+        dt = _leaf_dtype(leaf)
+        if dt is None:
+            errors.fail(
+                errors.ErrorClass.ERR_TYPE,
+                f"leaf of type {type(leaf).__name__} is not mpi-compliant",
+            )
+        shape = tuple(np.shape(leaf)) if not isinstance(leaf, enum.Enum) else ()
+        layouts_raw.append((shape, np.dtype(dt)))
+        sig_parts.append((shape, np.dtype(dt).str))
+    key = (treedef, tuple(sig_parts))
+    cached = _DATATYPE_CACHE.get(key)
+    if cached is not None:
+        return cached
+
+    group_index: dict[Any, int] = {}
+    group_sizes: list[int] = []
+    layouts: list[_LeafLayout] = []
+    for shape, dtype in layouts_raw:
+        g = group_index.setdefault(dtype, len(group_index))
+        if g == len(group_sizes):
+            group_sizes.append(0)
+        size = int(np.prod(shape)) if shape else 1
+        layouts.append(_LeafLayout(shape, dtype, g, group_sizes[g], size))
+        group_sizes[g] += size
+
+    dt = DataType(
+        treedef=treedef,
+        leaves=tuple(layouts),
+        group_dtypes=tuple(group_index.keys()),
+        group_sizes=tuple(group_sizes),
+    )
+    _DATATYPE_CACHE[key] = dt
+    return dt
+
+
+def pack(obj: Any) -> tuple[list[jax.Array], DataType]:
+    """Convenience: derive the datatype and pack in one call."""
+
+    dt = datatype_of(obj)
+    return dt.pack(obj), dt
+
+
+def unpack(buffers: list[jax.Array], dt: DataType) -> Any:
+    return dt.unpack(buffers)
+
+
+# ---------------------------------------------------------------------------
+# Communication adapter: apply a buffer-level collective to any aggregate
+# ---------------------------------------------------------------------------
+
+
+def apply_packed(fn, obj: Any):
+    """Run ``fn`` (a collective over a single 1-D buffer) on every packed
+    buffer of ``obj`` and restore the aggregate.  This is what lets every
+    collective in :mod:`repro.core.collectives` accept user-defined types
+    (paper Listing 1)."""
+
+    dt = datatype_of(obj)
+    buffers = dt.pack(obj)
+    out = [fn(b) for b in buffers]
+    return dt.unpack(out)
+
+
+def apply_leafwise(fn, obj: Any):
+    """Leaf-wise variant (no packing) — used when the collective must see the
+    leaf shapes (e.g. scatter along a leaf axis)."""
+
+    _ensure_registered(obj)
+    return jax.tree_util.tree_map(partial(_call_on_leaf, fn), obj)
+
+
+def _call_on_leaf(fn, leaf):
+    dt = _leaf_dtype(leaf)
+    if dt is None:
+        errors.fail(
+            errors.ErrorClass.ERR_TYPE,
+            f"leaf of type {type(leaf).__name__} is not mpi-compliant",
+        )
+    return fn(_as_array(leaf, dt))

@@ -1,0 +1,183 @@
+"""Requests as futures with continuations (paper §II, C3 — Listing 2).
+
+Two layers, mirroring how MPI requests exist both in host code and inside the
+parallel program:
+
+* :class:`Future` — **host level**.  JAX dispatch is asynchronous: a jitted
+  SPMD program returns immediately with unmaterialised arrays, exactly like
+  an ``MPI_I*`` call returns a request.  ``get()`` = ``MPI_Wait`` =
+  ``block_until_ready``; ``test()`` = ``MPI_Test``; :func:`when_all` /
+  :func:`when_any` = ``MPI_Waitall`` / ``MPI_Waitany``; ``then()`` chains a
+  continuation (the continuation may dispatch more work — the chain builds a
+  dataflow task graph exactly as in Listing 2).
+
+* :class:`TraceFuture` — **trace level** (inside ``comm.spmd`` regions).  An
+  ``immediate_*`` collective returns a lazily-forced future; ``then()``
+  chains continuations *into the traced program*, and decomposed collectives
+  (:mod:`repro.core.overlap`) override forcing so a continuation can be fused
+  chunk-wise with the communication schedule — the TPU-native meaning of
+  "overlap nonblocking communication with computation".
+
+* :class:`PersistentRequest` — persistent operations (``MPI_Send_init`` /
+  ``MPI_Start``): the argument/plan setup is amortised by AOT lowering and
+  compilation; ``start()`` re-fires the compiled executable.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Sequence
+
+import jax
+
+from repro.core import errors
+
+
+def _is_ready(tree: Any) -> bool:
+    for leaf in jax.tree_util.tree_leaves(tree):
+        probe = getattr(leaf, "is_ready", None)
+        if callable(probe) and not probe():
+            return False
+    return True
+
+
+class Future:
+    """Host-level future over dispatched (asynchronous) results."""
+
+    def __init__(self, value: Any):
+        self._value = value
+        self._valid = True
+
+    def valid(self) -> bool:
+        return self._valid
+
+    def get(self) -> Any:
+        """``MPI_Wait`` + value retrieval (consumes the future)."""
+
+        errors.check(self._valid, errors.ErrorClass.ERR_REQUEST, "future already consumed")
+        jax.block_until_ready(self._value)
+        return self._value
+
+    def wait(self) -> "Future":
+        jax.block_until_ready(self._value)
+        return self
+
+    def test(self) -> bool:
+        """Non-blocking completion probe (``MPI_Test``)."""
+
+        return _is_ready(self._value)
+
+    def then(self, fn: Callable[["Future"], Any]) -> "Future":
+        """Chain a continuation.  ``fn`` receives *this* future (paper
+        Listing 2) and returns a value or another future; dispatch remains
+        asynchronous throughout."""
+
+        result = fn(self)
+        if isinstance(result, Future):
+            return result
+        return Future(result)
+
+
+def when_all(futures: Sequence[Future]) -> Future:
+    """``MPI_Waitall`` join: a future over the tuple of results."""
+
+    return Future(tuple(f._value for f in futures))
+
+
+def when_any(futures: Sequence[Future], poll_interval_s: float = 1e-4) -> tuple[Future, int]:
+    """``MPI_Waitany`` join: first completed future and its index."""
+
+    errors.check(len(futures) > 0, errors.ErrorClass.ERR_REQUEST, "when_any of no futures")
+    while True:
+        for i, f in enumerate(futures):
+            if f.test():
+                return f, i
+        time.sleep(poll_interval_s)
+
+
+class TraceFuture:
+    """Trace-level future: a lazily forced value inside an SPMD region."""
+
+    def __init__(self, thunk: Callable[[], Any] | None = None, value: Any = None):
+        self._thunk = thunk
+        self._value = value
+        self._forced = thunk is None
+
+    @classmethod
+    def ready(cls, value: Any) -> "TraceFuture":
+        return cls(thunk=None, value=value)
+
+    def valid(self) -> bool:
+        return True
+
+    def get(self) -> Any:
+        """Force the communication into the trace and return its value."""
+
+        if not self._forced:
+            self._value = self._thunk()
+            self._thunk = None
+            self._forced = True
+        return self._value
+
+    def test(self) -> bool:
+        return self._forced
+
+    def then(self, fn: Callable[["TraceFuture"], Any]) -> "TraceFuture":
+        """Sequential-asynchronous chaining (Listing 2).  Lazy: nothing is
+        traced until the chain end is forced, letting decomposed collectives
+        fuse continuations."""
+
+        def thunk():
+            result = fn(self)
+            if isinstance(result, TraceFuture):
+                return result.get()
+            return result
+
+        return TraceFuture(thunk)
+
+
+def trace_when_all(futures: Sequence[TraceFuture]) -> TraceFuture:
+    """``MPI_Waitall`` at trace level: forces all, yields the tuple."""
+
+    return TraceFuture(lambda: tuple(f.get() for f in futures))
+
+
+def trace_when_any(futures: Sequence[TraceFuture]) -> tuple[TraceFuture, int]:
+    """``MPI_Waitany`` at trace level.  XLA programs are statically
+    scheduled, so "whichever completes first" is not observable; the
+    documented SPMD semantics is deterministic selection of the first
+    pending future (their side effects all occur at their forcing points)."""
+
+    errors.check(len(futures) > 0, errors.ErrorClass.ERR_REQUEST, "when_any of no futures")
+    for i, f in enumerate(futures):
+        if not f.test():
+            return f, i
+    return futures[0], 0
+
+
+class PersistentRequest:
+    """Persistent operation: AOT-compiled executable + ``start()``.
+
+    ``MPI_Send_init`` fixes the argument list so repeated ``MPI_Start`` calls
+    skip setup; the XLA analogue fixes shapes/shardings so repeated calls
+    skip tracing, lowering and compilation.
+    """
+
+    def __init__(self, jitted: Any, example_args: tuple, example_kwargs: dict | None = None):
+        self._lowered = jitted.lower(*example_args, **(example_kwargs or {}))
+        self._compiled = self._lowered.compile()
+
+    @property
+    def compiled(self):
+        return self._compiled
+
+    def start(self, *args: Any) -> Future:
+        """Fire the persistent operation; returns a host future."""
+
+        return Future(self._compiled(*args))
+
+    def cost_analysis(self):
+        return self._compiled.cost_analysis()
+
+    def as_text(self) -> str:
+        return self._compiled.as_text()

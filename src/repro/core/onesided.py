@@ -1,0 +1,103 @@
+"""One-sided communication (paper §II, C1 — MPI 4.0 chapter 12, RMA).
+
+A window (``MPI_Win``) exposes each rank's local buffer for remote ``put`` /
+``get`` / ``accumulate``.  The SPMD adaptation: a :class:`Window` is the
+per-rank array inside an SPMD region; RMA operations with *trace-time static*
+target patterns lower to ``collective-permute`` (put/get) and masked ``psum``
+(accumulate).  Epochs (``fence``) map to program-order barriers.
+
+Honesty note (recorded in DESIGN.md): true *passive-target* progress —
+one rank mutating another's memory while the target computes — has no
+analogue in a statically scheduled SPMD program.  What transfers is the
+*active-target* (fence-epoch) subset, which is also the portable subset MPI
+codes rely on for correctness.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import collectives, errors
+from repro.core.communicator import Communicator
+from repro.core.descriptors import ReduceOp, WindowSpec
+
+
+class Window:
+    """An RMA window over this rank's local array (inside ``spmd``)."""
+
+    def __init__(self, comm: Communicator, local: jax.Array, spec: WindowSpec | None = None):
+        self.comm = comm
+        self.spec = spec or WindowSpec()
+        self._buffer = jnp.asarray(local)
+        self._epoch_open = False
+
+    @property
+    def buffer(self) -> jax.Array:
+        return self._buffer
+
+    def fence(self) -> "Window":
+        """Open/close an access epoch (``MPI_Win_fence``)."""
+
+        self._buffer = lax.optimization_barrier(self._buffer)
+        self._epoch_open = not self._epoch_open
+        return self
+
+    def _check_epoch(self):
+        errors.check(
+            self._epoch_open,
+            errors.ErrorClass.ERR_WIN,
+            "RMA access outside a fence epoch; call win.fence() first",
+        )
+
+    def put(self, value: jax.Array, perm: Sequence[tuple[int, int]]) -> "Window":
+        """``MPI_Put``: origin ``s`` overwrites target ``d``'s window, for the
+        static pattern ``perm``.  Ranks not targeted keep their buffer."""
+
+        self._check_epoch()
+        n = self.comm.size()
+        moved = collectives.send_recv(self.comm, jnp.asarray(value, self._buffer.dtype), perm)
+        targets = {d for _, d in perm}
+        rank = self.comm.rank()
+        is_target = jnp.zeros((n,), jnp.bool_).at[jnp.array(sorted(targets), jnp.int32)].set(
+            True
+        )[rank] if targets else jnp.zeros((), jnp.bool_)
+        self._buffer = jnp.where(is_target, moved, self._buffer)
+        return self
+
+    def get(self, perm: Sequence[tuple[int, int]]) -> jax.Array:
+        """``MPI_Get``: origin ``d`` reads target ``s``'s window for each
+        ``(s, d)`` — i.e. the *reverse* data flow of ``put``."""
+
+        self._check_epoch()
+        return collectives.send_recv(self.comm, self._buffer, perm)
+
+    def accumulate(
+        self,
+        value: jax.Array,
+        target: int,
+        op: ReduceOp = ReduceOp.SUM,
+    ) -> "Window":
+        """``MPI_Accumulate``: every origin's contribution reduces into the
+        target's window (here: all ranks contribute; pass zeros to opt out —
+        the SPMD convention for a static program)."""
+
+        self._check_epoch()
+        errors.check(
+            op is ReduceOp.SUM,
+            errors.ErrorClass.ERR_OP,
+            "accumulate supports SUM (psum lowering)",
+        )
+        total = lax.psum(jnp.asarray(value, self._buffer.dtype), self.comm.axis_names)
+        rank = self.comm.rank()
+        self._buffer = jnp.where(rank == target, self._buffer + total, self._buffer)
+        return self
+
+
+def create_window(comm: Communicator, local: jax.Array, spec: WindowSpec | None = None):
+    """``MPI_Win_create`` analogue."""
+
+    return Window(comm, local, spec)

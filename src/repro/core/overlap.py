@@ -1,0 +1,393 @@
+"""Decomposed, overlappable collective schedules (paper C3, performance side).
+
+MPI programs overlap communication and computation by issuing ``MPI_I*``
+operations and continuing to compute until ``MPI_Wait``.  XLA has no progress
+thread; the TPU-native equivalent is to *decompose* a collective into a
+``collective-permute`` ring whose steps are interleaved with compute chunks in
+the dependence graph — then the scheduler overlaps ICI DMA of step ``s+1``
+with MXU compute of step ``s``.  These schedules are what a
+:class:`~repro.core.futures.TraceFuture` continuation fuses into.
+
+Contents:
+
+* :func:`ring_all_gather` / :func:`ring_reduce_scatter` — explicit ring
+  algorithms (uni- or bidirectional), drop-in for the XLA collectives.
+* :func:`all_gather_matmul` — "collective matmul": gathers the *contraction*
+  dimension of a sharded weight while accumulating partial products
+  (FSDP/TP forward overlap).
+* :func:`matmul_reduce_scatter` — the reverse pattern (TP output reduction).
+* :func:`hierarchical_allreduce` — reduce-scatter inside a fast axis,
+  (optionally int8-compressed) reduction across a slow axis (DCN/pod),
+  all-gather back — the cross-pod gradient reduction.
+* :func:`merge_partial_attention` — flash-decoding combine for
+  sequence-sharded KV caches.
+* :func:`ring_attention` — sequence-parallel attention for training: KV
+  blocks circulate the ring; online-softmax state makes every step O(local).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import compress, errors
+from repro.core.communicator import Communicator
+from repro.core.descriptors import Compression
+from repro.core.futures import TraceFuture
+
+
+def _ring_perm(n: int, offset: int = 1) -> list[tuple[int, int]]:
+    return [(i, (i + offset) % n) for i in range(n)]
+
+
+def _axis(comm: Communicator) -> tuple[str, int]:
+    errors.check(
+        len(comm.axis_names) == 1,
+        errors.ErrorClass.ERR_TOPOLOGY,
+        "ring schedules need a single-axis communicator (comm.split(axis))",
+    )
+    name = comm.axis_names[0]
+    return name, comm.axis_size(name)
+
+
+# ---------------------------------------------------------------------------
+# ring all-gather
+# ---------------------------------------------------------------------------
+
+
+def ring_all_gather(comm: Communicator, x: jax.Array, *, axis: int = 0) -> jax.Array:
+    """All-gather decomposed into ``n-1`` permute steps (tiled concat)."""
+
+    name, n = _axis(comm)
+    if n == 1:
+        return x
+    idx = lax.axis_index(name)
+    block = x.shape[axis]
+    out_shape = x.shape[:axis] + (block * n,) + x.shape[axis + 1 :]
+    out = jnp.zeros(out_shape, x.dtype)
+    chunk = x
+    out = lax.dynamic_update_slice_in_dim(out, chunk, idx * block, axis=axis)
+    for step in range(1, n):
+        chunk = lax.ppermute(chunk, name, _ring_perm(n))
+        src = (idx - step) % n
+        out = lax.dynamic_update_slice_in_dim(out, chunk, src * block, axis=axis)
+    return out
+
+
+def ring_all_gather_bidirectional(
+    comm: Communicator, x: jax.Array, *, axis: int = 0
+) -> jax.Array:
+    """Bidirectional ring: halves the steps by sending both ways, doubling
+    effective link bandwidth on a bidirectional ICI ring."""
+
+    name, n = _axis(comm)
+    if n == 1:
+        return x
+    idx = lax.axis_index(name)
+    block = x.shape[axis]
+    out_shape = x.shape[:axis] + (block * n,) + x.shape[axis + 1 :]
+    out = jnp.zeros(out_shape, x.dtype)
+    out = lax.dynamic_update_slice_in_dim(out, x, idx * block, axis=axis)
+    fwd = bwd = x
+    steps_fwd = (n - 1 + 1) // 2
+    steps_bwd = (n - 1) // 2
+    for step in range(1, steps_fwd + 1):
+        fwd = lax.ppermute(fwd, name, _ring_perm(n, +1))
+        out = lax.dynamic_update_slice_in_dim(out, fwd, ((idx - step) % n) * block, axis=axis)
+    for step in range(1, steps_bwd + 1):
+        bwd = lax.ppermute(bwd, name, _ring_perm(n, -1))
+        out = lax.dynamic_update_slice_in_dim(out, bwd, ((idx + step) % n) * block, axis=axis)
+    return out
+
+
+def ring_reduce_scatter(comm: Communicator, x: jax.Array, *, axis: int = 0) -> jax.Array:
+    """Reduce-scatter decomposed into a ring of permute+add steps."""
+
+    name, n = _axis(comm)
+    if n == 1:
+        return x
+    idx = lax.axis_index(name)
+    errors.check(
+        x.shape[axis] % n == 0,
+        errors.ErrorClass.ERR_COUNT,
+        f"ring_reduce_scatter axis {axis} of {x.shape} not divisible by {n}",
+    )
+    block = x.shape[axis] // n
+
+    def take(b):
+        return lax.dynamic_slice_in_dim(x, b * block, block, axis=axis)
+
+    # token for block b starts at rank b+1 and accumulates around the ring.
+    acc = take((idx - 1) % n)
+    for step in range(n - 1):
+        acc = lax.ppermute(acc, name, _ring_perm(n))
+        acc = acc + take((idx - 2 - step) % n)
+    return acc
+
+
+# ---------------------------------------------------------------------------
+# fused compute/communication schedules
+# ---------------------------------------------------------------------------
+
+
+def all_gather_matmul(
+    comm: Communicator,
+    x: jax.Array,
+    w_shard: jax.Array,
+    *,
+    precision=None,
+    accumulate_dtype=jnp.float32,
+) -> jax.Array:
+    """``x @ all_gather(w_shard)`` without materialising the gather.
+
+    ``w_shard``: this rank's ``(k/n, f)`` block of a ``(k, f)`` weight whose
+    contraction dim is sharded over the communicator.  Each ring step matmuls
+    the matching ``k``-slice of ``x`` against the block in flight, so DMA and
+    MXU time overlap.  FLOPs are identical to gather-then-matmul; peak memory
+    drops by the gathered weight.
+    """
+
+    name, n = _axis(comm)
+    idx = lax.axis_index(name)
+    kb = w_shard.shape[0]
+    errors.check(
+        x.shape[-1] == kb * n,
+        errors.ErrorClass.ERR_COUNT,
+        f"contraction mismatch: x has k={x.shape[-1]}, shards give {kb * n}",
+    )
+
+    def x_block(b):
+        return lax.dynamic_slice_in_dim(x, b * kb, kb, axis=x.ndim - 1)
+
+    def mm(xa, wb):
+        return jnp.matmul(xa, wb, precision=precision).astype(accumulate_dtype)
+
+    w_cur = w_shard
+    acc = mm(x_block(idx), w_cur)
+    for step in range(1, n):
+        w_cur = lax.ppermute(w_cur, name, _ring_perm(n))
+        acc = acc + mm(x_block((idx - step) % n), w_cur)
+    return acc
+
+
+def matmul_reduce_scatter(
+    comm: Communicator,
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    precision=None,
+    accumulate_dtype=jnp.float32,
+) -> jax.Array:
+    """``reduce_scatter(x @ w, axis=-1)`` with the matmul chunked into the
+    ring so each partial block is computed just-in-time for its hop.
+
+    ``x``: ``(..., k_local)`` — contraction dim sharded over the comm (each
+    rank holds a partial sum).  ``w``: ``(k_local, f)``.  Returns this rank's
+    ``(..., f/n)`` block of the fully-reduced product.
+    """
+
+    name, n = _axis(comm)
+    idx = lax.axis_index(name)
+    f = w.shape[-1]
+    errors.check(
+        f % n == 0,
+        errors.ErrorClass.ERR_COUNT,
+        f"output dim {f} not divisible by communicator size {n}",
+    )
+    fb = f // n
+
+    def partial_block(b):
+        wb = lax.dynamic_slice_in_dim(w, b * fb, fb, axis=1)
+        return jnp.matmul(x, wb, precision=precision).astype(accumulate_dtype)
+
+    acc = partial_block((idx - 1) % n)
+    for step in range(n - 1):
+        acc = lax.ppermute(acc, name, _ring_perm(n))
+        acc = acc + partial_block((idx - 2 - step) % n)
+    return acc
+
+
+def hierarchical_allreduce(
+    x: jax.Array,
+    inner: Communicator,
+    outer: Communicator,
+    *,
+    compression: Compression = Compression.NONE,
+) -> jax.Array:
+    """All-reduce factored as RS(inner) → AR(outer) → AG(inner).
+
+    ``inner`` is the fast fabric (intra-pod ICI), ``outer`` the slow one
+    (inter-pod DCN).  The outer stage moves ``1/inner_size`` of the payload;
+    with :data:`Compression.INT8` it moves ~1/4 of *that* (int8 + scales) —
+    callers maintain error feedback (see ``repro.optim``).
+    """
+
+    ni = inner.size()
+    shape, dtype = x.shape, x.dtype
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % (ni * compress.BLOCK)
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), dtype)])
+    rs = lax.psum_scatter(flat, inner.axis_names, scatter_dimension=0, tiled=True)
+    if compression is Compression.INT8 and outer.size() > 1:
+        q, scale, qpad = compress.quantize_int8(rs)
+        qg = lax.all_gather(q, outer.axis_names, axis=0, tiled=False)
+        sg = lax.all_gather(scale, outer.axis_names, axis=0, tiled=False)
+        no = qg.shape[0]
+        acc = jnp.zeros(rs.shape, jnp.float32)
+        for r in range(no):
+            acc = acc + compress.dequantize_int8(
+                qg[r], sg[r], qpad, rs.shape, jnp.float32
+            )
+        red = acc.astype(dtype)
+    else:
+        red = lax.psum(rs, outer.axis_names)
+    full = lax.all_gather(red, inner.axis_names, axis=0, tiled=True)
+    if pad:
+        full = full[:-pad]
+    return full.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# attention combiners (sequence-sharded KV)
+# ---------------------------------------------------------------------------
+
+
+def merge_partial_attention(
+    o: jax.Array, m: jax.Array, l: jax.Array, comm: Communicator
+) -> jax.Array:
+    """Flash-decoding combine across a sequence-sharded KV cache.
+
+    Each rank computed attention over its KV shard, yielding normalised
+    output ``o`` (..., q, h, d), running max ``m`` (..., h, q) and
+    normaliser ``l`` (..., h, q) — the flash-attention state convention.
+    The exact global softmax is recovered with one ``pmax`` + two ``psum``\\ s
+    of O(batch·heads) payload — versus all-gathering the full KV cache.
+    """
+
+    axes = comm.axis_names
+    gm = lax.pmax(m, axes)
+    l_corr = l * jnp.exp(m - gm)                      # (..., h, q)
+    w = jnp.swapaxes(l_corr, -1, -2)[..., None]       # (..., q, h, 1)
+    num = lax.psum(o * w, axes)
+    den = lax.psum(w, axes)
+    return num / jnp.maximum(den, 1e-30)
+
+
+def _online_block(q, k, v, m, l, acc, *, bias=None, scale):
+    """One online-softmax accumulation step (fp32 state)."""
+
+    s = jnp.einsum("...qhd,...khd->...hqk", q, k).astype(jnp.float32) * scale
+    if bias is not None:
+        s = s + bias
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + jnp.sum(p, axis=-1)
+    pv = jnp.einsum("...hqk,...khd->...qhd", p.astype(v.dtype), v).astype(jnp.float32)
+    acc_new = acc * corr.transpose(*range(corr.ndim - 2), -1, -2)[..., None] + pv
+    return m_new, l_new, acc_new
+
+
+def ring_attention(
+    comm: Communicator,
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+) -> jax.Array:
+    """Sequence-parallel attention: KV blocks circulate a ring while each
+    rank holds its Q shard; online softmax keeps state O(local).
+
+    Shapes: ``q``(b, sq, h, d), ``k``/``v``(b, sk, hk, d) — the *local*
+    shards; the global sequence is ``n × s``.  GQA is handled by repeating
+    KV heads.  Returns the local output shard (b, sq, h, d).
+    """
+
+    name, n = _axis(comm)
+    idx = lax.axis_index(name)
+    b, sq, h, d = q.shape
+    sk, hk = k.shape[1], k.shape[2]
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    if hk != h:
+        rep = h // hk
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+
+    m = jnp.full((b, h, sq), -jnp.inf, jnp.float32)
+    l = jnp.zeros((b, h, sq), jnp.float32)
+    acc = jnp.zeros((b, sq, h, d), jnp.float32)
+
+    q_pos = idx * sq + jnp.arange(sq)
+    k_cur, v_cur = k, v
+    for step in range(n):
+        src = (idx - step) % n
+        k_pos = src * sk + jnp.arange(sk)
+        bias = None
+        if causal:
+            mask = q_pos[:, None] >= k_pos[None, :]
+            bias = jnp.where(mask, 0.0, -jnp.inf)[None, None]  # (1,1,sq,sk)
+        m, l, acc = _online_block(q, k_cur, v_cur, m, l, acc, bias=bias, scale=scale)
+        if step != n - 1:
+            k_cur = lax.ppermute(k_cur, name, _ring_perm(n))
+            v_cur = lax.ppermute(v_cur, name, _ring_perm(n))
+    norm = jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]  # (b,sq,h,1)
+    return (acc / norm).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# immediate (future-returning) forms
+# ---------------------------------------------------------------------------
+
+
+class RingAllGatherFuture(TraceFuture):
+    """Future over a decomposed all-gather whose continuation may fuse.
+
+    ``get()`` materialises the plain ring gather; ``then_matmul(w)`` — the
+    continuation the paper chains with ``.then`` — *never* materialises the
+    gather and lowers to :func:`all_gather_matmul` instead.
+    """
+
+    def __init__(self, comm: Communicator, x: jax.Array, axis: int = 0):
+        super().__init__(thunk=partial(ring_all_gather, comm, x, axis=axis))
+        self._comm = comm
+        self._x = x
+
+    def then_matmul(self, x_full: jax.Array, **kw) -> TraceFuture:
+        """Fused continuation: ``x_full @ gathered`` (this future's payload is
+        the contraction-sharded weight)."""
+
+        fut = self
+
+        def thunk():
+            return all_gather_matmul(fut._comm, x_full, fut._x, **kw)
+
+        return TraceFuture(thunk)
+
+
+def immediate_all_gather(comm: Communicator, x: jax.Array, *, axis: int = 0):
+    return RingAllGatherFuture(comm, x, axis=axis)
+
+
+def immediate_all_reduce(comm: Communicator, x: jax.Array):
+    from repro.core import collectives
+
+    return TraceFuture(lambda: collectives.allreduce(comm, x))
+
+
+def immediate_reduce_scatter(comm: Communicator, x: jax.Array, *, axis: int = 0):
+    return TraceFuture(lambda: ring_reduce_scatter(comm, x, axis=axis))
+
+
+def immediate_send_recv(comm: Communicator, x, perm):
+    from repro.core import collectives
+
+    return TraceFuture(lambda: collectives.send_recv(comm, x, perm))

@@ -1,0 +1,340 @@
+"""Tool interface (paper §II — MPI 4.0 chapter 15, ``MPI_T_``).
+
+MPI_T exposes *performance variables* (pvars) and *control variables*
+(cvars).  The XLA adaptation:
+
+* **pvars** are extracted from compiled artifacts: per-collective operand
+  bytes, ring-adjusted wire bytes, FLOPs and bytes accessed — the exact
+  counters the roofline analysis consumes (``collective_bytes`` is not in
+  ``cost_analysis()``; it is parsed from the HLO text here).
+* **cvars** are a typed runtime configuration registry (error checking,
+  default algorithms, compression) — the scoped, validated analogue of MPI's
+  stringly-typed control variables.
+* call-site counters (``pvar_counters``) count issued operations per kind,
+  maintained by the interface layer.
+
+Hardware model constants for the roofline (TPU v5e) also live here so every
+consumer agrees on them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Any, Callable
+
+from repro.core import errors
+
+# --------------------------------------------------------------------------
+# hardware model (TPU v5e, per task statement)
+# --------------------------------------------------------------------------
+
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s per chip
+HBM_BANDWIDTH = 819e9        # bytes/s per chip
+ICI_BANDWIDTH = 50e9         # bytes/s per link
+HBM_BYTES = 16 * 1024**3     # HBM capacity per chip
+
+# --------------------------------------------------------------------------
+# HLO parsing: collective bytes (pvars from compiled artifacts)
+# --------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+    "collective-broadcast",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[([0-9,]+)\]<=\[")
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    size = _DTYPE_BYTES.get(dtype)
+    if size is None:
+        return 0.0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * size
+
+
+def _line_shapes(segment: str) -> list[float]:
+    return [_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(segment)]
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    """Aggregated collective pvars for one compiled module (per device)."""
+
+    count: dict[str, int] = dataclasses.field(default_factory=lambda: defaultdict(int))
+    operand_bytes: dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float)
+    )
+    result_bytes: dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float)
+    )
+    wire_bytes: dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float)
+    )
+
+    @property
+    def total_operand_bytes(self) -> float:
+        return float(sum(self.operand_bytes.values()))
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return float(sum(self.wire_bytes.values()))
+
+    @property
+    def total_count(self) -> int:
+        return int(sum(self.count.values()))
+
+    def as_dict(self) -> dict[str, Any]:
+        return {
+            "count": dict(self.count),
+            "operand_bytes": dict(self.operand_bytes),
+            "result_bytes": dict(self.result_bytes),
+            "wire_bytes": dict(self.wire_bytes),
+            "total_operand_bytes": self.total_operand_bytes,
+            "total_wire_bytes": self.total_wire_bytes,
+        }
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        first = m.group(1)
+        return max(1, len([t for t in first.split(",") if t.strip() != ""]))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        dims = [int(t) for t in m.group(1).split(",")]
+        return max(1, dims[-1]) if dims else default
+    return default
+
+
+def _wire_factor(kind: str, n: int) -> float:
+    """Ring-algorithm bytes crossing one device's link, as a multiple of the
+    payload (operand bytes for reductions, result bytes for gathers)."""
+
+    if n <= 1:
+        return 0.0
+    frac = (n - 1) / n
+    if kind == "all-reduce":
+        return 2.0 * frac
+    if kind in ("all-gather", "reduce-scatter", "all-to-all"):
+        return frac
+    return 1.0  # permute / broadcast move the payload once
+
+
+def parse_hlo_collectives(hlo_text: str, default_group: int = 1) -> CollectiveStats:
+    """Parse HLO text; sum operand sizes of every collective op (the roofline
+    ``collective_bytes`` source mandated by the methodology), plus result and
+    ring-adjusted wire bytes.
+
+    ``-start`` variants are counted; their matching ``-done`` is skipped, as
+    are dead "parameter"-only mentions.
+    """
+
+    shapes_by_name: dict[str, float] = {}
+    stats = CollectiveStats()
+    for raw in hlo_text.splitlines():
+        m = _DEF_RE.match(raw)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        paren = rhs.find("(")
+        head = rhs[:paren] if paren >= 0 else rhs
+        result_bytes = sum(_line_shapes(head))
+        shapes_by_name[name] = result_bytes
+
+        opm = re.search(r"\b([a-z][a-z0-9\-]*)\(", rhs)
+        if not opm:
+            continue
+        op = opm.group(1)
+        kind = None
+        for k in COLLECTIVE_KINDS:
+            if op == k or op == k + "-start":
+                kind = k
+                break
+        if kind is None:
+            continue
+        # operand bytes: inline shapes if present, else resolve operand names.
+        # Scan to the matching close-paren of the op's argument list.
+        depth = 1
+        top: list[str] = []
+        cur = ""
+        for ch in rhs[opm.end() :]:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+            if ch == "," and depth == 1:
+                top.append(cur)
+                cur = ""
+            else:
+                cur += ch
+        if cur.strip():
+            top.append(cur)
+        operand_bytes = 0.0
+        for arg in top:
+            arg = arg.strip()
+            inline = _line_shapes(arg)
+            if inline:
+                operand_bytes += sum(inline)
+            else:
+                ref = arg.lstrip("%").strip()
+                operand_bytes += shapes_by_name.get(ref, 0.0)
+        if op.endswith("-start") and kind in ("all-gather", "all-reduce"):
+            # start result is (operand, result) tuples; fine — we use operands
+            pass
+        n = _group_size(raw, default_group)
+        payload = operand_bytes if kind in ("all-reduce", "reduce-scatter", "all-to-all",
+                                            "collective-permute") else result_bytes
+        stats.count[kind] += 1
+        stats.operand_bytes[kind] += operand_bytes
+        stats.result_bytes[kind] += result_bytes
+        stats.wire_bytes[kind] += payload * _wire_factor(kind, n)
+    return stats
+
+
+def flops_and_bytes(compiled) -> tuple[float, float]:
+    """(HLO flops, HLO bytes accessed) from ``cost_analysis`` (per device)."""
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0))
+
+
+def roofline_terms(
+    compiled,
+    *,
+    hlo_text: str | None = None,
+    chips: int = 1,
+    peak_flops: float = PEAK_FLOPS_BF16,
+    hbm_bw: float = HBM_BANDWIDTH,
+    link_bw: float = ICI_BANDWIDTH,
+) -> dict[str, Any]:
+    """The three roofline terms (seconds) for one compiled step.
+
+    ``cost_analysis`` on an SPMD module reports *per device* numbers, so the
+    ``chips`` division is already implicit; it is kept as a parameter for
+    whole-model (unpartitioned) analyses.
+    """
+
+    flops, bytes_accessed = flops_and_bytes(compiled)
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    colls = parse_hlo_collectives(text)
+    compute_t = flops / (chips * peak_flops)
+    memory_t = bytes_accessed / (chips * hbm_bw)
+    collective_t = colls.total_operand_bytes / (chips * link_bw)
+    wire_t = colls.total_wire_bytes / (chips * link_bw)
+    terms = {
+        "compute_s": compute_t,
+        "memory_s": memory_t,
+        "collective_s": collective_t,
+        "collective_wire_s": wire_t,
+        "hlo_flops": flops,
+        "hlo_bytes": bytes_accessed,
+        "collectives": colls.as_dict(),
+    }
+    dominant = max(
+        ("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k]
+    )
+    terms["dominant"] = dominant
+    return terms
+
+
+# --------------------------------------------------------------------------
+# control variables (cvars)
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Cvar:
+    name: str
+    type: type
+    value: Any
+    doc: str
+    on_set: Callable[[Any], None] | None = None
+
+
+_CVARS: dict[str, _Cvar] = {}
+
+
+def cvar_register(
+    name: str, type_: type, default: Any, doc: str, on_set: Callable[[Any], None] | None = None
+) -> None:
+    _CVARS[name] = _Cvar(name, type_, default, doc, on_set)
+    if on_set:
+        on_set(default)
+
+
+def cvar_set(name: str, value: Any) -> None:
+    v = _CVARS.get(name)
+    if v is None:
+        errors.fail(errors.ErrorClass.ERR_ARG, f"unknown control variable {name!r}")
+    if not isinstance(value, v.type):
+        errors.fail(
+            errors.ErrorClass.ERR_TYPE,
+            f"cvar {name!r} expects {v.type.__name__}, got {type(value).__name__}",
+        )
+    v.value = value
+    if v.on_set:
+        v.on_set(value)
+
+
+def cvar_get(name: str) -> Any:
+    v = _CVARS.get(name)
+    if v is None:
+        errors.fail(errors.ErrorClass.ERR_ARG, f"unknown control variable {name!r}")
+    return v.value
+
+
+def cvar_list() -> dict[str, str]:
+    return {v.name: v.doc for v in _CVARS.values()}
+
+
+# default cvars
+cvar_register(
+    "error_checking",
+    bool,
+    True,
+    "trace-time argument validation (the paper's compile-time macro)",
+    on_set=errors.set_error_checking,
+)
+
+
+# --------------------------------------------------------------------------
+# pvar call-site counters
+# --------------------------------------------------------------------------
+
+pvar_counters: dict[str, int] = defaultdict(int)
+
+
+def pvar_count(op: str) -> None:
+    pvar_counters[op] += 1
+
+
+def pvar_reset() -> None:
+    pvar_counters.clear()
+
+
+def pvar_read() -> dict[str, int]:
+    return dict(pvar_counters)

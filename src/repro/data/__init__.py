@@ -1,0 +1,5 @@
+"""Data pipeline: deterministic synthetic token streams, shard-aware
+batching, and stateless resume (the loader state is just the step index)."""
+
+from repro.data.pipeline import TokenPipeline, make_batch_specs  # noqa: F401
+

@@ -1,0 +1,186 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Numerically exact (fp32 softmax) reference used by the kernel's allclose
+tests and as the recompute target of the custom-VJP backward pass.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30  # finite mask value: keeps fully-masked rows NaN-free
+
+
+def attention_mask(
+    q_len: int,
+    k_len: int,
+    *,
+    causal: bool = True,
+    sliding_window: int | None = None,
+    prefix_len: int | None = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """(q_len, k_len) boolean mask. ``q_offset`` positions queries globally
+    (used for chunked decodes and ring steps)."""
+
+    q_pos = q_offset + jnp.arange(q_len)[:, None]
+    k_pos = jnp.arange(k_len)[None, :]
+    mask = jnp.ones((q_len, k_len), bool)
+    if causal:
+        mask = q_pos >= k_pos
+    if sliding_window is not None:
+        mask = mask & (q_pos - k_pos < sliding_window)
+    if prefix_len is not None:
+        mask = mask | (k_pos < prefix_len)
+    return mask
+
+
+def mha(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    sliding_window: int | None = None,
+    prefix_len: int | None = None,
+    logit_softcap: float | None = None,
+    scale: float | None = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Reference attention.  q: (b, sq, h, d); k/v: (b, sk, hk, d) with
+    ``h % hk == 0`` (GQA).  Returns (b, sq, h, d) in q's dtype."""
+
+    b, sq, h, d = q.shape
+    hk = k.shape[2]
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    if hk != h:
+        k = jnp.repeat(k, h // hk, axis=2)
+        v = jnp.repeat(v, h // hk, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if logit_softcap is not None:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    mask = attention_mask(
+        sq,
+        k.shape[1],
+        causal=causal,
+        sliding_window=sliding_window,
+        prefix_len=prefix_len,
+        q_offset=q_offset,
+    )
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def chunked_mha(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    sliding_window: int | None = None,
+    prefix_len: int | None = None,
+    logit_softcap: float | None = None,
+    scale: float | None = None,
+    q_block: int = 1024,
+    k_block: int = 1024,
+    q_block_axis: str | None = None,
+) -> jax.Array:
+    """Memory-efficient (online-softmax) attention on the XLA path — the
+    jnp twin of the Pallas kernel's schedule: never materialises the
+    (S, S) score matrix, O(S·block) live memory instead of O(S²).
+
+    Query blocks are vmapped (parallel); the KV walk is a scan.  With
+    ``q_block_axis`` set to a mesh axis name, the query-block dim is
+    sharding-constrained onto that axis — sequence parallelism for
+    attention, the lever when heads do not divide the model axis (§Perf A4).
+
+    This is what the production prefill cells compile (the §Perf memory-term
+    lever); the Pallas kernel remains the TPU-target implementation and this
+    the shape-compatible oracle-consistent fallback.
+    """
+
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    hk = k.shape[2]
+    if scale is None:
+        scale = 1.0 / math.sqrt(d)
+    if sq % q_block or sk % k_block:
+        # fall back for ragged shapes (tests, smoke models)
+        return mha(q, k, v, causal=causal, sliding_window=sliding_window,
+                   prefix_len=prefix_len, logit_softcap=logit_softcap, scale=scale)
+    group = h // hk
+
+    qf = q.astype(jnp.float32).reshape(b, sq // q_block, q_block, h, d)
+    kf = k.astype(jnp.float32).reshape(b, sk // k_block, k_block, hk, d)
+    vf = v.astype(jnp.float32).reshape(b, sk // k_block, k_block, hk, d)
+
+    def one_q_block(qb, qi):
+        # qb: (b, q_block, h, d)
+
+        def kv_step(carry, kv):
+            o_acc, m, l = carry
+            kb, vb, ki = kv                               # (b, k_block, hk, d)
+            kbh = jnp.repeat(kb, group, axis=2) if group > 1 else kb
+            vbh = jnp.repeat(vb, group, axis=2) if group > 1 else vb
+            s = jnp.einsum("bqhd,bkhd->bhqk", qb, kbh) * scale
+            if logit_softcap is not None:
+                s = logit_softcap * jnp.tanh(s / logit_softcap)
+            # global offsets for this (q, k) block pair
+            q_pos = qi * q_block + jnp.arange(q_block)[:, None]
+            k_pos = ki * k_block + jnp.arange(k_block)[None, :]
+            mask = jnp.ones((q_block, k_block), bool)
+            if causal:
+                mask = q_pos >= k_pos
+            if sliding_window is not None:
+                mask = mask & (q_pos - k_pos < sliding_window)
+            if prefix_len is not None:
+                mask = mask | (k_pos < prefix_len)
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            o_new = o_acc * alpha[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vbh)
+            return (o_new, m_new, l_new), None
+
+        o0 = jnp.zeros((b, h, q_block, d), jnp.float32)
+        m0 = jnp.full((b, h, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_block), jnp.float32)
+        ks = jnp.arange(sk // k_block)
+        (o, m, l), _ = jax.lax.scan(
+            kv_step, (o0, m0, l0),
+            (kf.transpose(1, 0, 2, 3, 4), vf.transpose(1, 0, 2, 3, 4), ks),
+        )
+        o = o / jnp.maximum(l, 1e-30)[..., None]
+        return o.transpose(0, 2, 1, 3)                    # (b, q_block, h, d)
+
+    qi = jnp.arange(sq // q_block)
+    q_blocks = qf.transpose(1, 0, 2, 3, 4)               # (nq, b, q_block, h, d)
+    if q_block_axis is not None:
+        from jax.sharding import PartitionSpec as P
+        from repro.models.common import _ambient_mesh_shape
+
+        mesh_shape = _ambient_mesh_shape()
+        n = mesh_shape.get(q_block_axis, 1)
+        if n > 1 and q_blocks.shape[0] % n == 0:
+            q_blocks = jax.lax.with_sharding_constraint(
+                q_blocks, P(q_block_axis, None, None, None, None)
+            )
+    o_blocks = jax.vmap(one_q_block)(q_blocks, qi)
+    if q_block_axis is not None:
+        mesh_shape = _ambient_mesh_shape()
+        n = mesh_shape.get(q_block_axis, 1)
+        if n > 1 and o_blocks.shape[0] % n == 0:
+            from jax.sharding import PartitionSpec as P
+
+            o_blocks = jax.lax.with_sharding_constraint(
+                o_blocks, P(q_block_axis, None, None, None, None)
+            )
+    o = o_blocks.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, d)
+    return o.astype(q.dtype)

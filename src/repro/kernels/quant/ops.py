@@ -1,0 +1,41 @@
+"""Jit'd wrapper for block int8 quantisation: flat-payload API matching
+:mod:`repro.core.compress`, dispatching to the Pallas kernel or the jnp
+reference."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compress import BLOCK
+from repro.kernels.quant import kernel as _kernel
+from repro.kernels.quant import ref as _ref
+
+
+def quantize_int8(x: jax.Array, *, impl: str = "ref"):
+    """Flat tensor → (q int8 flat, scales fp32 per block, pad)."""
+
+    if impl == "ref":
+        return _ref.quantize_int8(x)
+    flat = x.reshape(-1).astype(jnp.float32)
+    pad = (-flat.shape[0]) % BLOCK
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    rows = flat.shape[0] // BLOCK
+    q, s = _kernel.quantize_int8_rows(
+        flat.reshape(rows, BLOCK), interpret=(impl == "pallas")
+    )
+    return q.reshape(-1), s[:, 0], pad
+
+
+def dequantize_int8(q, scale, pad, shape, dtype, *, impl: str = "ref"):
+    if impl == "ref":
+        return _ref.dequantize_int8(q, scale, pad, shape, dtype)
+    rows = q.shape[0] // BLOCK
+    x = _kernel.dequantize_int8_rows(
+        q.reshape(rows, BLOCK), scale[:, None], out_dtype=dtype,
+        interpret=(impl == "pallas"),
+    ).reshape(-1)
+    if pad:
+        x = x[:-pad]
+    return x.reshape(shape)

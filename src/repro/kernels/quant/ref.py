@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for block int8 quantisation (re-exports the core
+reference so the kernel and the communication layer share one definition)."""
+
+from repro.core.compress import (  # noqa: F401
+    BLOCK,
+    compression_error,
+    dequantize_int8,
+    quantize_int8,
+)

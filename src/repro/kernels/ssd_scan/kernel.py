@@ -1,0 +1,126 @@
+"""Pallas kernel for the Mamba-2 SSD chunked scan (TPU target).
+
+TPU adaptation of the SSD algorithm:
+
+* grid ``(batch, heads, num_chunks)`` — chunks are the minor (sequential)
+  grid dimension, so the ``(p, n)`` fp32 state lives in VMEM scratch and
+  carries across chunk steps (the inter-chunk recurrence), re-initialised
+  at ``chunk == 0``;
+* each chunk step is three MXU matmuls (``C Bᵀ``, ``(CB ⊙ L) X``,
+  ``Xᵀ_w B``) plus VPU elementwise decay math — the "duality" that makes
+  SSM training MXU-bound instead of scan-bound;
+* ``BlockSpec`` tiles: x/y ``(chunk, p)``, B/C ``(chunk, n)`` with the
+  group index derived from the head grid index (grouped B/C need no
+  materialised repeat);
+* default ``chunk=128`` keeps every matmul MXU-aligned and the working set
+  (≈ 4·chunk·max(p,n) fp32) far below VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(
+    a_ref,      # (1,)        A for this head
+    x_ref,      # (1, q, 1, p)
+    dt_ref,     # (1, q, 1)
+    b_ref,      # (1, q, 1, n)
+    c_ref,      # (1, q, 1, n)
+    y_ref,      # (1, q, 1, p)
+    state_ref,  # VMEM (p, n) fp32 carry
+    *,
+    chunk: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    a = a_ref[0].astype(jnp.float32)
+    x = x_ref[0, :, 0, :].astype(jnp.float32)      # (q, p)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)       # (q,)
+    B = b_ref[0, :, 0, :].astype(jnp.float32)      # (q, n)
+    C = c_ref[0, :, 0, :].astype(jnp.float32)      # (q, n)
+
+    dA = dt * a
+    cum = jnp.cumsum(dA)                            # (q,) inclusive
+    total = cum[-1]
+
+    # intra-chunk: (C Bᵀ ⊙ L) X
+    cb = jax.lax.dot_general(
+        C, B, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                               # (q, q)
+    # mask the exponent (not the exp result): above the diagonal cum_i-cum_j
+    # is positive and exp() overflows, which would poison autodiff through
+    # the interpret-mode kernel with inf·0 (same fix as ref.ssd_chunked).
+    qi = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    kj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    seg = jnp.where(qi >= kj, cum[:, None] - cum[None, :], -jnp.inf)
+    L = jnp.exp(seg) * dt[None, :]
+    y_intra = jax.lax.dot_general(
+        cb * L, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                               # (q, p)
+
+    # inter-chunk: exp(cum_i) * (H_in C_i)
+    h_in = state_ref[...]                           # (p, n)
+    y_inter = jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        C, h_in, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                               # (q, p)
+
+    # state update: H = exp(total) H_in + Xᵀ_w B
+    w = jnp.exp(total - cum) * dt                   # (q,)
+    xw = x * w[:, None]                             # (q, p)
+    s_local = jax.lax.dot_general(
+        xw, B, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                               # (p, n)
+    state_ref[...] = jnp.exp(total) * h_in + s_local
+
+    y_ref[0, :, 0, :] = (y_intra + y_inter).astype(y_ref.dtype)
+
+
+def ssd_scan_fwd(
+    x: jax.Array,    # (b, l, h, p)
+    dt: jax.Array,   # (b, l, h)
+    A: jax.Array,    # (h,)
+    B: jax.Array,    # (b, l, g, n)
+    C: jax.Array,    # (b, l, g, n)
+    *,
+    chunk: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Chunked SSD scan; returns y (b, l, h, p).  Zero initial state (the
+    training/prefill case; decoding uses the explicit-state step in ref)."""
+
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    group = h // g
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec(
+                (1, chunk, 1, n), lambda bi, hi, ci, gg=group: (bi, ci, hi // gg, 0)
+            ),
+            pl.BlockSpec(
+                (1, chunk, 1, n), lambda bi, hi, ci, gg=group: (bi, ci, hi // gg, 0)
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, l, h, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(A, x, dt, B, C)

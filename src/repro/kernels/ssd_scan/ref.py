@@ -1,0 +1,163 @@
+"""Pure-jnp oracles for the Mamba-2 SSD (state-space duality) scan.
+
+Two references:
+
+* :func:`ssd_sequential` — the literal recurrence (``lax.scan`` over time),
+  the ground truth;
+* :func:`ssd_chunked` — the chunked matrix form (intra-chunk dense matmuls +
+  inter-chunk state recurrence).  This is the form the Pallas kernel
+  implements and the form models compile on CPU; it is validated against the
+  sequential oracle and the kernel is validated against both.
+
+Conventions (Mamba-2 §6): per head, state ``H`` is ``(p, n)``;
+``H_t = exp(dt_t A) H_{t-1} + dt_t x_t ⊗ B_t``; ``y_t = H_t C_t``.
+``A < 0`` (decay), ``dt > 0``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _expand_groups(B: jax.Array, h: int) -> jax.Array:
+    """(b, l, g, n) → (b, l, h, n) by repeating groups over their heads."""
+
+    g = B.shape[2]
+    if g == h:
+        return B
+    return jnp.repeat(B, h // g, axis=2)
+
+
+def ssd_sequential(
+    x: jax.Array,       # (b, l, h, p)
+    dt: jax.Array,      # (b, l, h)
+    A: jax.Array,       # (h,)
+    B: jax.Array,       # (b, l, g, n)
+    C: jax.Array,       # (b, l, g, n)
+    initial_state: jax.Array | None = None,  # (b, h, p, n)
+) -> tuple[jax.Array, jax.Array]:
+    """Ground-truth recurrence.  Returns (y (b,l,h,p), final_state)."""
+
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    Bh = _expand_groups(B, h).astype(jnp.float32)
+    Ch = _expand_groups(C, h).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    state0 = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def step(state, inputs):
+        xt, dtt, Bt, Ct = inputs  # (b,h,p), (b,h), (b,h,n), (b,h,n)
+        decay = jnp.exp(dtt * Af[None])[:, :, None, None]          # (b,h,1,1)
+        outer = (dtt[..., None, None] * xt[..., None]) * Bt[:, :, None, :]
+        state = decay * state + outer                              # (b,h,p,n)
+        y = jnp.einsum("bhpn,bhn->bhp", state, Ct)
+        return state, y
+
+    inputs = (
+        xf.transpose(1, 0, 2, 3),
+        dtf.transpose(1, 0, 2),
+        Bh.transpose(1, 0, 2, 3),
+        Ch.transpose(1, 0, 2, 3),
+    )
+    final, ys = jax.lax.scan(step, state0, inputs)
+    y = ys.transpose(1, 0, 2, 3).astype(x.dtype)  # (b, l, h, p)
+    return y, final
+
+
+def ssd_chunked(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    B: jax.Array,
+    C: jax.Array,
+    *,
+    chunk: int = 128,
+    initial_state: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Chunked SSD (matrix form).  Same signature/returns as sequential."""
+
+    b, l, h, p = x.shape
+    assert l % chunk == 0, (l, chunk)
+    nc, q = l // chunk, chunk
+    n = B.shape[-1]
+    Bh = _expand_groups(B, h).astype(jnp.float32).reshape(b, nc, q, h, n)
+    Ch = _expand_groups(C, h).astype(jnp.float32).reshape(b, nc, q, h, n)
+    xf = x.astype(jnp.float32).reshape(b, nc, q, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, q, h)
+    Af = A.astype(jnp.float32)
+
+    dA = dtf * Af[None, None, None]                     # (b,nc,q,h)
+    cum = jnp.cumsum(dA, axis=2)                        # inclusive
+    total = cum[:, :, -1]                               # (b,nc,h)
+
+    # intra-chunk: y_i += sum_{j<=i} (C_i·B_j) exp(cum_i-cum_j) dt_j x_j
+    # NOTE: mask the EXPONENT (j>i → -inf), not the exp result: cum_i-cum_j
+    # is positive above the diagonal and exp() overflows there, which poisons
+    # the backward of where() with inf·0 = NaN (Mamba-2's segsum does the
+    # same masking for the same reason).
+    cb = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh)       # (b,nc,h,q,q)
+    seg = (
+        cum.transpose(0, 1, 3, 2)[:, :, :, :, None]
+        - cum.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    )                                                   # (b,nc,h,q,q): cum_i - cum_j
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    L = jnp.exp(jnp.where(mask[None, None, None], seg, -jnp.inf))
+    L = L * dtf.transpose(0, 1, 3, 2)[:, :, :, None, :]  # × dt_j
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", cb * L, xf)
+
+    # chunk-local state contribution: S_c = sum_j exp(total-cum_j) dt_j x_j ⊗ B_j
+    w = jnp.exp(total[:, :, None] - cum) * dtf          # (b,nc,q,h)
+    S = jnp.einsum("bcqh,bcqhp,bcqhn->bchpn", w, xf, Bh)
+
+    # inter-chunk recurrence over c: H_{c} = exp(total_c) H_{c-1} + S_c
+    state0 = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if initial_state is None
+        else initial_state.astype(jnp.float32)
+    )
+
+    def chunk_step(Hprev, inputs):
+        S_c, total_c = inputs                            # (b,h,p,n), (b,h)
+        Hnew = jnp.exp(total_c)[:, :, None, None] * Hprev + S_c
+        return Hnew, Hprev                               # emit the *incoming* state
+
+    final, H_in = jax.lax.scan(
+        chunk_step, state0, (S.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2))
+    )
+    H_in = H_in.transpose(1, 0, 2, 3, 4)                 # (b,nc,h,p,n) state at chunk start
+
+    # inter-chunk output: y_i += exp(cum_i) * (H_in C_i)
+    y_inter = jnp.exp(cum)[..., None] * jnp.einsum("bchpn,bcqhn->bcqhp", H_in, Ch)
+
+    y = (y_intra + y_inter).reshape(b, l, h, p).astype(x.dtype)
+    return y, final
+
+
+def ssd_decode_step(
+    state: jax.Array,   # (b, h, p, n)
+    x: jax.Array,       # (b, h, p)
+    dt: jax.Array,      # (b, h)
+    A: jax.Array,       # (h,)
+    B: jax.Array,       # (b, g, n)
+    C: jax.Array,       # (b, g, n)
+) -> tuple[jax.Array, jax.Array]:
+    """Single-token recurrent step (the serving path).  Returns (y, state)."""
+
+    h = x.shape[1]
+    g = B.shape[1]
+    if g != h:
+        B = jnp.repeat(B, h // g, axis=1)
+        C = jnp.repeat(C, h // g, axis=1)
+    decay = jnp.exp(dt.astype(jnp.float32) * A[None])[:, :, None, None]
+    outer = (dt[..., None, None] * x[..., None]).astype(jnp.float32) * B[:, :, None, :]
+    state = decay * state + outer
+    y = jnp.einsum("bhpn,bhn->bhp", state, C.astype(jnp.float32))
+    return y.astype(x.dtype), state

@@ -1,0 +1,2 @@
+"""Launch layer: production mesh construction, input stand-ins, step
+functions, the multi-pod dry-run driver and the train/serve CLIs."""

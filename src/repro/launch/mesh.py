@@ -1,0 +1,36 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import and then calls it.
+
+Topology (TPU v5e pods of 256 chips):
+
+* single-pod:  (16, 16)        axes ("data", "model") — 256 chips
+* multi-pod:   (2, 16, 16)     axes ("pod", "data", "model") — 512 chips
+
+The "model" axis maps onto the fast ICI dimension (TP collectives are
+latency-sensitive); "data"/"pod" carry FSDP all-gathers and the gradient
+reduce-scatters, with the pod axis crossing DCN (which is why the gradient
+compression path applies to the pod axis only).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int | None = None, model: int = 1):
+    """A small mesh over whatever devices exist (tests / examples / benches)."""
+
+    n = len(jax.devices())
+    if data is None:
+        data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))

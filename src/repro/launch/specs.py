@@ -1,0 +1,174 @@
+"""Input stand-ins for the dry-run: every model input as a
+``jax.ShapeDtypeStruct`` (weak-type-correct, shardable, no allocation).
+
+``input_specs(arch, shape)`` returns the kwargs for the matching step
+function (``train_step`` / ``prefill_step`` / ``decode_step``), so the
+dry-run is literally::
+
+    jax.jit(step, in_shardings=..., out_shardings=...).lower(**input_specs(...))
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import base
+from repro.models import api as model_api
+from repro.optim import AdamW
+from repro.sharding import rules
+
+SIGLIP_DIM = 1152  # the VLM vision-stub feature width (SigLIP-So400m)
+
+
+def _sds(tree: Any) -> Any:
+    """Normalise an eval_shape result to plain ShapeDtypeStructs."""
+
+    return jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+def batch_structs(cfg: base.ModelConfig, shape: base.ShapeConfig, *, with_labels: bool) -> dict:
+    """The input-batch stand-in for a full-sequence (train/prefill) step."""
+
+    B, S = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    batch: dict[str, Any] = {"tokens": tok}
+    if cfg.family == "vlm":
+        # text tokens + precomputed patch embeddings; total trunk length is
+        # num_image_tokens + S_text = S
+        batch["tokens"] = jax.ShapeDtypeStruct((B, S - cfg.num_image_tokens), jnp.int32)
+        batch["image_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_image_tokens, SIGLIP_DIM), jnp.bfloat16
+        )
+    if cfg.family == "encdec":
+        # precomputed frame embeddings (modality-frontend stub), source
+        # length == target length == S (DESIGN.md §5)
+        batch["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+    if with_labels:
+        batch["labels"] = jax.ShapeDtypeStruct(batch["tokens"].shape, jnp.int32)
+    return batch
+
+
+def param_structs(bundle) -> Any:
+    return _sds(jax.eval_shape(lambda: bundle.init(jax.random.PRNGKey(0))))
+
+
+def opt_structs(opt: AdamW, params: Any) -> Any:
+    return _sds(jax.eval_shape(opt.init, params))
+
+
+def cache_structs(bundle, cfg, pcfg, shape: base.ShapeConfig) -> Any:
+    """Decode-cell cache stand-ins (KV / MLA latent / SSM state / hybrid)."""
+
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        def mk():
+            params = bundle.init(jax.random.PRNGKey(0))
+            b = {
+                "frames": jnp.zeros((B, S, cfg.d_model), jnp.bfloat16),
+                "tokens": jnp.zeros((B, S), jnp.int32),
+            }
+            _, cache = bundle.prefill(params, b, pcfg)
+            return cache
+
+        return _sds(jax.eval_shape(mk))
+    return _sds(jax.eval_shape(lambda: bundle.init_cache(pcfg, B, S)))
+
+
+def token_struct(shape: base.ShapeConfig) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# assembled per-cell kwargs + shardings
+# ---------------------------------------------------------------------------
+
+
+def input_specs(
+    arch: str,
+    shape_name: str,
+    mesh,
+    pcfg: base.ParallelConfig | None = None,
+    *,
+    opt: AdamW | None = None,
+):
+    """(kwargs, in_shardings, out_shardings builder inputs) for one cell.
+
+    Returns ``(step_kind, kwargs, in_shardings)`` where ``kwargs`` feeds
+    ``.lower(**kwargs)``.
+    """
+
+    cfg = base.get_config(arch)
+    shape = base.SHAPES[shape_name]
+    pcfg = pcfg or base.get_parallel(arch, multi_pod="pod" in mesh.axis_names)
+    bundle = model_api.build(cfg)
+
+    params = param_structs(bundle)
+    pshard = rules.shardings(rules.param_specs(params, mesh, pcfg), mesh)
+
+    if shape.kind == "train":
+        opt = opt or AdamW(lr=1e-4, moment_dtype=pcfg.moment_dtype)
+        opt_state = opt_structs(opt, params)
+        oshard = _moment_shardings(params, pshard, opt_state, mesh)
+        batch = batch_structs(cfg, shape, with_labels=True)
+        bshard = rules.shardings(rules.batch_spec(batch, mesh, pcfg), mesh)
+        kwargs = {"params": params, "opt_state": opt_state, "batch": batch}
+        inshard = {"params": pshard, "opt_state": oshard, "batch": bshard}
+        return "train", kwargs, inshard
+
+    if shape.kind == "prefill":
+        batch = batch_structs(cfg, shape, with_labels=False)
+        bshard = rules.shardings(rules.batch_spec(batch, mesh, pcfg), mesh)
+        kwargs = {"params": params, "batch": batch}
+        inshard = {"params": pshard, "batch": bshard}
+        return "prefill", kwargs, inshard
+
+    # decode
+    cache = cache_structs(bundle, cfg, pcfg, shape)
+    cshard = rules.shardings(rules.cache_specs(cache, mesh, pcfg, cfg), mesh)
+    tok = token_struct(shape)
+    tshard = rules.shardings(rules.batch_spec({"t": tok}, mesh, pcfg), mesh)["t"]
+    kwargs = {"params": params, "cache": cache, "token": tok}
+    inshard = {"params": pshard, "cache": cshard, "token": tshard}
+    return "decode", kwargs, inshard
+
+
+def _moment_shardings(params, pshard, opt_state, mesh):
+    """Adam moments inherit the matching parameter's sharding (ZeRO).
+
+    int8 moments are stored as FLATTENED ``_Q8`` payloads whose shapes match
+    no parameter; replicating them costs 2·N bytes/device (observed: 642
+    GB/device for grok-1) — instead shard the flat payload over every mesh
+    axis it divides (blocks are 256-padded, so 256-chip divisibility holds).
+    """
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    by_shape = {}
+    for leaf, sh in zip(jax.tree.leaves(params), jax.tree.leaves(pshard)):
+        by_shape.setdefault(tuple(np.shape(leaf)), sh)
+
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def flat_spec(n: int) -> P:
+        axes = []
+        total = 1
+        for a, s in axis_sizes.items():
+            if n % (total * s) == 0:
+                axes.append(a)
+                total *= s
+        return P(tuple(axes)) if axes else P()
+
+    def shard_for(leaf):
+        shape = tuple(np.shape(leaf))
+        hit = by_shape.get(shape)
+        if hit is not None:
+            return hit
+        if len(shape) == 1 and shape[0] >= 1024:
+            return NamedSharding(mesh, flat_spec(shape[0]))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(shard_for, opt_state)

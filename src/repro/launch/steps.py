@@ -1,0 +1,107 @@
+"""The production step functions the dry-run lowers and the launchers run.
+
+Each is a pure jax function of explicit pytrees (params / opt_state / batch /
+cache / token) so the same callable serves ``jax.jit`` at 8 CPU devices and
+512 production chips.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base
+from repro.models import api as model_api
+from repro.optim import AdamW, clip_by_global_norm
+
+
+def make_train_step(cfg: base.ModelConfig, pcfg: base.ParallelConfig, opt: AdamW):
+    bundle = model_api.build(cfg)
+
+    def grad_of(params, batch):
+        def loss_fn(p):
+            loss, metrics = bundle.loss(p, batch, pcfg, None)
+            return loss, metrics
+
+        return jax.value_and_grad(loss_fn, has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        k = getattr(pcfg, "microbatches", 1)
+        if k > 1:
+            # gradient accumulation: peak activation memory divides by k at
+            # the cost of re-gathering FSDP weights per microbatch (§Perf B3).
+            # The f32 accumulator MUST carry the parameter shardings —
+            # unpinned, the scan carry replicates it (observed: +5 TB/device).
+            mb = jax.tree.map(
+                lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch
+            )
+
+            def _acc_init():
+                from jax.sharding import PartitionSpec as P
+
+                from repro.models.common import _ambient_mesh_shape
+                from repro.sharding import rules as _rules
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+                shape = _ambient_mesh_shape()
+                if not shape:
+                    return zeros
+                shim = type("M", (), {"shape": shape})()
+                specs = _rules.param_specs(params, shim, pcfg)
+                return jax.tree.map(
+                    lambda z, s: jax.lax.with_sharding_constraint(z, s),
+                    zeros, specs,
+                    is_leaf=lambda x: isinstance(x, P),
+                )
+
+            def one(acc, mbatch):
+                (loss, metrics), grads = grad_of(params, mbatch)
+                acc = jax.tree.map(jnp.add, acc, grads)
+                return acc, (loss, metrics)
+
+            acc, (losses, metrics) = jax.lax.scan(one, _acc_init(), mb)
+            grads = jax.tree.map(lambda g: (g / k).astype(jnp.float32), acc)
+            metrics = jax.tree.map(lambda m: jnp.mean(m, axis=0), metrics)
+        else:
+            (loss, metrics), grads = grad_of(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        params, opt_state = opt.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: base.ModelConfig, pcfg: base.ParallelConfig):
+    bundle = model_api.build(cfg)
+
+    def prefill_step(params, batch):
+        logits, cache = bundle.prefill(params, batch, pcfg, None)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg: base.ModelConfig, pcfg: base.ParallelConfig):
+    bundle = model_api.build(cfg)
+
+    def decode_step(params, cache, token):
+        logits, cache = bundle.decode(params, cache, token, pcfg, None)
+        return logits, cache
+
+    return decode_step
+
+
+def make_step(kind: str, cfg, pcfg, opt: AdamW | None = None):
+    if kind == "train":
+        return make_train_step(cfg, pcfg, opt or AdamW(lr=1e-4, moment_dtype=pcfg.moment_dtype))
+    if kind == "prefill":
+        return make_prefill_step(cfg, pcfg)
+    if kind == "decode":
+        return make_decode_step(cfg, pcfg)
+    raise ValueError(kind)

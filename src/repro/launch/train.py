@@ -1,0 +1,77 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma2_9b --smoke \
+        --steps 50 --batch 8 --seq 256 --mesh 1x1
+
+Runs the full Trainer (checkpoint/restart, straggler guard, fault injection)
+on whatever devices exist; ``--smoke`` selects the reduced same-family config
+so the loop runs on CPU.  The production 256/512-chip lowering of the same
+step function is exercised by ``repro.launch.dryrun``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import logging
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true", help="reduced same-family config")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--mesh", default="auto", help="DxM, e.g. 2x4 (auto: all devices x 1)")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--checkpoint-dir", default=None)
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--inject-failure-at", type=int, default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--out", default=None, help="write metrics history JSON here")
+    args = ap.parse_args(argv)
+
+    logging.basicConfig(level=logging.INFO, format="%(name)s %(message)s")
+
+    from repro.configs import base
+    from repro.launch.mesh import make_host_mesh
+    from repro.runtime.faults import FaultInjector
+    from repro.runtime.trainer import Trainer, TrainerConfig
+
+    cfg = base.get_smoke_config(args.arch) if args.smoke else base.get_config(args.arch)
+    pcfg = base.get_parallel(args.arch)
+    if args.mesh == "auto":
+        mesh = make_host_mesh()
+    else:
+        d, m = (int(t) for t in args.mesh.split("x"))
+        mesh = make_host_mesh(d, m)
+
+    tcfg = TrainerConfig(
+        steps=args.steps,
+        lr=args.lr,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every or max(1, args.steps // 2),
+        log_every=args.log_every,
+    )
+    injector = (
+        FaultInjector(fail_at_steps=(args.inject_failure_at,))
+        if args.inject_failure_at is not None
+        else None
+    )
+    trainer = Trainer(
+        cfg, pcfg, tcfg, mesh, seq_len=args.seq, global_batch=args.batch, injector=injector
+    )
+    result = trainer.run()
+    print(json.dumps({k: v for k, v in result.items() if k != "metrics"}, indent=1))
+    if result["metrics"]:
+        first, last = result["metrics"][0], result["metrics"][-1]
+        print(f"loss: {first['loss']:.4f} -> {last['loss']:.4f}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,108 @@
+"""Unified model API: ``build(cfg)`` returns a :class:`ModelBundle` with
+init / loss / prefill / decode entry points, plus shape-only variants
+(``jax.eval_shape``) used by the dry-run to build caches and param stand-ins
+without allocation."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, ssm_lm, transformer
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    cfg: Any
+    init: Callable                  # (key) -> params
+    loss: Callable                  # (params, batch, pcfg, mesh) -> (loss, metrics)
+    prefill: Callable               # (params, batch, pcfg, mesh) -> (logits, cache)
+    decode: Callable                # (params, cache, token, pcfg, mesh) -> (logits, cache)
+    init_cache: Callable | None     # (pcfg, batch, length) -> cache
+
+
+def build(cfg) -> ModelBundle:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key: transformer.init_lm(key, cfg),
+            loss=lambda p, b, pc, mesh=None: transformer.lm_loss(p, b, cfg, pc, mesh),
+            prefill=lambda p, b, pc, mesh=None, extra_capacity=0: transformer.lm_prefill(
+                p, b, cfg, pc, mesh, extra_capacity=extra_capacity
+            ),
+            decode=lambda p, c, t, pc, mesh=None: transformer.lm_decode(p, c, t, cfg, pc, mesh),
+            init_cache=lambda pc, batch, length: transformer.init_cache(cfg, pc, batch, length),
+        )
+    if fam == "ssm":
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key: ssm_lm.init_ssm_lm(key, cfg),
+            loss=lambda p, b, pc, mesh=None: ssm_lm.ssm_lm_loss(p, b, cfg, pc, mesh),
+            prefill=lambda p, b, pc, mesh=None, extra_capacity=0: ssm_lm.ssm_lm_prefill(
+                p, b, cfg, pc, mesh, extra_capacity=extra_capacity
+            ),
+            decode=lambda p, c, t, pc, mesh=None: ssm_lm.ssm_lm_decode(p, c, t, cfg, pc, mesh),
+            init_cache=lambda pc, batch, length: ssm_lm.SSMCache.init(
+                cfg.num_layers, batch, cfg
+            ),
+        )
+    if fam == "hybrid":
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key: ssm_lm.init_hybrid_lm(key, cfg),
+            loss=lambda p, b, pc, mesh=None: ssm_lm.hybrid_lm_loss(p, b, cfg, pc, mesh),
+            prefill=lambda p, b, pc, mesh=None, extra_capacity=0: ssm_lm.hybrid_lm_prefill(
+                p, b, cfg, pc, mesh, extra_capacity=extra_capacity
+            ),
+            decode=lambda p, c, t, pc, mesh=None: ssm_lm.hybrid_lm_decode(
+                p, c, t, cfg, pc, mesh
+            ),
+            init_cache=lambda pc, batch, length: ssm_lm.init_hybrid_cache(
+                cfg, pc, batch, length
+            ),
+        )
+    if fam == "encdec":
+        return ModelBundle(
+            cfg=cfg,
+            init=lambda key: encdec.init_encdec(key, cfg),
+            loss=lambda p, b, pc, mesh=None: encdec.encdec_loss(p, b, cfg, pc, mesh),
+            prefill=lambda p, b, pc, mesh=None, extra_capacity=0: encdec.encdec_prefill(
+                p, b, cfg, pc, mesh, extra_capacity=extra_capacity
+            ),
+            decode=lambda p, c, t, pc, mesh=None: encdec.encdec_decode(p, c, t, cfg, pc, mesh),
+            init_cache=None,  # built by prefill shape (cross-attn needs enc length)
+        )
+    raise ValueError(fam)
+
+
+# ---------------------------------------------------------------------------
+# shape-only helpers (dry-run substrate: no allocation, ShapeDtypeStructs)
+# ---------------------------------------------------------------------------
+
+
+def param_structs(bundle: ModelBundle) -> Any:
+    """Parameter ShapeDtypeStructs via ``eval_shape`` (never materialised)."""
+
+    return jax.eval_shape(lambda: bundle.init(jax.random.PRNGKey(0)))
+
+
+def cache_structs(bundle: ModelBundle, pcfg, batch: int, length: int, enc_len: int | None = None):
+    """Cache ShapeDtypeStructs for decode dry-runs."""
+
+    if bundle.cfg.family == "encdec":
+        def mk():
+            params = bundle.init(jax.random.PRNGKey(0))
+            b = {
+                "frames": jnp.zeros((batch, enc_len or length, bundle.cfg.d_model),
+                                    jnp.bfloat16),
+                "tokens": jnp.zeros((batch, length), jnp.int32),
+            }
+            _, cache = bundle.prefill(params, b, pcfg)
+            return cache
+
+        return jax.eval_shape(mk)
+    return jax.eval_shape(lambda: bundle.init_cache(pcfg, batch, length))

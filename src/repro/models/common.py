@@ -1,0 +1,175 @@
+"""Shared model components: norms, RoPE, initialisers, activation helpers."""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+# -- init ----------------------------------------------------------------------
+
+
+def trunc_normal(key, shape, scale: float, dtype) -> jax.Array:
+    stddev = scale / math.sqrt(max(1, shape[0] if len(shape) else 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * stddev).astype(
+        dtype
+    )
+
+
+def dense_init(key, in_dim: int, shape: tuple[int, ...], dtype) -> jax.Array:
+    stddev = 1.0 / math.sqrt(in_dim)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * stddev).astype(
+        dtype
+    )
+
+
+def key_iter(key):
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub
+
+
+# -- norms -----------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype) -> jax.Array:
+    return jnp.zeros((d,), dtype)  # stored as (scale - 1), gemma-style
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    return (normed * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+# -- activations --------------------------------------------------------------------
+
+
+def activation(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+    }[name]
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# -- rotary embeddings -----------------------------------------------------------------
+
+
+def rope(
+    x: jax.Array, positions: jax.Array, *, theta: float, rope_dim: int | None = None
+) -> jax.Array:
+    """Apply rotary embedding.  x: (..., seq, heads, head_dim); positions:
+    broadcastable to (..., seq).  ``rope_dim`` rotates only the first
+    ``rope_dim`` features (partial RoPE)."""
+
+    d = x.shape[-1]
+    rd = rope_dim or d
+    half = rd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., seq, half)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    xr, rest = x[..., :rd], x[..., rd:]
+    x1, x2 = xr[..., :half], xr[..., half:]
+    out1 = x1 * cos - x2 * sin
+    out2 = x2 * cos + x1 * sin
+    out = jnp.concatenate([out1, out2], axis=-1).astype(x.dtype)
+    if rest.shape[-1]:
+        out = jnp.concatenate([out, rest], axis=-1)
+    return out
+
+
+# -- activation sharding constraints ------------------------------------------------------
+#
+# GSPMD's propagation, left alone, may re-shard ACTIVATIONS instead of
+# gathering FSDP-sharded weights (observed: the whole layer stack running at
+# full global batch per device because the (model, fsdp)-sharded embedding
+# poisoned propagation).  Production frameworks pin activation shardings
+# explicitly (MaxText's logical constraints); these helpers do that under
+# the ambient mesh and degrade to no-ops on meshless CPU tests.
+
+
+def _ambient_mesh_shape() -> dict[str, int]:
+    """Axis-name → size of the ambient mesh, from either the new abstract
+    mesh (``jax.sharding.use_mesh``) or the legacy ``with mesh:`` context."""
+
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and not m.empty:
+            return dict(zip(m.axis_names, m.axis_sizes))
+    except Exception:
+        pass
+    try:  # legacy resource env
+        from jax._src import mesh as _mesh_mod
+
+        pm = _mesh_mod.thread_resources.env.physical_mesh
+        if pm is not None and not pm.empty:
+            return {a: int(s) for a, s in pm.shape.items()}
+    except Exception:
+        pass
+    return {}
+
+
+def _fit(axes, dim: int, mesh_shape) -> tuple[str, ...] | None:
+    """Keep the axis group only if the dim divides its total size."""
+
+    if not axes:
+        return None
+    total = 1
+    for a in axes:
+        total *= mesh_shape[a]
+    return tuple(axes) if (total > 1 and dim % total == 0) else None
+
+
+def constrain(x: jax.Array, pcfg, *, logits: bool = False) -> jax.Array:
+    """Pin activation sharding: batch over the data axes, last dim over
+    'model' for logits; everything else replicated.  No-op without a mesh
+    or when a dim does not divide."""
+
+    from jax.sharding import PartitionSpec as P
+
+    shape = _ambient_mesh_shape()
+    if not shape:
+        return x
+    data_axes = tuple(a for a in pcfg.data_axes if a in shape)
+    if not data_axes:
+        return x
+    batch_axes = _fit(data_axes, x.shape[0], shape)
+    dims: list = [batch_axes] + [None] * (x.ndim - 1)
+    if logits and pcfg.model_axis in shape and x.shape[-1] % shape[pcfg.model_axis] == 0:
+        dims[-1] = pcfg.model_axis
+    if all(d is None for d in dims):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*dims))
+
+
+# -- losses -------------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, *, softcap_val=None) -> jax.Array:
+    """Token-mean CE in fp32; logits (..., V), labels (...)."""
+
+    logits = logits.astype(jnp.float32)
+    if softcap_val is not None:
+        logits = softcap(logits, softcap_val)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,209 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).  The speech frontend
+is a stub per the task statement: ``input_specs`` provides precomputed frame
+embeddings (B, S_enc, D); the model is the transformer backbone with
+bidirectional encoder, causal decoder and cross-attention."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import common, mlp
+from repro.models.attention import KVCache
+from repro.models.common import dense_init, key_iter
+from repro.kernels.flash_attention import ops as fa_ops
+
+
+def _init_enc_layer(key, cfg, dtype):
+    ks = key_iter(key)
+    return {
+        "ln_attn": common.init_rmsnorm(cfg.d_model, dtype),
+        "attn": attn.init_attention(next(ks), cfg, dtype),
+        "ln_mlp": common.init_rmsnorm(cfg.d_model, dtype),
+        "mlp": mlp.init_mlp(next(ks), cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _init_dec_layer(key, cfg, dtype):
+    ks = key_iter(key)
+    p = _init_enc_layer(next(ks), cfg, dtype)
+    p["ln_cross"] = common.init_rmsnorm(cfg.d_model, dtype)
+    p["cross"] = attn.init_attention(next(ks), cfg, dtype)
+    return p
+
+
+def init_encdec(key, cfg) -> common.Params:
+    dtype = common.dtype_of(cfg)
+    ks = key_iter(key)
+    ekeys = jax.random.split(next(ks), cfg.encoder_layers)
+    dkeys = jax.random.split(next(ks), cfg.num_layers)
+    return {
+        "embed": common.trunc_normal(next(ks), (cfg.padded_vocab, cfg.d_model), 1.0, dtype),
+        "enc_norm": common.init_rmsnorm(cfg.d_model, dtype),
+        "final_norm": common.init_rmsnorm(cfg.d_model, dtype),
+        "encoder": jax.vmap(lambda k: _init_enc_layer(k, cfg, dtype))(ekeys),
+        "decoder": jax.vmap(lambda k: _init_dec_layer(k, cfg, dtype))(dkeys),
+    }
+
+
+def _maybe_remat(fn, pcfg):
+    if pcfg.remat == "none":
+        return fn
+    return jax.checkpoint(fn)
+
+
+def _self_attention(p, h, cfg, pcfg, positions, *, causal):
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+    q = common.rope(q, positions, theta=cfg.rope_theta)
+    k = common.rope(k, positions, theta=cfg.rope_theta)
+    out = fa_ops.flash_attention(
+        q, k, v, causal=causal, scale=1.0 / math.sqrt(cfg.head_dim),
+        impl=getattr(pcfg, "attn_impl", "ref"),
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def _cross_attention(p, h, enc_k, enc_v, cfg):
+    """Decoder → encoder attention against precomputed encoder K/V."""
+
+    q = jnp.einsum("bsd,dhk->bshk", h, p["wq"])
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), enc_k.astype(jnp.float32))
+    s = s / math.sqrt(cfg.head_dim)
+    pr = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", pr, enc_v.astype(jnp.float32)).astype(h.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def encode(params, frames: jax.Array, cfg, pcfg, mesh=None) -> jax.Array:
+    """frames: (B, S_enc, D) stub embeddings → encoder states."""
+
+    x = frames.astype(common.dtype_of(cfg))
+    positions = jnp.arange(x.shape[1])
+
+    def unit(x, lp):
+        x = common.constrain(x, pcfg)
+        h = common.rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+        x = x + _self_attention(lp["attn"], h, cfg, pcfg, positions, causal=False)
+        h = common.rms_norm(x, lp["ln_mlp"], cfg.norm_eps)
+        return x + mlp.mlp(lp["mlp"], h, cfg.act), ()
+
+    x = common.constrain(x, pcfg)
+    x, _ = jax.lax.scan(_maybe_remat(unit, pcfg), x, params["encoder"])
+    return common.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _decoder_full(params, enc_out, tokens, cfg, pcfg, *, collect_cache, mesh=None):
+    x = params["embed"][tokens]
+    x = common.constrain(x, pcfg)
+    positions = jnp.arange(tokens.shape[1])
+
+    def unit(x, lp):
+        x = common.constrain(x, pcfg)
+        # encoder K/V for this layer (recomputed per layer from enc_out)
+        ek = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross"]["wk"])
+        ev = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross"]["wv"])
+        h = common.rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+        if collect_cache:
+            a, entry = attn.attention_prefill(
+                lp["attn"], h, cfg, pcfg, positions=positions, sliding_window=None, mesh=mesh
+            )
+        else:
+            a = attn.attention_full(
+                lp["attn"], h, cfg, pcfg, positions=positions, sliding_window=None, mesh=mesh
+            )
+            entry = None
+        x = x + a
+        h = common.rms_norm(x, lp["ln_cross"], cfg.norm_eps)
+        x = x + _cross_attention(lp["cross"], h, ek, ev, cfg)
+        h = common.rms_norm(x, lp["ln_mlp"], cfg.norm_eps)
+        x = x + mlp.mlp(lp["mlp"], h, cfg.act)
+        ys = (entry, (ek, ev)) if collect_cache else ()
+        return x, ys
+
+    x, ys = jax.lax.scan(_maybe_remat(unit, pcfg), x, params["decoder"])
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, ys
+
+
+def encdec_loss(params, batch, cfg, pcfg, mesh=None):
+    enc_out = encode(params, batch["frames"], cfg, pcfg, mesh)
+    tokens = batch["tokens"]
+    x, _ = _decoder_full(params, enc_out, tokens, cfg, pcfg, collect_cache=False, mesh=mesh)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    logits = common.constrain(logits, pcfg, logits=True)
+    loss = common.cross_entropy(logits[:, :-1], tokens[:, 1:])
+    return loss, {"loss": loss}
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class EncDecCache:
+    self_kv: KVCache       # decoder self-attention (L, B, S_dec, Hk, Dh)
+    cross_k: jax.Array     # (L, B, S_enc, Hk, Dh)
+    cross_v: jax.Array
+
+    @property
+    def pos(self):
+        return self.self_kv.pos
+
+
+def encdec_prefill(params, batch, cfg, pcfg, mesh=None, extra_capacity: int = 0):
+    """Encode + teacher-forced decoder prefill over the target prefix."""
+
+    enc_out = encode(params, batch["frames"], cfg, pcfg, mesh)
+    tokens = batch["tokens"]
+    x, (entries, cross) = _decoder_full(
+        params, enc_out, tokens, cfg, pcfg, collect_cache=True, mesh=mesh
+    )
+    k, v = entries
+    if extra_capacity:
+        pad = [(0, 0)] * k.ndim
+        pad[2] = (0, extra_capacity)
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    dtype = common.dtype_of(cfg)
+    pos = jnp.asarray(tokens.shape[1], jnp.int32)
+    cache = EncDecCache(
+        self_kv=KVCache(
+            k=k.astype(dtype), v=v.astype(dtype), k_scale=None, v_scale=None, pos=pos
+        ),
+        cross_k=cross[0].astype(dtype),
+        cross_v=cross[1].astype(dtype),
+    )
+    logits = jnp.einsum("bsd,vd->bsv", x[:, -1:], params["embed"])
+    return logits, cache
+
+
+def encdec_decode(params, cache: EncDecCache, token, cfg, pcfg, mesh=None):
+    x = common.constrain(params["embed"][token], pcfg)
+    pos = cache.pos
+
+    def unit(x, xs):
+        lp, k_l, v_l, ck, cv = xs
+        h = common.rms_norm(x, lp["ln_attn"], cfg.norm_eps)
+        a, (k_l, v_l, _, _) = attn.attention_decode(
+            lp["attn"], h, k_l, v_l, None, None, pos, cfg, pcfg,
+            sliding_window=None, mesh=mesh,
+        )
+        x = x + a
+        h = common.rms_norm(x, lp["ln_cross"], cfg.norm_eps)
+        x = x + _cross_attention(lp["cross"], h, ck, cv, cfg)
+        h = common.rms_norm(x, lp["ln_mlp"], cfg.norm_eps)
+        x = x + mlp.mlp(lp["mlp"], h, cfg.act)
+        return x, (k_l, v_l)
+
+    xs = (params["decoder"], cache.self_kv.k, cache.self_kv.v, cache.cross_k, cache.cross_v)
+    x, (k, v) = jax.lax.scan(unit, x, xs)
+    cache = EncDecCache(
+        self_kv=KVCache(k=k, v=v, k_scale=None, v_scale=None, pos=pos + 1),
+        cross_k=cache.cross_k,
+        cross_v=cache.cross_v,
+    )
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return logits, cache

@@ -1,0 +1,248 @@
+"""MLPs: gated (SwiGLU/GeGLU) dense blocks and the mixture-of-experts block
+(top-k routing, shared experts, capacity-bounded sort-based dispatch)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+from repro.models.common import dense_init, key_iter
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+# ---------------------------------------------------------------------------
+# dense gated MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, f: int, dtype) -> common.Params:
+    ks = key_iter(key)
+    return {
+        "w_gate": dense_init(next(ks), d, (d, f), dtype),
+        "w_up": dense_init(next(ks), d, (d, f), dtype),
+        "w_down": dense_init(next(ks), f, (f, d), dtype),
+    }
+
+
+def mlp(p: common.Params, x: jax.Array, act: str) -> jax.Array:
+    a = common.activation(act)
+    g = jnp.einsum("...d,df->...f", x, p["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, p["w_up"])
+    return jnp.einsum("...f,fd->...d", a(g) * u, p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# mixture of experts
+# ---------------------------------------------------------------------------
+
+
+def init_moe(key, cfg, dtype) -> common.Params:
+    d, e, f = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = key_iter(key)
+    p = {
+        "router": dense_init(next(ks), d, (d, e), jnp.float32),
+        "w_gate": dense_init(next(ks), d, (e, d, f), dtype),
+        "w_up": dense_init(next(ks), d, (e, d, f), dtype),
+        "w_down": dense_init(next(ks), f, (e, f, d), dtype),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = init_mlp(next(ks), d, cfg.num_shared_experts * f, dtype)
+    return p
+
+
+def _pin(x: jax.Array, dims: tuple, pcfg) -> jax.Array:
+    """Constrain a MoE-internal tensor under the ambient mesh (no-op without
+    one or when a mapped dim does not divide).  ``dims`` entries: 'data'
+    (the ParallelConfig data axes), 'model', 'experts' (model axis iff
+    shard_experts), or None."""
+
+    if pcfg is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    shape = common._ambient_mesh_shape()
+    if not shape:
+        return x
+    table = {
+        "data": tuple(a for a in pcfg.data_axes if a in shape) or None,
+        "model": pcfg.model_axis if pcfg.model_axis in shape else None,
+        "experts": (
+            pcfg.model_axis
+            if pcfg.shard_experts and pcfg.model_axis in shape
+            else None
+        ),
+    }
+    out = []
+    used: set = set()
+    for dim, name in zip(x.shape, dims):
+        axes = table.get(name) if name else None
+        if axes is not None:
+            group = axes if isinstance(axes, tuple) else (axes,)
+            if used & set(group):   # a mesh axis may appear once per spec
+                axes = None
+            else:
+                n = 1
+                for a in group:
+                    n *= shape[a]
+                if n <= 1 or dim % n != 0:
+                    axes = None
+                else:
+                    used |= set(group)
+        out.append(axes)
+    if all(a is None for a in out):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*out))
+
+
+def moe_per_row(
+    p: common.Params, x: jax.Array, cfg, pcfg=None
+) -> tuple[jax.Array, dict]:
+    """Data-local MoE dispatch (§Perf B2): routing, sort and scatter run
+    independently per batch row, so the whole dispatch shards cleanly along
+    the batch/data axis — no global scatter semantics for GSPMD to resolve
+    with giant all-reduces.  Capacity is bounded per row (the per-device
+    capacity convention of production MoE systems) instead of globally.
+    """
+
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.moe_top_k
+    xt = x  # (b, s, d)
+
+    logits = jnp.einsum("bsd,de->bse", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                    # (b, s, k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    c = min(_round_up(int(cfg.capacity_factor * s * k / e) or 1, 8), s * k)
+    token_idx = jnp.repeat(jnp.arange(s), k)
+
+    def dispatch_row(x_row, flat_e):
+        order = jnp.argsort(flat_e)
+        sorted_e = flat_e[order]
+        first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+        pos_in_e = jnp.arange(s * k) - first
+        slot_sorted = sorted_e * c + pos_in_e
+        slot_sorted = jnp.where(pos_in_e < c, slot_sorted, e * c)
+        slot = jnp.zeros((s * k,), jnp.int32).at[order].set(slot_sorted.astype(jnp.int32))
+        slots = (
+            jnp.zeros((e * c, d), x_row.dtype)
+            .at[slot]
+            .add(x_row[token_idx], mode="drop")
+            .reshape(e, c, d)
+        )
+        return slots, slot
+
+    slots, slot = jax.vmap(dispatch_row)(xt, top_e.reshape(b, s * k))
+    slots = _pin(slots, ("data", "experts", None, None), pcfg)   # (b, e, c, d)
+
+    a = common.activation(cfg.act)
+    g = jnp.einsum("becd,edf->becf", slots, p["w_gate"])
+    u = jnp.einsum("becd,edf->becf", slots, p["w_up"])
+    g = _pin(g, ("data", "experts", None, "model"), pcfg)
+    u = _pin(u, ("data", "experts", None, "model"), pcfg)
+    hidden = a(g) * u
+    out_slots = jnp.einsum("becf,efd->becd", hidden, p["w_down"])
+    out_slots = _pin(out_slots, ("data", "experts", None, None), pcfg)
+    out_flat = out_slots.reshape(b, e * c, d)
+
+    def combine_row(out_row, slot_row, gate_row):
+        gathered = jnp.take(out_row, jnp.minimum(slot_row, e * c - 1), axis=0)
+        gathered = jnp.where((slot_row < e * c)[:, None], gathered, 0.0)
+        weighted = gathered * gate_row[:, None].astype(gathered.dtype)
+        return jnp.zeros((s, d), out_row.dtype).at[token_idx].add(weighted)
+
+    y = jax.vmap(combine_row)(out_flat, slot, top_p.reshape(b, s * k))
+    y = _pin(y, ("data", None, None), pcfg)
+
+    if cfg.num_shared_experts:
+        y = y + mlp(p["shared"], xt, cfg.act)
+
+    me = jnp.mean(probs, axis=(0, 1))                          # (e,)
+    ce_frac = jnp.zeros((e,)).at[top_e.reshape(-1)].add(1.0) / (b * s * k)
+    aux = {
+        "load_balance_loss": e * jnp.sum(me * ce_frac),
+        "router_z_loss": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+        "dropped_fraction": jnp.mean((slot == e * c).astype(jnp.float32)),
+    }
+    return y, aux
+
+
+def moe(
+    p: common.Params, x: jax.Array, cfg, *, capacity: int | None = None, pcfg=None
+) -> tuple[jax.Array, dict]:
+    if pcfg is not None and getattr(pcfg, "moe_dispatch", "global") == "per_row":
+        return moe_per_row(p, x, cfg, pcfg)
+    """Capacity-bounded top-k MoE.
+
+    Dispatch is sort-based (argsort by expert, position-in-expert via
+    ``searchsorted`` on the sorted ids — O(T·k log) instead of the O(T·E)
+    one-hot cumsum), then a scatter into ``(E, C, D)`` slots, one grouped
+    einsum per projection, and a gather-combine.  Overflowing tokens drop
+    (capacity factor bounds them); aux losses follow the standard
+    load-balance + z-loss recipe.
+    """
+
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.moe_top_k
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                    # (t, k)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+    if capacity is None:
+        capacity = _round_up(int(cfg.capacity_factor * t * k / e) or 1, 8)
+    c = min(capacity, t * k)
+
+    flat_e = top_e.reshape(-1)                                # (t*k,)
+    order = jnp.argsort(flat_e)                               # stable
+    sorted_e = flat_e[order]
+    # position of each dispatched token within its expert's slot block
+    first = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos_in_e = jnp.arange(t * k) - first
+    slot_sorted = sorted_e * c + pos_in_e
+    slot_sorted = jnp.where(pos_in_e < c, slot_sorted, e * c)  # overflow → dropped
+    # slot for the j-th dispatch of token i, in original order
+    slot = jnp.zeros((t * k,), jnp.int32).at[order].set(slot_sorted.astype(jnp.int32))
+
+    token_idx = jnp.repeat(jnp.arange(t), k)
+    slots = (
+        jnp.zeros((e * c, d), xt.dtype)
+        .at[slot]
+        .add(xt[token_idx], mode="drop")
+        .reshape(e, c, d)
+    )
+    # NOTE: pinning the dispatched layout here was tried and REFUTED
+    # (§Perf B1: global scatter semantics fight the constraints, collective
+    # bytes INCREASED 1.6x).  The productive fix is the data-local per-row
+    # dispatch above (§Perf B2) — this global path stays paper-plain.
+
+    a = common.activation(cfg.act)
+    g = jnp.einsum("ecd,edf->ecf", slots, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", slots, p["w_up"])
+    hidden = a(g) * u
+    out_slots = jnp.einsum("ecf,efd->ecd", hidden, p["w_down"]).reshape(e * c, d)
+
+    gathered = jnp.take(out_slots, jnp.minimum(slot, e * c - 1), axis=0)
+    gathered = jnp.where((slot < e * c)[:, None], gathered, 0.0)
+    weighted = gathered * top_p.reshape(-1)[:, None].astype(gathered.dtype)
+    y = jnp.zeros((t, d), xt.dtype).at[token_idx].add(weighted)
+
+    if cfg.num_shared_experts:
+        y = y + mlp(p["shared"], xt, cfg.act)
+
+    # aux losses (returned as metrics; weighted by the trainer)
+    me = jnp.mean(probs, axis=0)                               # (e,)
+    ce_frac = jnp.zeros((e,)).at[flat_e].add(1.0) / (t * k)
+    aux = {
+        "load_balance_loss": e * jnp.sum(me * ce_frac),
+        "router_z_loss": jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2),
+        "dropped_fraction": jnp.mean((slot == e * c).astype(jnp.float32)),
+    }
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,147 @@
+"""Mamba-2 block (SSD): projections, causal depthwise conv, SSD scan (Pallas
+kernel or chunked jnp), gated RMS norm, plus the O(1)-state decode step and
+its cache."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan import ops as ssd_ops
+from repro.models import common
+from repro.models.common import dense_init, key_iter
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class SSMCache:
+    """Per-model stacked SSM cache: ``conv`` (L, B, K-1, conv_dim) rolling
+    conv window, ``state`` (L, B, H, P, N) fp32 SSD state, ``pos`` ()."""
+
+    conv: jax.Array
+    state: jax.Array
+    pos: jax.Array
+
+    @staticmethod
+    def init(num_layers, batch, cfg, dtype=jnp.bfloat16):
+        conv_dim = cfg.ssm_d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+        return SSMCache(
+            conv=jnp.zeros((num_layers, batch, cfg.ssm_conv - 1, conv_dim), dtype),
+            state=jnp.zeros(
+                (num_layers, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                jnp.float32,
+            ),
+            pos=jnp.zeros((), jnp.int32),
+        )
+
+
+def init_mamba2(key, cfg, dtype) -> common.Params:
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    g, n, nh = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * g * n
+    ks = key_iter(key)
+    return {
+        # in_proj → [z (di), xBC (conv_dim), dt (nh)]
+        "w_in": dense_init(next(ks), d, (d, 2 * di + 2 * g * n + nh), dtype),
+        "conv_w": dense_init(next(ks), cfg.ssm_conv, (cfg.ssm_conv, conv_dim), dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(
+            jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)
+        ),  # A = -exp(a_log)
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "out_norm": common.init_rmsnorm(di, dtype),
+        "w_out": dense_init(next(ks), di, (di, d), dtype),
+    }
+
+
+def _split_proj(zxbcdt, cfg):
+    di = cfg.ssm_d_inner
+    gn = cfg.ssm_groups * cfg.ssm_state
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di : di + di + 2 * gn]
+    dt = zxbcdt[..., di + di + 2 * gn :]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, *, history=None):
+    """Depthwise causal conv over the sequence.  ``history``: (B, K-1, C)
+    left context (decode); returns (out, new_history)."""
+
+    k = conv_w.shape[0]
+    b, s, c = xbc.shape
+    if history is None:
+        history = jnp.zeros((b, k - 1, c), xbc.dtype)
+    full = jnp.concatenate([history, xbc], axis=1)             # (B, K-1+S, C)
+    out = jnp.zeros((b, s, c), jnp.float32)
+    for i in range(k):
+        out = out + full[:, i : i + s].astype(jnp.float32) * conv_w[i].astype(jnp.float32)
+    out = jax.nn.silu(out + conv_b.astype(jnp.float32)).astype(xbc.dtype)
+    new_hist = full[:, -(k - 1) :] if k > 1 else history
+    return out, new_hist
+
+
+def mamba2_full(p, x, cfg, pcfg, *, conv_history=None, return_cache=False):
+    """Full-sequence Mamba-2 block.  x: (B, S, D) → (B, S, D)."""
+
+    di = cfg.ssm_d_inner
+    g, n, nh, hp = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["w_in"])
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    xbc, new_hist = _causal_conv(xbc, p["conv_w"], p["conv_b"], history=conv_history)
+    xs = xbc[..., :di]
+    B = xbc[..., di : di + g * n].reshape(*x.shape[:2], g, n)
+    C = xbc[..., di + g * n :].reshape(*x.shape[:2], g, n)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B, S, nh)
+    A = -jnp.exp(p["a_log"])
+
+    xh = xs.reshape(*x.shape[:2], nh, hp)
+    chunk = min(128, xh.shape[1])
+    y = ssd_ops.ssd_scan(
+        xh, dt, A, B, C, chunk=chunk, impl=getattr(pcfg, "ssd_impl", "ref")
+    )
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(*x.shape[:2], di).astype(x.dtype)
+    y = common.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype),
+                        p["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["w_out"])
+    if return_cache:
+        # final SSD state for decode continuation
+        _, final_state = _final_state(xh, dt, A, B, C)
+        return out, (new_hist, final_state)
+    return out
+
+
+def _final_state(xh, dt, A, B, C):
+    from repro.kernels.ssd_scan import ref as ssd_ref
+
+    chunk = min(128, xh.shape[1])
+    return ssd_ref.ssd_chunked(xh, dt, A, B, C, chunk=chunk)
+
+
+def mamba2_decode(p, x1, conv_hist, state, cfg, pcfg):
+    """Single-token step.  x1 (B, 1, D); conv_hist (B, K-1, C); state
+    (B, H, P, N).  Returns (y (B,1,D), (conv_hist, state))."""
+
+    di = cfg.ssm_d_inner
+    g, n, nh, hp = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x1, p["w_in"])
+    z, xbc, dt = _split_proj(zxbcdt, cfg)
+    xbc, conv_hist = _causal_conv(xbc, p["conv_w"], p["conv_b"], history=conv_hist)
+    xs = xbc[:, 0, :di]
+    B = xbc[:, 0, di : di + g * n].reshape(-1, g, n)
+    C = xbc[:, 0, di + g * n :].reshape(-1, g, n)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B, nh)
+    A = -jnp.exp(p["a_log"])
+
+    xh = xs.reshape(-1, nh, hp)
+    y, state = ssd_ops.ssd_decode_step(state, xh, dt, A, B, C)
+    y = y.astype(jnp.float32) + xh.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(-1, 1, di).astype(x1.dtype)
+    y = common.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(x1.dtype),
+                        p["out_norm"], cfg.norm_eps)
+    out = jnp.einsum("bsi,id->bsd", y, p["w_out"])
+    return out, (conv_hist, state)

@@ -1,0 +1,350 @@
+"""Attention-free Mamba-2 LM (mamba2-2.7b) and the Mamba-2 + shared-attention
+hybrid (zamba2-7b)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import common, mlp, ssm
+from repro.models.attention import KVCache
+from repro.models.common import key_iter
+from repro.models.ssm import SSMCache
+
+
+# ---------------------------------------------------------------------------
+# pure SSM LM
+# ---------------------------------------------------------------------------
+
+
+def _init_ssm_layer(key, cfg, dtype):
+    return {
+        "ln": common.init_rmsnorm(cfg.d_model, dtype),
+        "mixer": ssm.init_mamba2(key, cfg, dtype),
+    }
+
+
+def init_ssm_lm(key, cfg) -> common.Params:
+    dtype = common.dtype_of(cfg)
+    ks = key_iter(key)
+    keys = jax.random.split(next(ks), cfg.num_layers)
+    return {
+        "embed": common.trunc_normal(next(ks), (cfg.padded_vocab, cfg.d_model), 1.0, dtype),
+        "final_norm": common.init_rmsnorm(cfg.d_model, dtype),
+        "layers": jax.vmap(lambda k: _init_ssm_layer(k, cfg, dtype))(keys),
+    }
+
+
+def _ssm_layer_full(lp, x, cfg, pcfg, *, collect_cache=False):
+    h = common.rms_norm(x, lp["ln"], cfg.norm_eps)
+    if collect_cache:
+        y, cache = ssm.mamba2_full(lp["mixer"], h, cfg, pcfg, return_cache=True)
+        return x + y, cache
+    return x + ssm.mamba2_full(lp["mixer"], h, cfg, pcfg), None
+
+
+def _maybe_remat(fn, pcfg):
+    if pcfg.remat == "none":
+        return fn
+    if pcfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+def ssm_lm_loss(params, batch, cfg, pcfg, mesh=None):
+    tokens = batch["tokens"]
+    x = params["embed"][tokens]
+
+    def unit(x, lp):
+        x = common.constrain(x, pcfg)
+        x, _ = _ssm_layer_full(lp, x, cfg, pcfg)
+        return x, ()
+
+    x = common.constrain(x, pcfg)
+    x, _ = jax.lax.scan(_maybe_remat(unit, pcfg), x, params["layers"])
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    logits = common.constrain(logits, pcfg, logits=True)
+    loss = common.cross_entropy(logits[:, :-1], tokens[:, 1:])
+    return loss, {"loss": loss}
+
+
+def ssm_lm_prefill(params, batch, cfg, pcfg, mesh=None, extra_capacity: int = 0):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = common.constrain(params["embed"][tokens], pcfg)
+
+    def unit(x, lp):
+        x = common.constrain(x, pcfg)
+        x, cache = _ssm_layer_full(lp, x, cfg, pcfg, collect_cache=True)
+        return x, cache
+
+    x = common.constrain(x, pcfg)
+    x, caches = jax.lax.scan(_maybe_remat(unit, pcfg), x, params["layers"])
+    conv_hist, state = caches
+    cache = SSMCache(
+        conv=conv_hist.astype(common.dtype_of(cfg)),
+        state=state,
+        pos=jnp.asarray(s, jnp.int32),
+    )
+    x = common.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return logits, cache
+
+
+def ssm_lm_decode(params, cache: SSMCache, token, cfg, pcfg, mesh=None):
+    x = common.constrain(params["embed"][token], pcfg)
+
+    def unit(x, xs):
+        lp, conv_l, state_l = xs
+        h = common.rms_norm(x, lp["ln"], cfg.norm_eps)
+        y, (conv_l, state_l) = ssm.mamba2_decode(lp["mixer"], h, conv_l, state_l, cfg, pcfg)
+        return x + y, (conv_l, state_l)
+
+    x, (conv, state) = jax.lax.scan(unit, x, (params["layers"], cache.conv, cache.state))
+    cache = SSMCache(conv=conv, state=state, pos=cache.pos + 1)
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# hybrid (zamba2): Mamba-2 backbone + one shared attention block applied
+# every `attn_every` layers (weights shared across applications)
+# ---------------------------------------------------------------------------
+
+
+def _hybrid_split(cfg) -> tuple[int, int]:
+    groups = cfg.num_layers // cfg.attn_every
+    rest = cfg.num_layers - groups * cfg.attn_every
+    return groups, rest
+
+
+def init_hybrid_lm(key, cfg) -> common.Params:
+    dtype = common.dtype_of(cfg)
+    ks = key_iter(key)
+    groups, rest = _hybrid_split(cfg)
+    params: common.Params = {
+        "embed": common.trunc_normal(next(ks), (cfg.padded_vocab, cfg.d_model), 1.0, dtype),
+        "final_norm": common.init_rmsnorm(cfg.d_model, dtype),
+        "ssm_layers": jax.vmap(lambda k: _init_ssm_layer(k, cfg, dtype))(
+            jax.random.split(next(ks), groups * cfg.attn_every)
+        ),
+        "shared_attn": {
+            "ln_attn": common.init_rmsnorm(cfg.d_model, dtype),
+            "attn": attn.init_attention(next(ks), cfg, dtype),
+            "ln_mlp": common.init_rmsnorm(cfg.d_model, dtype),
+            "mlp": mlp.init_mlp(next(ks), cfg.d_model, cfg.d_ff, dtype),
+        },
+    }
+    # reshape stacked ssm layers into (groups, per_group) scan-of-scan layout
+    params["ssm_layers"] = jax.tree.map(
+        lambda a: a.reshape((groups, cfg.attn_every) + a.shape[1:]), params["ssm_layers"]
+    )
+    if rest:
+        rkeys = jax.random.split(next(ks), rest)
+        params["ssm_tail"] = jax.vmap(lambda k: _init_ssm_layer(k, cfg, dtype))(rkeys)
+    return params
+
+
+def _shared_attn_full(sp, x, cfg, pcfg, *, positions, mesh, collect_cache):
+    h = common.rms_norm(x, sp["ln_attn"], cfg.norm_eps)
+    if collect_cache:
+        a, entry = attn.attention_prefill(
+            sp["attn"], h, cfg, pcfg, positions=positions, sliding_window=None, mesh=mesh
+        )
+    else:
+        a = attn.attention_full(
+            sp["attn"], h, cfg, pcfg, positions=positions, sliding_window=None, mesh=mesh
+        )
+        entry = None
+    x = x + a
+    h = common.rms_norm(x, sp["ln_mlp"], cfg.norm_eps)
+    return x + mlp.mlp(sp["mlp"], h, cfg.act), entry
+
+
+def hybrid_lm_loss(params, batch, cfg, pcfg, mesh=None):
+    tokens = batch["tokens"]
+    x = params["embed"][tokens]
+    positions = jnp.arange(tokens.shape[1])
+    groups, rest = _hybrid_split(cfg)
+
+    def group_unit(x, glp):
+        x = common.constrain(x, pcfg)
+        x, _ = _shared_attn_full(
+            params["shared_attn"], x, cfg, pcfg, positions=positions, mesh=mesh,
+            collect_cache=False,
+        )
+
+        def inner(x, lp):
+            x, _ = _ssm_layer_full(lp, x, cfg, pcfg)
+            return x, ()
+
+        x, _ = jax.lax.scan(inner, x, glp)
+        return x, ()
+
+    x, _ = jax.lax.scan(_maybe_remat(group_unit, pcfg), x, params["ssm_layers"])
+    if rest:
+        def inner_tail(x, lp):
+            x, _ = _ssm_layer_full(lp, x, cfg, pcfg)
+            return x, ()
+
+        x, _ = jax.lax.scan(_maybe_remat(inner_tail, pcfg), x, params["ssm_tail"])
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    logits = common.constrain(logits, pcfg, logits=True)
+    loss = common.cross_entropy(logits[:, :-1], tokens[:, 1:])
+    return loss, {"loss": loss}
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class HybridCache:
+    attn: KVCache          # (groups, B, S, Hk, Dh)
+    ssm: SSMCache          # (groups*per + rest, ...)
+
+    @property
+    def pos(self):
+        return self.ssm.pos
+
+
+def init_hybrid_cache(cfg, pcfg, batch: int, length: int) -> HybridCache:
+    groups, rest = _hybrid_split(cfg)
+    return HybridCache(
+        attn=KVCache.init(
+            groups, batch, length, cfg.num_kv_heads, cfg.head_dim,
+            dtype=common.dtype_of(cfg), quantized=pcfg.kv_cache_dtype == "int8",
+        ),
+        ssm=SSMCache.init(cfg.num_layers, batch, cfg, common.dtype_of(cfg)),
+    )
+
+
+def hybrid_lm_prefill(params, batch, cfg, pcfg, mesh=None, extra_capacity: int = 0):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = common.constrain(params["embed"][tokens], pcfg)
+    positions = jnp.arange(s)
+    groups, rest = _hybrid_split(cfg)
+
+    def group_unit(x, glp):
+        x = common.constrain(x, pcfg)
+        x, entry = _shared_attn_full(
+            params["shared_attn"], x, cfg, pcfg, positions=positions, mesh=mesh,
+            collect_cache=True,
+        )
+
+        def inner(x, lp):
+            x, cache = _ssm_layer_full(lp, x, cfg, pcfg, collect_cache=True)
+            return x, cache
+
+        x, ssm_caches = jax.lax.scan(inner, x, glp)
+        return x, (entry, ssm_caches)
+
+    x, (attn_entries, ssm_caches) = jax.lax.scan(
+        _maybe_remat(group_unit, pcfg), x, params["ssm_layers"]
+    )
+    conv_hist, state = ssm_caches  # (groups, per, B, ...) — flatten groups
+    conv_hist = conv_hist.reshape((-1,) + conv_hist.shape[2:])
+    state = state.reshape((-1,) + state.shape[2:])
+    if rest:
+        def inner_tail(x, lp):
+            x, cache = _ssm_layer_full(lp, x, cfg, pcfg, collect_cache=True)
+            return x, cache
+
+        x, tail_caches = jax.lax.scan(inner_tail, x, params["ssm_tail"])
+        conv_hist = jnp.concatenate([conv_hist, tail_caches[0]], axis=0)
+        state = jnp.concatenate([state, tail_caches[1]], axis=0)
+
+    pos = jnp.asarray(s, jnp.int32)
+    quant = pcfg.kv_cache_dtype == "int8"
+    k, v = attn_entries
+    if extra_capacity:
+        pad = [(0, 0)] * k.ndim
+        pad[2] = (0, extra_capacity)
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    if quant:
+        kq, ksc = attn._quantize_kv(k)
+        vq, vsc = attn._quantize_kv(v)
+        kv = KVCache(k=kq, v=vq, k_scale=ksc, v_scale=vsc, pos=pos)
+    else:
+        dtype = common.dtype_of(cfg)
+        kv = KVCache(k=k.astype(dtype), v=v.astype(dtype), k_scale=None, v_scale=None, pos=pos)
+    cache = HybridCache(
+        attn=kv,
+        ssm=SSMCache(conv=conv_hist.astype(common.dtype_of(cfg)), state=state, pos=pos),
+    )
+    x = common.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return logits, cache
+
+
+def hybrid_lm_decode(params, cache: HybridCache, token, cfg, pcfg, mesh=None):
+    x = common.constrain(params["embed"][token], pcfg)
+    pos = cache.pos
+    groups, rest = _hybrid_split(cfg)
+    per = cfg.attn_every
+
+    ssm_conv_g = cache.ssm.conv[: groups * per].reshape((groups, per) + cache.ssm.conv.shape[1:])
+    ssm_state_g = cache.ssm.state[: groups * per].reshape(
+        (groups, per) + cache.ssm.state.shape[1:]
+    )
+
+    def group_unit(x, xs):
+        glp, k_l, v_l, ks_l, vs_l, conv_g, state_g = xs
+        h = common.rms_norm(x, params["shared_attn"]["ln_attn"], cfg.norm_eps)
+        a, (k_l, v_l, ks_l, vs_l) = attn.attention_decode(
+            params["shared_attn"]["attn"], h, k_l, v_l, ks_l, vs_l, pos, cfg, pcfg,
+            sliding_window=None, mesh=mesh,
+        )
+        x = x + a
+        h = common.rms_norm(x, params["shared_attn"]["ln_mlp"], cfg.norm_eps)
+        x = x + mlp.mlp(params["shared_attn"]["mlp"], h, cfg.act)
+
+        def inner(x, ixs):
+            lp, conv_l, state_l = ixs
+            h = common.rms_norm(x, lp["ln"], cfg.norm_eps)
+            y, (conv_l, state_l) = ssm.mamba2_decode(lp["mixer"], h, conv_l, state_l, cfg, pcfg)
+            return x + y, (conv_l, state_l)
+
+        x, (conv_g, state_g) = jax.lax.scan(inner, x, (glp, conv_g, state_g))
+        return x, (k_l, v_l, ks_l, vs_l, conv_g, state_g)
+
+    xs = (
+        params["ssm_layers"],
+        cache.attn.k,
+        cache.attn.v,
+        cache.attn.k_scale,
+        cache.attn.v_scale,
+        ssm_conv_g,
+        ssm_state_g,
+    )
+    x, (k, v, ksc, vsc, conv_g, state_g) = jax.lax.scan(group_unit, x, xs)
+    conv = conv_g.reshape((-1,) + conv_g.shape[2:])
+    state = state_g.reshape((-1,) + state_g.shape[2:])
+    if rest:
+        def inner_tail(x, ixs):
+            lp, conv_l, state_l = ixs
+            h = common.rms_norm(x, lp["ln"], cfg.norm_eps)
+            y, (conv_l, state_l) = ssm.mamba2_decode(lp["mixer"], h, conv_l, state_l, cfg, pcfg)
+            return x + y, (conv_l, state_l)
+
+        x, (conv_t, state_t) = jax.lax.scan(
+            inner_tail, x, (params["ssm_tail"], cache.ssm.conv[groups * per :],
+                            cache.ssm.state[groups * per :])
+        )
+        conv = jnp.concatenate([conv, conv_t], axis=0)
+        state = jnp.concatenate([state, state_t], axis=0)
+
+    new_cache = HybridCache(
+        attn=KVCache(k=k, v=v, k_scale=ksc, v_scale=vsc, pos=pos + 1),
+        ssm=SSMCache(conv=conv, state=state, pos=pos + 1),
+    )
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    return logits, new_cache

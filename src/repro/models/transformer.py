@@ -1,0 +1,460 @@
+"""Decoder-only LM trunk: dense (qwen/phi4/granite), local-global alternating
+with softcaps (gemma-2), MoE (grok-1), MLA+MoE (deepseek-v2) and prefix-LM
+VLM (paligemma) — all as scanned layer stacks with train / prefill / decode
+entry points."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import common, mlp
+from repro.models.attention import KVCache, MLACache
+from repro.models.common import dense_init, key_iter
+
+
+# ---------------------------------------------------------------------------
+# layer units
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, cfg, dtype, *, kind: str) -> common.Params:
+    """One residual block: attention + (dense|moe) MLP with pre-norms
+    (+ gemma-2 post-norms)."""
+
+    ks = key_iter(key)
+    p: common.Params = {
+        "ln_attn": common.init_rmsnorm(cfg.d_model, dtype),
+        "ln_mlp": common.init_rmsnorm(cfg.d_model, dtype),
+    }
+    if cfg.post_norms:
+        p["ln_attn_post"] = common.init_rmsnorm(cfg.d_model, dtype)
+        p["ln_mlp_post"] = common.init_rmsnorm(cfg.d_model, dtype)
+    p["attn"] = (
+        attn.init_mla(next(ks), cfg, dtype) if cfg.mla else attn.init_attention(next(ks), cfg, dtype)
+    )
+    if kind == "moe":
+        p["mlp"] = mlp.init_moe(next(ks), cfg, dtype)
+    else:
+        p["mlp"] = mlp.init_mlp(next(ks), cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _block_full(
+    p, x, cfg, pcfg, *, kind, sliding_window, positions, prefix_len, mesh, collect_cache
+):
+    """Full-sequence block.  Returns (x, cache_entry, aux)."""
+
+    h = common.rms_norm(x, p["ln_attn"], cfg.norm_eps)
+    cache_entry = None
+    if cfg.mla:
+        if collect_cache:
+            a, cache_entry = attn.mla_attention_full(
+                p["attn"], h, cfg, pcfg, positions=positions, mesh=mesh, return_cache=True
+            )
+        else:
+            a = attn.mla_attention_full(p["attn"], h, cfg, pcfg, positions=positions, mesh=mesh)
+    elif collect_cache:
+        a, cache_entry = attn.attention_prefill(
+            p["attn"], h, cfg, pcfg, positions=positions,
+            sliding_window=sliding_window, prefix_len=prefix_len, mesh=mesh,
+        )
+    else:
+        a = attn.attention_full(
+            p["attn"], h, cfg, pcfg, positions=positions,
+            sliding_window=sliding_window, prefix_len=prefix_len, mesh=mesh,
+        )
+    if cfg.post_norms:
+        a = common.rms_norm(a, p["ln_attn_post"], cfg.norm_eps)
+    x = x + a
+
+    h = common.rms_norm(x, p["ln_mlp"], cfg.norm_eps)
+    aux = {}
+    if kind == "moe":
+        m, aux = mlp.moe(p["mlp"], h, cfg, pcfg=pcfg)
+    else:
+        m = mlp.mlp(p["mlp"], h, cfg.act)
+    if cfg.post_norms:
+        m = common.rms_norm(m, p["ln_mlp_post"], cfg.norm_eps)
+    return x + m, cache_entry, aux
+
+
+def _block_decode(p, x1, cache_slices, pos, cfg, pcfg, *, kind, sliding_window, mesh):
+    """Single-token block.  ``cache_slices``: layer slices of the cache
+    arrays.  Returns (x1, new_cache_slices)."""
+
+    h = common.rms_norm(x1, p["ln_attn"], cfg.norm_eps)
+    if cfg.mla:
+        ckv_l, krope_l = cache_slices
+        a, new_slices = attn.mla_attention_decode(
+            p["attn"], h, ckv_l, krope_l, pos, cfg, pcfg, mesh=mesh
+        )
+    else:
+        k_l, v_l, ks_l, vs_l = cache_slices
+        a, new_slices = attn.attention_decode(
+            p["attn"], h, k_l, v_l, ks_l, vs_l, pos, cfg, pcfg,
+            sliding_window=sliding_window, mesh=mesh,
+        )
+    if cfg.post_norms:
+        a = common.rms_norm(a, p["ln_attn_post"], cfg.norm_eps)
+    x1 = x1 + a
+
+    h = common.rms_norm(x1, p["ln_mlp"], cfg.norm_eps)
+    if kind == "moe":
+        m, _ = mlp.moe(p["mlp"], h, cfg, pcfg=pcfg)
+    else:
+        m = mlp.mlp(p["mlp"], h, cfg.act)
+    if cfg.post_norms:
+        m = common.rms_norm(m, p["ln_mlp_post"], cfg.norm_eps)
+    return x1 + m, new_slices
+
+
+# ---------------------------------------------------------------------------
+# layer-stack layout
+# ---------------------------------------------------------------------------
+
+
+def _unit_plan(cfg) -> list[tuple[str, str, int | None]]:
+    """The sub-layers of one scan unit: list of (name, kind, window)."""
+
+    if cfg.layer_pattern == "local_global":
+        return [
+            ("local", _mlp_kind(cfg), cfg.sliding_window),
+            ("global", _mlp_kind(cfg), None),
+        ]
+    return [("layer", _mlp_kind(cfg), cfg.sliding_window)]
+
+
+def _mlp_kind(cfg) -> str:
+    return "moe" if cfg.num_experts else "dense"
+
+
+def _num_units(cfg) -> int:
+    n_scanned = cfg.num_layers - cfg.first_dense_layers
+    per_unit = len(_unit_plan(cfg))
+    assert n_scanned % per_unit == 0, (cfg.num_layers, per_unit)
+    return n_scanned // per_unit
+
+
+def _stacked_init(key, cfg, dtype, n: int, kind: str):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _init_block(k, cfg, dtype, kind=kind))(keys)
+
+
+def init_lm(key, cfg) -> common.Params:
+    dtype = common.dtype_of(cfg)
+    ks = key_iter(key)
+    params: common.Params = {
+        "embed": common.trunc_normal(next(ks), (cfg.padded_vocab, cfg.d_model), 1.0, dtype),
+        "final_norm": common.init_rmsnorm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(
+            next(ks), cfg.d_model, (cfg.d_model, cfg.padded_vocab), dtype
+        )
+    n_units = _num_units(cfg)
+    units: common.Params = {}
+    for name, kind, _ in _unit_plan(cfg):
+        units[name] = _stacked_init(next(ks), cfg, dtype, n_units, kind)
+    params["layers"] = units
+    for i in range(cfg.first_dense_layers):
+        params[f"dense_{i}"] = _init_block(next(ks), cfg, dtype, kind="dense")
+    if cfg.family == "vlm":
+        # multimodal projector (SigLIP stub dim 1152 → d_model)
+        params["mm_proj"] = dense_init(next(ks), 1152, (1152, cfg.d_model), dtype)
+    return params
+
+
+def _maybe_remat(fn, pcfg):
+    if pcfg.remat == "none":
+        return fn
+    if pcfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+
+def _embed(params, tokens, cfg):
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def _head(params, x, cfg, pcfg=None):
+    x = common.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    sub = "bsd,vd->bsv" if cfg.tie_embeddings else "bsd,dv->bsv"
+    logits = jnp.einsum(sub, x, w)
+    if pcfg is not None:
+        logits = common.constrain(logits, pcfg, logits=True)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+
+def _prepare_inputs(params, batch: dict, cfg):
+    """tokens (+ image embeds for VLM) → (x, positions, prefix_len)."""
+
+    tokens = batch["tokens"]
+    x = _embed(params, tokens, cfg)
+    prefix_len = None
+    if cfg.family == "vlm":
+        img = jnp.einsum("bnf,fd->bnd", batch["image_embeds"].astype(x.dtype),
+                         params["mm_proj"])
+        x = jnp.concatenate([img, x], axis=1)
+        prefix_len = cfg.num_image_tokens if cfg.prefix_lm else None
+    positions = jnp.arange(x.shape[1])
+    return x, positions, prefix_len
+
+
+def lm_forward(params, batch: dict, cfg, pcfg, mesh=None) -> tuple[jax.Array, dict]:
+    """Full-sequence forward → (logits, aux metrics)."""
+
+    x, positions, prefix_len = _prepare_inputs(params, batch, cfg)
+    x = common.constrain(x, pcfg)
+    aux_acc = {"load_balance_loss": 0.0, "router_z_loss": 0.0, "dropped_fraction": 0.0}
+
+    for i in range(cfg.first_dense_layers):
+        x, _, _ = _block_full(
+            params[f"dense_{i}"], x, cfg, pcfg, kind="dense", sliding_window=None,
+            positions=positions, prefix_len=prefix_len, mesh=mesh, collect_cache=False,
+        )
+
+    plan = _unit_plan(cfg)
+
+    def unit(x, unit_params):
+        aux_l = {}
+        x = common.constrain(x, pcfg)
+        for name, kind, window in plan:
+            x, _, aux = _block_full(
+                unit_params[name], x, cfg, pcfg, kind=kind, sliding_window=window,
+                positions=positions, prefix_len=prefix_len, mesh=mesh, collect_cache=False,
+            )
+            x = common.constrain(x, pcfg)
+            for k_, v_ in aux.items():
+                aux_l[k_] = aux_l.get(k_, 0.0) + v_
+        return x, aux_l
+
+    x, aux_layers = jax.lax.scan(_maybe_remat(unit, pcfg), x, params["layers"])
+    if aux_layers:
+        for k_ in aux_acc:
+            if k_ in aux_layers:
+                aux_acc[k_] = jnp.sum(aux_layers[k_])
+    logits = _head(params, x, cfg, pcfg)
+    return logits, aux_acc
+
+
+def lm_loss(params, batch: dict, cfg, pcfg, mesh=None) -> tuple[jax.Array, dict]:
+    logits, aux = lm_forward(params, batch, cfg, pcfg, mesh)
+    tokens = batch["tokens"]
+    if cfg.family == "vlm":
+        # labels cover only the text region (image prefix contributes no loss)
+        logits = logits[:, cfg.num_image_tokens :]
+    loss = common.cross_entropy(
+        logits[:, :-1], tokens[:, 1:], softcap_val=cfg.final_logit_softcap
+    )
+    if cfg.num_experts:
+        loss = loss + 1e-2 * aux["load_balance_loss"] + 1e-3 * aux["router_z_loss"]
+    metrics = {"loss": loss, **{k: jnp.asarray(v) for k, v in aux.items()}}
+    return loss, metrics
+
+
+# -- caches -------------------------------------------------------------------
+
+
+def init_cache(cfg, pcfg, batch: int, length: int) -> dict[str, Any]:
+    """Cache pytree for decode: one entry per unit sub-layer name."""
+
+    n_units = _num_units(cfg)
+    dtype = common.dtype_of(cfg)
+    quant = pcfg.kv_cache_dtype == "int8"
+    caches: dict[str, Any] = {}
+    if cfg.mla:
+        caches["layer"] = MLACache.init(
+            n_units, batch, length, cfg.kv_lora, cfg.rope_head_dim, dtype
+        )
+        for i in range(cfg.first_dense_layers):
+            caches[f"dense_{i}"] = MLACache.init(
+                1, batch, length, cfg.kv_lora, cfg.rope_head_dim, dtype
+            )
+        return caches
+    for name, _, window in _unit_plan(cfg):
+        cap = min(length, window) if window else length
+        caches[name] = KVCache.init(
+            n_units, batch, cap, cfg.num_kv_heads, cfg.head_dim, dtype=dtype, quantized=quant
+        )
+    for i in range(cfg.first_dense_layers):
+        caches[f"dense_{i}"] = KVCache.init(
+            1, batch, length, cfg.num_kv_heads, cfg.head_dim, dtype=dtype, quantized=quant
+        )
+    return caches
+
+
+def _cache_xs(cache):
+    if isinstance(cache, MLACache):
+        return (cache.ckv, cache.k_rope)
+    return (cache.k, cache.v, cache.k_scale, cache.v_scale)
+
+
+def _cache_rebuild(cache, new_xs, pos):
+    if isinstance(cache, MLACache):
+        return MLACache(ckv=new_xs[0], k_rope=new_xs[1], pos=pos)
+    return KVCache(k=new_xs[0], v=new_xs[1], k_scale=new_xs[2], v_scale=new_xs[3], pos=pos)
+
+
+def lm_prefill(params, batch: dict, cfg, pcfg, mesh=None, extra_capacity: int = 0):
+    """Prefill: full forward that also builds the cache.  Returns
+    (last-token logits, cache dict)."""
+
+    x, positions, prefix_len = _prepare_inputs(params, batch, cfg)
+    x = common.constrain(x, pcfg)
+    seq = x.shape[1]
+    caches: dict[str, Any] = {}
+
+    for i in range(cfg.first_dense_layers):
+        x, entry, _ = _block_full(
+            params[f"dense_{i}"], x, cfg, pcfg, kind="dense", sliding_window=None,
+            positions=positions, prefix_len=prefix_len, mesh=mesh, collect_cache=True,
+        )
+        caches[f"dense_{i}"] = _entry_to_cache(
+            entry, cfg, pcfg, stack=True, extra=extra_capacity
+        )
+
+    plan = _unit_plan(cfg)
+
+    def unit(x, unit_params):
+        entries = {}
+        x = common.constrain(x, pcfg)
+        for name, kind, window in plan:
+            x, entry, _ = _block_full(
+                unit_params[name], x, cfg, pcfg, kind=kind, sliding_window=window,
+                positions=positions, prefix_len=prefix_len, mesh=mesh, collect_cache=True,
+            )
+            x = common.constrain(x, pcfg)
+            entries[name] = entry
+        return x, entries
+
+    x, entries = jax.lax.scan(_maybe_remat(unit, pcfg), x, params["layers"])
+    for name, _, window in plan:
+        # windowed layers use a fixed ring buffer — no headroom needed
+        extra = 0 if (window is not None and seq > window) else extra_capacity
+        caches[name] = _entry_to_cache(entries[name], cfg, pcfg, stack=False, extra=extra)
+    pos = jnp.asarray(seq, jnp.int32)
+    caches = {k_: dataclasses.replace(v, pos=pos) for k_, v in caches.items()}
+    logits = _head(params, x[:, -1:], cfg, pcfg)
+    if cfg.final_logit_softcap:
+        logits = common.softcap(logits, cfg.final_logit_softcap)
+    return logits, caches
+
+
+def _pad_seq(arr, extra: int):
+    """Decode headroom: grow the cache's sequence axis (axis 2 of the
+    stacked layout) by ``extra`` zero slots so decode never writes past
+    capacity (dynamic_update_slice clamps silently otherwise)."""
+
+    if not extra:
+        return arr
+    widths = [(0, 0)] * arr.ndim
+    widths[2] = (0, extra)
+    return jnp.pad(arr, widths)
+
+
+def _entry_to_cache(entry, cfg, pcfg, *, stack: bool, extra: int = 0):
+    quant = pcfg.kv_cache_dtype == "int8"
+    dtype = common.dtype_of(cfg)
+    pos = jnp.zeros((), jnp.int32)
+    if cfg.mla:
+        ckv, krope = entry
+        if stack:
+            ckv, krope = ckv[None], krope[None]
+        ckv, krope = _pad_seq(ckv, extra), _pad_seq(krope, extra)
+        return MLACache(ckv=ckv.astype(dtype), k_rope=krope.astype(dtype), pos=pos)
+    k, v = entry
+    if stack:
+        k, v = k[None], v[None]
+    k, v = _pad_seq(k, extra), _pad_seq(v, extra)
+    if quant:
+        kq, ksc = attn._quantize_kv(k)
+        vq, vsc = attn._quantize_kv(v)
+        return KVCache(k=kq, v=vq, k_scale=ksc, v_scale=vsc, pos=pos)
+    return KVCache(k=k.astype(dtype), v=v.astype(dtype), k_scale=None, v_scale=None, pos=pos)
+
+
+def lm_decode(params, caches: dict, token: jax.Array, cfg, pcfg, mesh=None):
+    """One decode step.  token: (B, 1) int32.  Returns (logits, caches)."""
+
+    pos = next(iter(caches.values())).pos
+    x = _embed(params, token, cfg)
+    x = common.constrain(x, pcfg)
+    if cfg.family == "vlm":
+        pass  # image prefix already lives in the cache
+
+    for i in range(cfg.first_dense_layers):
+        c = caches[f"dense_{i}"]
+        slices = tuple(None if a is None else a[0] for a in _cache_xs(c))
+        x, new_slices = _block_decode(
+            params[f"dense_{i}"], x, slices, pos, cfg, pcfg,
+            kind="dense", sliding_window=None, mesh=mesh,
+        )
+        new_xs = tuple(
+            None if old is None else new[None]
+            for old, new in zip(_cache_xs(c), _pad_none(new_slices, _cache_xs(c)))
+        )
+        caches[f"dense_{i}"] = _cache_rebuild(c, new_xs, pos + 1)
+
+    plan = _unit_plan(cfg)
+
+    def unit(x, xs):
+        unit_params = xs["params"]
+        new_entries = {}
+        x = common.constrain(x, pcfg)
+        for name, kind, window in plan:
+            slices = xs[name]
+            x, new_slices = _block_decode(
+                unit_params[name], x, slices, pos, cfg, pcfg,
+                kind=kind, sliding_window=window, mesh=mesh,
+            )
+            new_entries[name] = new_slices
+        return x, new_entries
+
+    xs = {"params": params["layers"]}
+    for name, _, _w in plan:
+        xs[name] = _cache_xs(caches[name])
+    x, new_entries = jax.lax.scan(unit, x, xs)
+    for name, _, _w in plan:
+        c = caches[name]
+        new_xs = _pad_none(new_entries[name], _cache_xs(c))
+        caches[name] = _cache_rebuild(c, new_xs, pos + 1)
+    logits = _head(params, x, cfg, pcfg)
+    if cfg.final_logit_softcap:
+        logits = common.softcap(logits, cfg.final_logit_softcap)
+    return logits, caches
+
+
+def _pad_none(new_slices, template):
+    out = []
+    it = iter(new_slices)
+    for t in template:
+        if t is None:
+            out.append(None)
+            # consume the matching None from new_slices
+            n = next(it)
+            assert n is None
+        else:
+            out.append(next(it))
+    return tuple(out)

@@ -1,0 +1,8 @@
+"""Optimizer substrate: AdamW with sharded (and optionally 8-bit) moments,
+LR schedules, global-norm clipping, and gradient synchronisation built on the
+``repro.core`` interface (hierarchical / compressed cross-pod reduction)."""
+
+from repro.optim.adamw import AdamW, AdamWState  # noqa: F401
+from repro.optim.schedules import constant, cosine_warmup, linear_warmup  # noqa: F401
+from repro.optim.grad_sync import sync_gradients  # noqa: F401
+from repro.optim.clip import clip_by_global_norm, global_norm  # noqa: F401

@@ -1,0 +1,138 @@
+"""AdamW with sharded moments and optional 8-bit moment storage.
+
+The moment pytrees inherit the parameters' shardings (FSDP: optimizer state
+is sharded exactly like the weights — ZeRO-style, for free under GSPMD).
+``moment_dtype='int8'`` stores both moments block-quantized (per-block absmax
+scales, the kernels/quant scheme) and dequantizes on use — 4x optimizer-state
+memory reduction, the standard trick for fitting 300B-scale optimizer state
+(grok-1 / deepseek-v2 cells).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant import ops as quant
+
+Params = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class _Q8:
+    """A block-quantized tensor (int8 payload + fp32 per-block scales)."""
+
+    q: jax.Array
+    scale: jax.Array
+    meta: tuple[int, tuple[int, ...]] = dataclasses.field(
+        metadata=dict(static=True), default=(0, ())
+    )  # (pad, shape)
+
+
+def _q8_of(x: jax.Array) -> _Q8:
+    """SHAPE-PRESERVING int8 storage: payload keeps the parameter's shape
+    (scales per last axis).  Flattened payloads were tried and refuted at
+    scale (§Perf B5): a sharded 1-D buffer reshaped back to the parameter
+    shape forces an all-gather, replicating 2·N f32 bytes of dequantized
+    moments per device.  Shape-preserving storage inherits the parameter
+    sharding through every elementwise step instead."""
+
+    if x.ndim == 0:
+        return _Q8(q=x.astype(jnp.int8), scale=jnp.ones((), jnp.float32),
+                   meta=(0, tuple(x.shape)))
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return _Q8(q=q, scale=scale, meta=(0, tuple(x.shape)))
+
+
+def _q8_read(z: _Q8) -> jax.Array:
+    if not z.meta[1]:
+        return z.q.astype(jnp.float32)
+    return z.q.astype(jnp.float32) * z.scale
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamWState:
+    step: jax.Array
+    mu: Params
+    nu: Params
+
+
+def _moment_store(x: jax.Array, dtype: str):
+    if dtype == "int8":
+        return _q8_of(x)
+    return x.astype(jnp.dtype(dtype))
+
+
+def _moment_read(z) -> jax.Array:
+    if isinstance(z, _Q8):
+        return _q8_read(z)
+    return z.astype(jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    """Functional AdamW: ``init(params) -> state``; ``update`` returns new
+    (params, state).  ``lr`` may be a float or a ``step -> lr`` schedule."""
+
+    lr: float | Callable = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: str = "float32"   # float32 | bfloat16 | int8
+
+    def init(self, params: Params) -> AdamWState:
+        zeros = jax.tree.map(
+            lambda p: _moment_store(jnp.zeros(p.shape, jnp.float32), self.moment_dtype),
+            params,
+        )
+        zeros2 = jax.tree.map(
+            lambda p: _moment_store(jnp.zeros(p.shape, jnp.float32), self.moment_dtype),
+            params,
+        )
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros, nu=zeros2)
+
+    def _lr_at(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr, jnp.float32)
+
+    def update(
+        self, grads: Params, state: AdamWState, params: Params
+    ) -> tuple[Params, AdamWState]:
+        step = state.step + 1
+        lr = self._lr_at(step)
+        b1, b2 = self.b1, self.b2
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        is_q8 = lambda x: isinstance(x, _Q8)
+
+        def upd(p, g, mu_z, nu_z):
+            g = g.astype(jnp.float32)
+            mu = b1 * _moment_read(mu_z) + (1 - b1) * g
+            nu = b2 * _moment_read(nu_z) + (1 - b2) * g * g
+            mu_hat = mu / bc1
+            nu_hat = nu / bc2
+            step_dir = mu_hat / (jnp.sqrt(nu_hat) + self.eps)
+            if p.ndim >= 1:  # decoupled decay on matrices/vectors, not scalars
+                step_dir = step_dir + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * step_dir).astype(p.dtype)
+            return new_p, _moment_store(mu, self.moment_dtype), _moment_store(
+                nu, self.moment_dtype
+            )
+
+        flat_p, treedef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_mu = treedef.flatten_up_to(state.mu)
+        flat_nu = treedef.flatten_up_to(state.nu)
+        out = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_mu = treedef.unflatten([o[1] for o in out])
+        new_nu = treedef.unflatten([o[2] for o in out])
+        return new_p, AdamWState(step=step, mu=new_mu, nu=new_nu)

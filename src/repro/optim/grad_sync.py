@@ -1,0 +1,96 @@
+"""Gradient synchronisation through the ``repro.core`` interface.
+
+Under pure ``jit`` (GSPMD), gradient reduction is implicit in the partitioned
+backward pass; this module is the *explicit* path used when the trainer runs
+data-parallel replicas under ``shard_map`` — and the home of the cross-pod
+distributed-optimization tricks:
+
+* hierarchical reduction (reduce-scatter intra-pod, all-reduce inter-pod,
+  all-gather intra-pod) so only 1/inner_size of the payload crosses DCN;
+* int8 compression with **error feedback** (EF-SGD, Karimireddy et al.):
+  each rank compresses its *message* ``m = g + e``, transmits the compressed
+  form, and carries the compression error ``e' = m - C(m)`` into the next
+  step — which preserves SGD convergence under biased compressors;
+* bucketed flattening via the datatype layer: one collective per dtype group
+  instead of one per tensor (the MPI derived-datatype lesson applied to
+  gradients).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import datatypes
+from repro.core.communicator import Communicator
+from repro.core.descriptors import Compression
+from repro.core.overlap import hierarchical_allreduce
+from repro.kernels.quant import ops as quant
+
+Params = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ErrorFeedbackState:
+    residual: Params  # same treedef as grads (fp32 leaves)
+
+    @classmethod
+    def init(cls, grads: Params) -> "ErrorFeedbackState":
+        return cls(residual=jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads))
+
+
+def _compress_with_feedback(g: jax.Array, e: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """EF step for one leaf: returns (C(g+e) dequantized, new residual)."""
+
+    m = g.astype(jnp.float32) + e
+    flat = m.reshape(-1)
+    q, scale, pad = quant.quantize_int8(flat)
+    cm = quant.dequantize_int8(q, scale, pad, flat.shape, jnp.float32).reshape(m.shape)
+    return cm, m - cm
+
+
+def sync_gradients(
+    grads: Params,
+    inner: Communicator,
+    outer: Communicator | None = None,
+    *,
+    compression: Compression = Compression.NONE,
+    ef: ErrorFeedbackState | None = None,
+    mean: bool = True,
+) -> tuple[Params, ErrorFeedbackState | None]:
+    """All-reduce a gradient pytree across data-parallel ranks.
+
+    Single fabric (``outer is None``): one bucketed all-reduce per dtype
+    group.  Two fabrics: hierarchical reduction; with ``compression=INT8``
+    the inter-pod stage additionally moves int8 payloads, and — when ``ef``
+    is provided — the rank-local message is error-feedback compressed first.
+    Returns (synchronised grads, new error-feedback state).
+    """
+
+    n_total = inner.size() * (outer.size() if outer is not None else 1)
+    scale = 1.0 / n_total if mean else 1.0
+
+    new_ef = ef
+    if compression is Compression.INT8 and ef is not None:
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_e = treedef.flatten_up_to(ef.residual)
+        pairs = [_compress_with_feedback(g, e) for g, e in zip(flat_g, flat_e)]
+        grads = treedef.unflatten([p[0] for p in pairs])
+        new_ef = ErrorFeedbackState(residual=treedef.unflatten([p[1] for p in pairs]))
+
+    def reduce_leaf(g):
+        if outer is None:
+            return jax.lax.psum(g, inner.axis_names)
+        return hierarchical_allreduce(g, inner, outer, compression=compression)
+
+    # bucketed: pack the whole pytree into per-dtype buffers, reduce each once
+    bufs, dtype_desc = datatypes.pack(grads)
+    reduced = [reduce_leaf(b) for b in bufs]
+    synced = datatypes.unpack(reduced, dtype_desc)
+
+    out = jax.tree.map(lambda s: (s.astype(jnp.float32) * scale).astype(s.dtype), synced)
+    return out, new_ef

@@ -1,0 +1,6 @@
+"""Training/serving runtime: step loops, fault tolerance (checkpoint/restart
+with failure injection), straggler mitigation, elastic rescale, metrics."""
+
+from repro.runtime.trainer import Trainer, TrainerConfig  # noqa: F401
+from repro.runtime.server import Server, ServerConfig  # noqa: F401
+from repro.runtime.faults import FaultInjector, StragglerPolicy  # noqa: F401

@@ -1,0 +1,6 @@
+from repro.sharding.rules import (  # noqa: F401
+    batch_spec,
+    cache_specs,
+    logical_to_spec,
+    param_specs,
+)

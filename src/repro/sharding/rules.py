@@ -1,0 +1,185 @@
+"""Sharding rules: logical axis names → PartitionSpecs.
+
+Every parameter leaf gets a spec derived from its *path* (what it is) and the
+:class:`~repro.configs.base.ParallelConfig` plan:
+
+* FSDP — the largest weight dimension shards over the data axes
+  (``('pod','data')`` multi-pod), gathered per layer by GSPMD (or the
+  overlap futures when ``overlap_fsdp``);
+* TP — heads / d_ff / vocab over the ``model`` axis where divisible;
+* EP — the expert dimension over ``model`` when ``shard_experts``;
+* caches — batch over data axes; heads or sequence over ``model`` per
+  ``seq_shard_cache``;
+* anything indivisible stays replicated on that axis (checked numerically,
+  never silently wrong — GSPMD refuses non-divisible shardings).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return int(mesh.shape[axes])
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    return dim % _axis_size(mesh, axes) == 0
+
+
+def logical_to_spec(
+    logical: tuple[str | None, ...], shape: tuple[int, ...], mesh: Mesh, pcfg
+) -> P:
+    """Map logical dim names to mesh axes, dropping non-divisible mappings."""
+
+    table: dict[str, Any] = {
+        "batch": pcfg.data_axes,
+        "fsdp": pcfg.data_axes if pcfg.fsdp else None,
+        "model": pcfg.model_axis,
+        "experts": pcfg.model_axis if pcfg.shard_experts else None,
+        "seq_model": pcfg.model_axis,
+    }
+    out = []
+    for name, dim in zip(logical, shape):
+        axes = table.get(name) if name else None
+        if axes is not None and not _fits(dim, mesh, axes):
+            axes = None
+        out.append(axes)
+    return P(*out)
+
+
+def param_specs(params: Any, mesh: Mesh, pcfg) -> Any:
+    """Specs for a parameter pytree by leaf path conventions."""
+
+    def spec_for(path: tuple, leaf) -> P:
+        names = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        name = names[-1] if names else ""
+        shape = np.shape(leaf)
+        nd = len(shape)
+        # stacked layers add a leading scan dim: never shard it
+        lead: tuple[str | None, ...] = ()
+        core = shape
+        if any(n in ("layers", "ssm_layers", "encoder", "decoder", "ssm_tail") for n in names):
+            k_lead = 2 if "ssm_layers" in names else 1  # (groups, per) for hybrid
+            lead = (None,) * min(k_lead, nd)
+            core = shape[len(lead):]
+
+        logical = _logical_for(name, names, core, pcfg)
+        return logical_to_spec(lead + logical, shape, mesh, pcfg)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def _logical_for(name: str, names: list[str], core: tuple[int, ...], pcfg):
+    nd = len(core)
+    tp_heads = pcfg.attn_plan == "tp_heads"
+    if name == "embed":
+        return ("model", "fsdp")
+    if name == "lm_head":
+        return ("fsdp", "model")
+    if name == "mm_proj":
+        return ("fsdp", "model") if nd == 2 else (None,) * nd
+    if name in ("wq", "wk", "wv"):
+        # (d, heads, head_dim)
+        return ("fsdp", "model" if tp_heads else None, None)
+    if name == "wo":
+        return ("model" if tp_heads else None, None, "fsdp")
+    if name in ("bq", "bk", "bv"):
+        return ("model" if tp_heads else None, None)
+    # MLA
+    if name == "wq_a":
+        return ("fsdp", "model")
+    if name == "wq_b":
+        return ("fsdp", "model" if tp_heads else None, None)
+    if name == "wkv_a":
+        return ("fsdp", None)
+    if name in ("wk_b", "wv_b"):
+        return ("fsdp", "model" if tp_heads else None, None)
+    # MLPs (dense): (d, f) / (f, d); MoE adds leading expert dim
+    if name in ("w_gate", "w_up"):
+        if nd == 3:
+            return ("experts", "fsdp", None if pcfg.shard_experts else "model")
+        return ("fsdp", "model")
+    if name == "w_down":
+        if nd == 3:
+            return ("experts", None if pcfg.shard_experts else "model", "fsdp")
+        return ("model", "fsdp")
+    if name == "router":
+        return ("fsdp", None)
+    # mamba2
+    if name == "w_in":
+        return ("fsdp", "model")
+    if name == "w_out":
+        return ("model", "fsdp")
+    if name in ("conv_w", "conv_b"):
+        return (None,) * (nd - 1) + ("model",)
+    return (None,) * nd
+
+
+def batch_spec(batch: Any, mesh: Mesh, pcfg) -> Any:
+    """Input batch: leading batch dim over the data axes (replicate when it
+    does not divide, e.g. long_500k's batch of 1)."""
+
+    def spec_for(leaf):
+        shape = np.shape(leaf)
+        if not shape:
+            return P()
+        return logical_to_spec(("batch",) + (None,) * (len(shape) - 1), shape, mesh, pcfg)
+
+    return jax.tree_util.tree_map(spec_for, batch)
+
+
+def cache_specs(cache: Any, mesh: Mesh, pcfg, cfg) -> Any:
+    """KV / SSM / latent caches.
+
+    Layout (L, B, S, H, D) for KV; batch over data axes; then either heads
+    over model (tp) or sequence over model (``seq_shard_cache``); SSM states
+    (L, B, H, P, N) shard heads over model.
+    """
+
+    def spec_for(path: tuple, leaf) -> P:
+        names = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+        name = names[-1] if names else ""
+        shape = np.shape(leaf)
+        nd = len(shape)
+        if nd == 0:
+            return P()
+        if name in ("conv",):
+            return logical_to_spec(
+                (None, "batch", None, "model"), shape, mesh, pcfg
+            )
+        if name in ("state",):
+            return logical_to_spec(
+                (None, "batch", "model", None, None), shape, mesh, pcfg
+            )
+        if name in ("ckv", "k_rope"):
+            seq = "seq_model" if pcfg.seq_shard_cache else None
+            return logical_to_spec((None, "batch", seq, None), shape, mesh, pcfg)
+        if name in ("k", "v", "k_scale", "v_scale", "cross_k", "cross_v"):
+            if pcfg.seq_shard_cache:
+                return logical_to_spec(
+                    (None, "batch", "seq_model", None, None)[:nd], shape, mesh, pcfg
+                )
+            return logical_to_spec(
+                (None, "batch", None, "model", None)[:nd], shape, mesh, pcfg
+            )
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec_for, cache)
+
+
+def shardings(tree_specs: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,64 @@
+"""Shared test fixtures.
+
+NOTE: no XLA_FLAGS here — the main pytest process sees ONE CPU device by
+design (the dry-run is the only place that forces 512).  Multi-device
+behaviour is tested through ``run_with_devices``, which re-execs a code
+snippet in a subprocess with a virtual-device count set before jax imports.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+
+
+def run_with_devices(code: str, n: int = 8, timeout: int = 900) -> str:
+    """Run ``code`` in a fresh python with ``n`` virtual CPU devices."""
+
+    env = {
+        **os.environ,
+        "XLA_FLAGS": f"--xla_force_host_platform_device_count={n}",
+        "PYTHONPATH": str(ROOT / "src"),
+    }
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True,
+        text=True,
+        env=env,
+        timeout=timeout,
+        cwd=str(ROOT),
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode})\n--- stdout\n{proc.stdout}"
+            f"\n--- stderr\n{proc.stderr[-4000:]}"
+        )
+    return proc.stdout
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_with_devices
+
+
+@pytest.fixture()
+def tiny_dense_cfg():
+    from repro.configs.base import ModelConfig
+
+    return ModelConfig(
+        name="tiny", family="dense", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256,
+    )
+
+
+@pytest.fixture()
+def pcfg():
+    from repro.configs.base import ParallelConfig
+
+    return ParallelConfig()

@@ -1,0 +1,85 @@
+"""Spec-level coverage of all 40 (arch × shape) cells: input stand-ins and
+shardings build for the production mesh shape without device allocation or
+compilation (the compile path itself is exercised by launch/dryrun.py and
+test_dryrun_integration.py)."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import base
+from repro.models import api as model_api
+from repro.sharding import rules
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH_MP = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def _axis_size(mesh, axes):
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _check(specs, tree, mesh):
+    for spec, leaf in zip(
+        (s for s in _iter_specs(specs)), (l for l in _iter_leaves(tree))
+    ):
+        shape = np.shape(leaf)
+        for dim, axes in zip(shape, tuple(spec)):
+            if axes is None:
+                continue
+            assert dim % _axis_size(mesh, axes) == 0, (shape, spec)
+
+
+def _iter_specs(specs):
+    import jax
+
+    return jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def _iter_leaves(tree):
+    import jax
+
+    return jax.tree.leaves(tree)
+
+
+@pytest.mark.parametrize("mesh,multi_pod", [(MESH, False), (MESH_MP, True)])
+@pytest.mark.parametrize("arch", base.ARCHITECTURES)
+def test_all_cells_spec_level(arch, mesh, multi_pod):
+    import jax
+
+    from repro.launch import specs as lspecs
+
+    cfg = base.get_config(arch)
+    pcfg = base.get_parallel(arch, multi_pod=multi_pod)
+    bundle = model_api.build(cfg)
+    params = lspecs.param_structs(bundle)
+    pspecs = rules.param_specs(params, mesh, pcfg)
+    _check(pspecs, params, mesh)
+
+    for shape_name, shape in base.SHAPES.items():
+        ok, why = base.shape_applicable(cfg, shape)
+        if not ok:
+            assert "full-attention" in why
+            continue
+        if shape.kind in ("train", "prefill"):
+            batch = lspecs.batch_structs(cfg, shape, with_labels=shape.kind == "train")
+            bspecs = rules.batch_spec(batch, mesh, pcfg)
+            _check(bspecs, batch, mesh)
+            # token budget sanity: the cell's global tokens are as assigned
+            toks = batch["tokens"].shape
+            if cfg.family == "vlm":
+                assert toks[1] + cfg.num_image_tokens == shape.seq_len
+            else:
+                assert toks == (shape.global_batch, shape.seq_len)
+        else:
+            cache = lspecs.cache_structs(bundle, cfg, pcfg, shape)
+            cspecs = rules.cache_specs(cache, mesh, pcfg, cfg)
+            _check(cspecs, cache, mesh)
+            n_leaves = len(jax.tree.leaves(cache))
+            assert n_leaves >= 2, (arch, shape_name)

@@ -1,0 +1,106 @@
+"""Trainer integration: loss decreases on the synthetic Markov stream,
+checkpoint/restart resumes, injected worker failures recover, stragglers are
+re-dispatched."""
+
+from __future__ import annotations
+
+import jax
+import pytest
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.launch.mesh import make_host_mesh
+from repro.runtime.faults import FaultInjector, StepGuard, StragglerPolicy, WorkerFailure
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def _tiny_cfg():
+    return ModelConfig(
+        name="tiny", family="dense", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=128,
+    )
+
+
+def _trainer(tmp_path=None, steps=30, injector=None, straggler=None):
+    tcfg = TrainerConfig(
+        steps=steps,
+        lr=1e-3,
+        checkpoint_dir=str(tmp_path) if tmp_path else None,
+        checkpoint_every=10,
+        log_every=5,
+    )
+    return Trainer(
+        _tiny_cfg(), ParallelConfig(), tcfg, make_host_mesh(),
+        seq_len=64, global_batch=4, injector=injector, straggler=straggler,
+    )
+
+
+def test_loss_decreases():
+    t = _trainer(steps=40)
+    result = t.run()
+    losses = [m["loss"] for m in result["metrics"]]
+    assert losses[-1] < losses[0] - 0.1, losses
+
+
+def test_checkpoint_restart_resumes(tmp_path):
+    t1 = _trainer(tmp_path, steps=20)
+    r1 = t1.run()
+    assert r1["final_step"] == 20
+
+    # a fresh trainer resumes from the saved step instead of restarting
+    t2 = _trainer(tmp_path, steps=25)
+    r2 = t2.run()
+    assert r2["final_step"] == 25
+    first_logged = r2["metrics"][0]["step"] if r2["metrics"] else 25
+    assert first_logged > 20
+
+
+def test_worker_failure_recovers(tmp_path):
+    injector = FaultInjector(fail_at_steps=(7,))
+    t = _trainer(tmp_path, steps=15, injector=injector)
+    result = t.run()
+    assert result["restarts"] == 1
+    assert result["final_step"] == 15
+
+
+def test_unrecoverable_after_max_restarts(tmp_path):
+    injector = FaultInjector(fail_at_steps=(3, 4, 5, 6, 7, 8, 9))
+    t = _trainer(tmp_path, steps=15, injector=injector)
+    t.tcfg.max_restarts = 2
+    with pytest.raises(WorkerFailure):
+        t.run()
+
+
+def test_straggler_redispatch():
+    import time
+
+    calls = {"n": 0}
+
+    def slow_then_fast():
+        calls["n"] += 1
+        time.sleep(0.25 if calls["n"] == 1 else 0.02)
+        return calls["n"]
+
+    guard = StepGuard(StragglerPolicy(deadline_factor=5.0, min_samples=3, max_retries=1))
+    # seed the moving median with ~20ms steps
+    for s in range(5):
+        guard.run(s, lambda: time.sleep(0.02))
+    out, info = guard.run(10, slow_then_fast)
+    assert info["attempts"] == 2      # the straggling step was re-dispatched
+    assert out == 2
+
+
+def test_elastic_remesh_restore(tmp_path):
+    """Checkpoint written under one mesh restores under a different
+    data-parallel size (elastic rescale)."""
+
+    t1 = _trainer(tmp_path, steps=10)
+    t1.run()
+
+    cfg = _tiny_cfg()
+    tcfg = TrainerConfig(steps=12, checkpoint_dir=str(tmp_path), checkpoint_every=50)
+    # "rescaled" mesh: same devices, different logical split (1 device here,
+    # but the restore path re-shards through device_put either way)
+    t2 = Trainer(cfg, ParallelConfig(), tcfg, make_host_mesh(model=1),
+                 seq_len=64, global_batch=4)
+    r2 = t2.run()
+    assert r2["final_step"] == 12
