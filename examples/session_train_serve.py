@@ -1,0 +1,77 @@
+"""Sessions in anger: trainer and server on disjoint process sets.
+
+The MPI 4.0 pitch made concrete — one platform, two workloads, neither ever
+touches ``world()``.  A session enumerates the devices, the first half is
+registered as ``repro://train`` and the second as ``repro://serve``; the
+Trainer and the Server each build their communicator from *their* group
+with ``Communicator.from_group``, so training steps and decode steps run on
+disjoint hardware.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/session_train_serve.py
+"""
+
+import numpy as np
+
+from repro import core as mpx
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.runtime.server import Request, Server, ServerConfig
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def tiny_cfg() -> ModelConfig:
+    return ModelConfig(
+        name="tiny", family="dense", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=128,
+    )
+
+
+def main():
+    sess = mpx.Session.init()
+    world = sess.group("repro://world")
+    n = world.size()
+    print(f"session: {sess} — psets: {sess.psets()}")
+
+    half = max(1, n // 2)
+    sess.register_pset("repro://train", world.incl(range(half)))
+    sess.register_pset("repro://serve", world.difference(world.incl(range(half))) or world)
+
+    train_comm = mpx.Communicator.from_group(
+        sess.group("repro://train"),
+        tag="repro://train",
+        shape=(half, 1),
+        axis_names=("data", "model"),
+    )
+    serve_group = sess.group("repro://serve")
+    serve_comm = mpx.Communicator.from_group(
+        serve_group,
+        tag="repro://serve",
+        shape=(serve_group.size(), 1),
+        axis_names=("data", "model"),
+    )
+    overlap = train_comm.group().intersection(serve_comm.group())
+    print(f"train: {train_comm}\nserve: {serve_comm}\n"
+          f"overlapping devices: {overlap.size()} (expect 0 with >1 device)")
+
+    cfg, pcfg = tiny_cfg(), ParallelConfig()
+    trainer = Trainer(
+        cfg, pcfg, TrainerConfig(steps=10, lr=1e-3, log_every=5),
+        train_comm, seq_len=64, global_batch=4,
+    )
+    result = trainer.run()
+    print(f"trained to step {result['final_step']}: "
+          f"loss {result['metrics'][-1]['loss']:.4f}")
+
+    server = Server(cfg, pcfg, ServerConfig(max_batch=4, max_new_tokens=8), serve_comm)
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(tokens=rng.integers(1, cfg.vocab_size, size=(16,), dtype=np.int32))
+        for _ in range(4)
+    ]
+    tokens, stats = server.generate(reqs)
+    print(f"served {tokens.shape} tokens at {stats['tokens_per_s']:.1f} tok/s "
+          f"on {serve_comm.size()} devices")
+
+
+if __name__ == "__main__":
+    main()

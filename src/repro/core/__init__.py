@@ -1,25 +1,40 @@
 """repro.core — a modern JAX interface for XLA collective communication.
 
 The paper's contribution ("A C++20 Interface for MPI 4.0") adapted to the
-TPU/XLA substrate: communicators over mesh axes, automatic datatype
-generation by aggregate reflection, requests as futures with continuations
-(and compiler-visible overlap), scoped enums + description objects +
-meaningful defaults, opt-in trace-time error checking, parallel IO and the
-tool (pvar/cvar) interface.  See DESIGN.md for the full mapping.
+TPU/XLA substrate: the MPI 4.0 Sessions model (process sets → groups →
+``Communicator.from_group``), communicators over mesh axes, automatic
+datatype generation by aggregate reflection, requests as futures with
+continuations (and compiler-visible overlap), scoped enums + description
+objects + meaningful defaults, opt-in trace-time error checking, parallel IO
+and the tool (pvar/cvar) interface.  See DESIGN.md (repo root) for the full
+mapping.
 
 Conventional import::
 
     from repro import core as mpx
 
-    comm = mpx.world()
+    comm = mpx.world()          # shim over Session → "repro://world" → Group
 
     @comm.spmd
     def program():
         data = jnp.zeros(())
         return comm.broadcast(data, root=0)
+
+Session-first construction (heterogeneous workloads on one platform)::
+
+    sess = mpx.Session.init()
+    half = sess.group("repro://world").incl(range(4))
+    comm = mpx.Communicator.from_group(half, tag="repro://train")
 """
 
 from repro.core import errors  # noqa: F401
+from repro.core.session import (  # noqa: F401
+    UNDEFINED,
+    Group,
+    GroupComparison,
+    Session,
+    default_session,
+)
 from repro.core.communicator import Communicator, world  # noqa: F401
 from repro.core.datatypes import (  # noqa: F401
     DataType,

@@ -1,0 +1,97 @@
+"""JAX version compatibility for the mesh/shard_map substrate.
+
+The interface targets current JAX (``jax.shard_map``, ``check_vma``,
+``jax.sharding.AxisType``) but must also run on older installs where
+``shard_map`` lives in ``jax.experimental`` (``check_rep``) and ``make_mesh``
+has no ``axis_types``.  Everything that builds a mesh or enters SPMD routes
+through here so the rest of the codebase stays version-free.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import jax
+
+_HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+_HAS_TOPLEVEL_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def make_mesh(
+    shape: Sequence[int],
+    axis_names: Sequence[str],
+    *,
+    devices: Sequence[Any] | None = None,
+) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with ``Auto`` axis types where supported."""
+
+    shape, axis_names = tuple(shape), tuple(axis_names)
+    if _HAS_AXIS_TYPE:
+        try:
+            return jax.make_mesh(
+                shape,
+                axis_names,
+                devices=devices,
+                axis_types=(jax.sharding.AxisType.Auto,) * len(shape),
+            )
+        except TypeError:  # axis_types kwarg not accepted on this version
+            pass
+    return jax.make_mesh(shape, axis_names, devices=devices)
+
+
+def mesh_from_devices(device_array, axis_names: Sequence[str]) -> jax.sharding.Mesh:
+    """Build a ``Mesh`` from an already-arranged device array, preserving the
+    caller's device order exactly (``make_mesh`` may reorder for physical
+    topology, which would break group-rank ↔ device contracts)."""
+
+    axis_names = tuple(axis_names)
+    if _HAS_AXIS_TYPE:
+        try:
+            return jax.sharding.Mesh(
+                device_array,
+                axis_names,
+                axis_types=(jax.sharding.AxisType.Auto,) * len(axis_names),
+            )
+        except TypeError:
+            pass
+    return jax.sharding.Mesh(device_array, axis_names)
+
+
+def abstract_mesh(
+    shape: Sequence[int], axis_names: Sequence[str]
+) -> "jax.sharding.AbstractMesh":
+    """``AbstractMesh`` across the (axis_sizes, axis_names) /
+    tuple-of-(name, size)-pairs signature change."""
+
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(shape), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, shape)))
+
+
+def shard_map(
+    fn: Callable,
+    *,
+    mesh: jax.sharding.Mesh,
+    in_specs: Any,
+    out_specs: Any,
+) -> Callable:
+    """``shard_map`` without replication/varying-manual-axes checking,
+    wherever the implementation lives on this JAX."""
+
+    if _HAS_TOPLEVEL_SHARD_MAP:
+        try:
+            return jax.shard_map(
+                fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False
+            )
+        except TypeError:  # exported before the check_rep -> check_vma rename
+            return jax.shard_map(
+                fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+            )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+    )

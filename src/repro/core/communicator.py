@@ -1,4 +1,4 @@
-"""Communicators (paper §II, C1/C4).
+"""Communicators (paper §II, C1/C4 — and MPI 4.0 §11 Sessions).
 
 ``mpi::communicator`` wraps an ``MPI_Comm`` with managed/unmanaged lifetime.
 The TPU analogue of a communicator is *a mesh plus a subset of its named
@@ -6,10 +6,20 @@ axes*: collectives address devices through axis names, sub-communicators are
 axis subsets (``MPI_Comm_split`` along topology dimensions), and "world" is a
 1-axis mesh over all devices.
 
+Construction follows the Sessions model (:mod:`repro.core.session`): a
+:class:`~repro.core.session.Session` names process sets, a pset yields an
+immutable :class:`~repro.core.session.Group`, and
+:meth:`Communicator.from_group` — the ``MPI_Comm_create_from_group``
+analogue — is the **single canonical constructor**.  Every other path routes
+through it: :func:`world` is a shim over the default session's
+``repro://world`` pset, :meth:`Communicator.create` wraps its devices in a
+group first, and :meth:`split`/:meth:`dup` derive their results from the
+parent's group via the group algebra.
+
 Lifetime semantics mirror the paper:
 
 * **managed** — the communicator built the mesh itself (``world()``,
-  ``Communicator.create``) and owns it;
+  ``Communicator.create``, ``Communicator.from_group``) and owns it;
 * **unmanaged** — it wraps a mesh owned by someone else (a training runtime's
   mesh) and must not outlive it.
 * copy construction is deleted (Python: no implicit copies are taken); ``dup``
@@ -30,7 +40,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.core import errors
+from repro.core import _compat, errors
+from repro.core.session import Group, GroupComparison, default_session
 
 
 def _flat_axis_index(axis_names: tuple[str, ...], mesh: Mesh):
@@ -44,6 +55,15 @@ def _flat_axis_index(axis_names: tuple[str, ...], mesh: Mesh):
     return idx
 
 
+def _axis_name_from_tag(tag: str) -> str:
+    """Default mesh axis name for a pset tag: its last path component,
+    sanitised to an identifier (``repro://world`` → ``world``)."""
+
+    leaf = tag.rsplit("/", 1)[-1] if tag else ""
+    name = "".join(c if c.isalnum() or c == "_" else "_" for c in leaf)
+    return name or "ranks"
+
+
 class Communicator:
     """A named-axis communicator over a :class:`jax.sharding.Mesh`."""
 
@@ -53,6 +73,7 @@ class Communicator:
         axis_names: Sequence[str] | str | None = None,
         *,
         managed: bool = False,
+        tag: str = "",
     ):
         if isinstance(axis_names, str):
             axis_names = (axis_names,)
@@ -68,12 +89,71 @@ class Communicator:
         self.mesh = mesh
         self.axis_names = axis_names
         self.managed = managed
+        self.tag = tag
 
     # -- lifetime ----------------------------------------------------------
 
     @classmethod
+    def from_group(
+        cls,
+        group: Group,
+        *,
+        tag: str = "",
+        shape: Sequence[int] | None = None,
+        axis_names: Sequence[str] | None = None,
+    ) -> "Communicator":
+        """``MPI_Comm_create_from_group``: the canonical constructor.
+
+        Builds (and owns) a fresh mesh over exactly the group's devices.  By
+        default the mesh is one axis named after ``tag``
+        (``repro://world`` → axis ``world``); pass ``shape``/``axis_names``
+        to fold the group onto a multi-axis sub-grid (group rank order is
+        row-major over the axes).
+        """
+
+        errors.check(
+            isinstance(group, Group),
+            errors.ErrorClass.ERR_GROUP,
+            f"from_group needs a Group, got {type(group).__name__}",
+        )
+        errors.check(
+            group.size() > 0,
+            errors.ErrorClass.ERR_GROUP,
+            "cannot build a communicator from the empty group",
+        )
+        if shape is None:
+            shape = (group.size(),)
+        shape = tuple(int(s) for s in shape)
+        errors.check(
+            math.prod(shape) == group.size(),
+            errors.ErrorClass.ERR_DIMS,
+            f"shape {shape} does not fold a group of {group.size()} devices",
+        )
+        if axis_names is None:
+            errors.check(
+                len(shape) == 1,
+                errors.ErrorClass.ERR_DIMS,
+                "multi-axis from_group needs explicit axis_names",
+            )
+            axis_names = (_axis_name_from_tag(tag),)
+        axis_names = tuple(axis_names)
+        errors.check(
+            len(axis_names) == len(shape),
+            errors.ErrorClass.ERR_DIMS,
+            f"{len(axis_names)} axis names for a {len(shape)}-dim shape {shape}",
+        )
+        # Mesh is built directly from the group's own device order (never via
+        # make_mesh, which may permute for physical topology): rank r in the
+        # group IS the device holding trace-level rank r, row-major.
+        mesh = _compat.mesh_from_devices(
+            np.array(group.devices, dtype=object).reshape(shape), axis_names
+        )
+        return cls(mesh, axis_names, managed=True, tag=tag)
+
+    @classmethod
     def create(cls, shape: Sequence[int], axis_names: Sequence[str], devices=None):
-        """Managed constructor: builds (and owns) a fresh mesh."""
+        """Managed constructor: wraps ``devices[:prod(shape)]`` in a group
+        and routes through :meth:`from_group`."""
 
         devices = devices if devices is not None else jax.devices()
         n = math.prod(shape)
@@ -82,18 +162,15 @@ class Communicator:
             errors.ErrorClass.ERR_DIMS,
             f"mesh of {n} devices requested, {len(devices)} available",
         )
-        mesh = jax.make_mesh(
-            tuple(shape),
-            tuple(axis_names),
-            devices=devices[:n],
-            axis_types=(jax.sharding.AxisType.Auto,) * len(tuple(shape)),
+        return cls.from_group(
+            Group(devices[:n]), shape=shape, axis_names=tuple(axis_names)
         )
-        return cls(mesh, axis_names, managed=True)
 
     def dup(self) -> "Communicator":
-        """``MPI_Comm_dup`` analogue (the only sanctioned copy)."""
+        """``MPI_Comm_dup`` analogue (the only sanctioned copy): a new
+        handle over the same group and topology (``MPI_IDENT``)."""
 
-        return Communicator(self.mesh, self.axis_names, managed=False)
+        return Communicator(self.mesh, self.axis_names, managed=False, tag=self.tag)
 
     def __copy__(self):  # copy ctor is "deleted"
         errors.fail(
@@ -125,14 +202,82 @@ class Communicator:
     def split(self, *axis_names: str) -> "Communicator":
         """``MPI_Comm_split`` along topology axes: the returned communicator
         spans ``axis_names``; ranks differing in the *other* axes land in
-        different sub-communicators (the color)."""
+        different sub-communicators (the color).
 
-        return Communicator(self.mesh, axis_names, managed=False)
+        The split is group-routed: each color's process set is derived from
+        this communicator's group, and (under error checking) the colors are
+        asserted to partition it — pairwise disjoint, union identical — a
+        consistency check on the group/mesh indexing, not on user input.
+        """
 
-    def group(self) -> tuple[str, ...]:
-        """The axis-name group (``MPI_Comm_group`` analogue)."""
+        for a in axis_names:
+            errors.check(
+                a in self.axis_names,
+                errors.ErrorClass.ERR_TOPOLOGY,
+                f"split axis {a!r} not spanned by this communicator "
+                f"(axes: {self.axis_names})",
+            )
+        child = Communicator(self.mesh, axis_names, managed=False, tag=self.tag)
+        if errors.error_checking_enabled():
+            # colors of THIS communicator's group: vary the parent axes the
+            # child dropped (other mesh axes stay at self.group()'s color 0)
+            dropped = tuple(a for a in self.axis_names if a not in axis_names)
+            colors = [
+                child.group(**dict(zip(dropped, idx)))
+                for idx in np.ndindex(*(self.mesh.shape[a] for a in dropped))
+            ]
+            merged = Group()
+            for i, g in enumerate(colors):
+                errors.check(
+                    not (merged & g),
+                    errors.ErrorClass.ERR_GROUP,
+                    f"split color {i} overlaps a previous color",
+                )
+                merged = merged | g
+            errors.check(
+                merged.compare(self.group()) is not GroupComparison.UNEQUAL,
+                errors.ErrorClass.ERR_GROUP,
+                "split colors must partition the communicator group",
+            )
+        return child
 
-        return self.axis_names
+    def _color_axes(self) -> tuple[str, ...]:
+        """Mesh axes *not* spanned by this communicator (the color axes)."""
+
+        return tuple(a for a in self.mesh.axis_names if a not in self.axis_names)
+
+    def group(self, **coords: int) -> Group:
+        """``MPI_Comm_group``: the process set of this communicator.
+
+        For a split communicator the group depends on the color; fix the
+        complement axes with keyword coordinates (``comm.split("model")
+        .group(data=1)``), defaulting to color 0.  Rank *r* in the group is
+        the device that holds trace-level :meth:`rank` ``r``.
+        """
+
+        for a in coords:
+            errors.check(
+                a in self._color_axes(),
+                errors.ErrorClass.ERR_TOPOLOGY,
+                f"{a!r} is not a color axis of this communicator "
+                f"(color axes: {self._color_axes()})",
+            )
+        index = []
+        for a in self.mesh.axis_names:
+            if a in self.axis_names:
+                index.append(slice(None))
+            else:
+                c = int(coords.get(a, 0))
+                errors.check(
+                    0 <= c < self.mesh.shape[a],
+                    errors.ErrorClass.ERR_DIMS,
+                    f"color {c} out of range for axis {a!r} of size {self.mesh.shape[a]}",
+                )
+                index.append(c)
+        sub = self.mesh.devices[tuple(index)]
+        remaining = [a for a in self.mesh.axis_names if a in self.axis_names]
+        sub = np.transpose(sub, [remaining.index(a) for a in self.axis_names])
+        return Group(sub.reshape(-1))
 
     # -- SPMD region launcher ----------------------------------------------
 
@@ -162,12 +307,11 @@ class Communicator:
                 donate_argnums=donate_argnums,
                 static_argnums=static_argnums,
             )
-        mapped = jax.shard_map(
+        mapped = _compat.shard_map(
             fn,
             mesh=self.mesh,
             in_specs=in_specs,
             out_specs=out_specs,
-            check_vma=False,
         )
         if jit:
             mapped = jax.jit(
@@ -190,7 +334,8 @@ class Communicator:
 
     def __repr__(self):
         kind = "managed" if self.managed else "unmanaged"
-        return f"Communicator(axes={self.axis_names}, size={self.size()}, {kind})"
+        tag = f", tag={self.tag!r}" if self.tag else ""
+        return f"Communicator(axes={self.axis_names}, size={self.size()}, {kind}{tag})"
 
 
 _WORLD: Communicator | None = None
@@ -199,14 +344,18 @@ _WORLD: Communicator | None = None
 def world(refresh: bool = False) -> Communicator:
     """The ``mpi::world_communicator`` analogue: one axis over all devices.
 
-    Managed singleton; ``refresh=True`` rebuilds it (e.g. after an elastic
-    resize changed the device set).
+    A thin shim over the Sessions model — the default session's
+    ``repro://world`` pset, turned into a group, handed to
+    :meth:`Communicator.from_group`.  Managed singleton; ``refresh=True``
+    rebuilds it (e.g. after an elastic resize changed the device set).
     """
 
     global _WORLD
     if _WORLD is None or refresh:
-        n = len(jax.devices())
-        _WORLD = Communicator.create((n,), ("world",))
+        sess = default_session(refresh=refresh)
+        _WORLD = Communicator.from_group(
+            sess.group("repro://world"), tag="repro://world"
+        )
     return _WORLD
 
 

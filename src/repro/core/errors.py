@@ -40,6 +40,7 @@ class ErrorClass(enum.IntEnum):
     ERR_IO = 39
     ERR_WIN = 45
     ERR_UNSUPPORTED_OPERATION = 52
+    ERR_SESSION = 78
     ERR_OTHER = 16
 
 
@@ -119,6 +120,14 @@ class UnsupportedError(Error):
     klass = ErrorClass.ERR_UNSUPPORTED_OPERATION
 
 
+class GroupError(Error):
+    klass = ErrorClass.ERR_GROUP
+
+
+class SessionError(Error):
+    klass = ErrorClass.ERR_SESSION
+
+
 #: ``mpi::error`` namespace analogue — default codes as scoped variables.
 buffer = ErrorClass.ERR_BUFFER
 count = ErrorClass.ERR_COUNT
@@ -135,6 +144,8 @@ truncate = ErrorClass.ERR_TRUNCATE
 file = ErrorClass.ERR_FILE
 io = ErrorClass.ERR_IO
 win = ErrorClass.ERR_WIN
+group = ErrorClass.ERR_GROUP
+session = ErrorClass.ERR_SESSION
 other = ErrorClass.ERR_OTHER
 
 
@@ -155,6 +166,8 @@ _CLASS_TO_EXC: dict[ErrorClass, Any] = {
     ErrorClass.ERR_IO: IoError,
     ErrorClass.ERR_WIN: WinError,
     ErrorClass.ERR_UNSUPPORTED_OPERATION: UnsupportedError,
+    ErrorClass.ERR_GROUP: GroupError,
+    ErrorClass.ERR_SESSION: SessionError,
 }
 
 

@@ -55,10 +55,14 @@ class Future:
         """``MPI_Wait`` + value retrieval (consumes the future)."""
 
         errors.check(self._valid, errors.ErrorClass.ERR_REQUEST, "future already consumed")
+        self._valid = False
         jax.block_until_ready(self._value)
         return self._value
 
     def wait(self) -> "Future":
+        """Block until complete (does not consume; ``get()`` does)."""
+
+        errors.check(self._valid, errors.ErrorClass.ERR_REQUEST, "future already consumed")
         jax.block_until_ready(self._value)
         return self
 
@@ -79,15 +83,41 @@ class Future:
 
 
 def when_all(futures: Sequence[Future]) -> Future:
-    """``MPI_Waitall`` join: a future over the tuple of results."""
+    """``MPI_Waitall`` join: a future over the tuple of results.
 
-    return Future(tuple(f._value for f in futures))
+    Like ``MPI_Waitall``, the joined requests are consumed: each input must
+    still be valid (``ERR_REQUEST`` otherwise, exactly as a double ``get()``
+    would raise) and is invalidated by the join.
+    """
+
+    seen: set[int] = set()
+    for i, f in enumerate(futures):
+        errors.check(
+            f.valid() and id(f) not in seen,
+            errors.ErrorClass.ERR_REQUEST,
+            f"when_all: future {i} already consumed",
+        )
+        seen.add(id(f))
+    values = tuple(f._value for f in futures)
+    for f in futures:
+        f._valid = False
+    return Future(values)
 
 
 def when_any(futures: Sequence[Future], poll_interval_s: float = 1e-4) -> tuple[Future, int]:
-    """``MPI_Waitany`` join: first completed future and its index."""
+    """``MPI_Waitany`` join: first completed future and its index.
+
+    Inputs must be valid (unconsumed); the winner is returned still valid so
+    the caller retrieves its value with ``get()``.
+    """
 
     errors.check(len(futures) > 0, errors.ErrorClass.ERR_REQUEST, "when_any of no futures")
+    for i, f in enumerate(futures):
+        errors.check(
+            f.valid(),
+            errors.ErrorClass.ERR_REQUEST,
+            f"when_any: future {i} already consumed",
+        )
     while True:
         for i, f in enumerate(futures):
             if f.test():

@@ -153,12 +153,13 @@ def parse_computations(hlo: str) -> tuple[dict[str, Computation], str | None]:
             if raw.lstrip().startswith("ENTRY"):
                 entry = cur.name
             # computation parameters carry inline shapes in the signature
-            # (split on depth-0 commas: tuple-typed params nest parens)
+            # (split on depth-0 commas: tuple-typed params nest parens, and
+            # shape/layout tokens nest brackets/braces — f32[256,512]{1,0})
             depth, parts, token = 0, [], ""
             for ch in header.group(2):
-                if ch == "(":
+                if ch in "([{":
                     depth += 1
-                elif ch == ")":
+                elif ch in ")]}":
                     depth -= 1
                 if ch == "," and depth == 0:
                     parts.append(token)
@@ -193,12 +194,13 @@ def parse_computations(hlo: str) -> tuple[dict[str, Computation], str | None]:
         result_elems = _shape_elems(head)
         cur.shapes_bytes[name] = result_bytes
         cur.shapes_dims[name] = _first_dims(head)
-        # split the op's top-level argument list
+        # split the op's top-level argument list (depth counts brackets and
+        # braces too, so f32[256,512]{1,0} operand tokens stay whole)
         depth, args, token = 1, [], ""
         for ch in rhs[opm.end():]:
-            if ch == "(":
+            if ch in "([{":
                 depth += 1
-            elif ch == ")":
+            elif ch in ")]}":
                 depth -= 1
                 if depth == 0:
                     break

@@ -1,0 +1,421 @@
+"""The Sessions model (MPI 4.0 §11, the paper's target standard).
+
+MPI 4.0's headline addition is that a parallel program no longer starts from
+one implicit ``MPI_COMM_WORLD``: an application opens a **session**, asks the
+runtime which named **process sets** exist (``mpi://WORLD``, ``mpi://SELF``,
+implementation sets such as per-node sets), derives an immutable **group**
+from a set (``MPI_Group_from_session_pset``), refines it with the group
+algebra, and only then builds a communicator with
+``MPI_Comm_create_from_group``.  Construction is therefore compositional:
+independent libraries in one process each open their own session and carve
+their own communicators out of declared subsets of the machine without ever
+touching a global.
+
+The JAX analogue maps "process" to *device*:
+
+* :class:`Session` enumerates the platform (``jax.devices()``) into named
+  process sets — ``repro://world``, ``repro://self`` (this host's devices),
+  one ``repro://host/<k>`` set per process index, one
+  ``repro://platform/<name>`` set per backend platform — plus user-registered
+  sets (:meth:`Session.register_pset`) and mesh sub-grid sets
+  (:meth:`Session.register_mesh_psets`).
+* :class:`Group` is an immutable ordered device set with the full MPI group
+  algebra: ``union`` / ``intersection`` / ``difference`` / ``incl`` /
+  ``excl`` / ``rank`` / ``size`` / ``translate_ranks`` / ``compare``.
+* ``Communicator.from_group(group, tag=...)`` (in
+  :mod:`repro.core.communicator`) is ``MPI_Comm_create_from_group``: the one
+  canonical constructor every other construction path routes through.
+  ``world()`` is a thin shim over
+  ``default_session().group("repro://world")``.
+
+Groups are deliberately device-agnostic containers (any hashable, ordered
+members work), so the algebra is testable without multi-device hardware.
+"""
+
+from __future__ import annotations
+
+import enum
+from typing import Any, Iterable, Mapping, Sequence
+
+import jax
+
+from repro.core import errors
+
+#: ``MPI_UNDEFINED`` analogue for rank queries that have no answer.
+UNDEFINED = -1
+
+#: The builtin process-set namespace.  ``mpi://`` spellings are accepted as
+#: aliases (``mpi://world`` → ``repro://world``) since the paper's readers
+#: know the standard's names.
+_SCHEME = "repro://"
+_ALIAS_SCHEME = "mpi://"
+
+WORLD_PSET = _SCHEME + "world"
+SELF_PSET = _SCHEME + "self"
+
+_BUILTIN_PREFIXES = (f"{_SCHEME}host/", f"{_SCHEME}platform/", f"{_SCHEME}slice/")
+
+
+def _is_builtin_pset(name: str) -> bool:
+    return name in (WORLD_PSET, SELF_PSET) or name.startswith(_BUILTIN_PREFIXES)
+
+
+class GroupComparison(enum.Enum):
+    """``MPI_Group_compare`` results."""
+
+    IDENT = "ident"        # same members, same order
+    SIMILAR = "similar"    # same members, different order
+    UNEQUAL = "unequal"
+
+
+class Group:
+    """Immutable ordered set of devices (``MPI_Group``).
+
+    Rank *r* in the group is position *r* in :attr:`devices`.  All algebra
+    follows MPI ordering rules: ``union`` keeps ``self``'s order then appends
+    ``other``'s new members; ``intersection`` and ``difference`` are ordered
+    by ``self``.
+    """
+
+    __slots__ = ("_devices", "_index")
+
+    def __init__(self, devices: Iterable[Any] = ()):
+        seen: dict[Any, int] = {}
+        for d in devices:
+            if d not in seen:
+                seen[d] = len(seen)
+        self._devices = tuple(seen)
+        self._index = seen
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def devices(self) -> tuple[Any, ...]:
+        return self._devices
+
+    def size(self) -> int:
+        """``MPI_Group_size``."""
+
+        return len(self._devices)
+
+    def rank(self, device: Any = None) -> int:
+        """``MPI_Group_rank``: the calling process's rank, or
+        :data:`UNDEFINED` if it is not a member.
+
+        The SPMD analogue of "the calling process" is this host's first
+        device that belongs to the group; pass ``device`` explicitly to ask
+        about a specific member (``rank(dev)``).
+        """
+
+        if device is not None:
+            return self._index.get(device, UNDEFINED)
+        for d in _local_devices_safe():
+            r = self._index.get(d)
+            if r is not None:
+                return r
+        return UNDEFINED
+
+    def device(self, rank: int) -> Any:
+        """The member at ``rank`` (inverse of :meth:`rank`)."""
+
+        errors.check(
+            0 <= rank < len(self._devices),
+            errors.ErrorClass.ERR_RANK,
+            f"rank {rank} out of range for group of size {len(self._devices)}",
+        )
+        return self._devices[rank]
+
+    def __len__(self) -> int:
+        return len(self._devices)
+
+    def __bool__(self) -> bool:
+        return bool(self._devices)
+
+    def __iter__(self):
+        return iter(self._devices)
+
+    def __contains__(self, device: Any) -> bool:
+        return device in self._index
+
+    def __eq__(self, other: Any) -> bool:
+        return isinstance(other, Group) and self._devices == other._devices
+
+    def __hash__(self) -> int:
+        return hash(self._devices)
+
+    def __repr__(self) -> str:
+        return f"Group(size={len(self._devices)})"
+
+    # -- algebra -----------------------------------------------------------
+
+    def union(self, other: "Group") -> "Group":
+        """``MPI_Group_union``: self's members, then other's new members."""
+
+        return Group(self._devices + other._devices)
+
+    def intersection(self, other: "Group") -> "Group":
+        """``MPI_Group_intersection``: members of both, ordered by self."""
+
+        return Group(d for d in self._devices if d in other)
+
+    def difference(self, other: "Group") -> "Group":
+        """``MPI_Group_difference``: members of self not in other."""
+
+        return Group(d for d in self._devices if d not in other)
+
+    __or__ = union
+    __and__ = intersection
+    __sub__ = difference
+
+    def incl(self, ranks: Sequence[int]) -> "Group":
+        """``MPI_Group_incl``: the subgroup at ``ranks``, in that order."""
+
+        ranks = list(ranks)
+        errors.check(
+            len(set(ranks)) == len(ranks),
+            errors.ErrorClass.ERR_RANK,
+            f"incl ranks must be distinct: {ranks}",
+        )
+        return Group(self.device(r) for r in ranks)
+
+    def excl(self, ranks: Sequence[int]) -> "Group":
+        """``MPI_Group_excl``: everything but ``ranks``, order preserved."""
+
+        ranks = list(ranks)
+        errors.check(
+            len(set(ranks)) == len(ranks),
+            errors.ErrorClass.ERR_RANK,
+            f"excl ranks must be distinct: {ranks}",
+        )
+        drop = {self.device(r) for r in ranks}
+        return Group(d for d in self._devices if d not in drop)
+
+    def translate_ranks(self, ranks: Sequence[int], other: "Group") -> list[int]:
+        """``MPI_Group_translate_ranks``: where self's ``ranks`` sit in
+        ``other`` (:data:`UNDEFINED` for non-members)."""
+
+        return [other.rank(self.device(r)) for r in ranks]
+
+    def compare(self, other: "Group") -> GroupComparison:
+        """``MPI_Group_compare``."""
+
+        if self._devices == other._devices:
+            return GroupComparison.IDENT
+        if set(self._devices) == set(other._devices):
+            return GroupComparison.SIMILAR
+        return GroupComparison.UNEQUAL
+
+
+def _local_devices_safe() -> tuple[Any, ...]:
+    try:
+        return tuple(jax.local_devices())
+    except RuntimeError:  # pragma: no cover - no backend at all
+        return ()
+
+
+def _normalize(name: str) -> str:
+    name = name.lower()
+    if name.startswith(_ALIAS_SCHEME):
+        name = _SCHEME + name[len(_ALIAS_SCHEME):]
+    return name
+
+
+class Session:
+    """``MPI_Session``: a handle onto the platform's named process sets.
+
+    Lifecycle mirrors the standard: :meth:`init` opens a session (no global
+    state is touched — independent components may each hold one),
+    :meth:`finalize` closes it, after which every query raises
+    ``ERR_SESSION``.  Usable as a context manager.
+    """
+
+    def __init__(self, devices: Sequence[Any] | None = None, *, info: Mapping | None = None):
+        self._devices = tuple(devices) if devices is not None else tuple(jax.devices())
+        errors.check(
+            len(self._devices) > 0,
+            errors.ErrorClass.ERR_SESSION,
+            "a session needs at least one device",
+        )
+        self.info = dict(info or {})
+        self._finalized = False
+        self._psets: dict[str, tuple[Any, ...]] = {}
+        self._enumerate()
+
+    @classmethod
+    def init(cls, devices: Sequence[Any] | None = None, *, info: Mapping | None = None) -> "Session":
+        """``MPI_Session_init``."""
+
+        return cls(devices, info=info)
+
+    # -- platform enumeration ----------------------------------------------
+
+    def _enumerate(self) -> None:
+        self._psets[WORLD_PSET] = self._devices
+        local_set = set(_local_devices_safe())
+        local = [d for d in self._devices if d in local_set]
+        self._psets[SELF_PSET] = tuple(local) or self._devices[:1]
+
+        by_host: dict[int, list[Any]] = {}
+        by_platform: dict[str, list[Any]] = {}
+        for d in self._devices:
+            by_host.setdefault(getattr(d, "process_index", 0), []).append(d)
+            by_platform.setdefault(getattr(d, "platform", "unknown"), []).append(d)
+        for host, devs in sorted(by_host.items()):
+            self._psets[f"{_SCHEME}host/{host}"] = tuple(devs)
+        for platform, devs in sorted(by_platform.items()):
+            self._psets[f"{_SCHEME}platform/{platform}"] = tuple(devs)
+        # per-slice sets where the backend reports slice topology (TPU pods)
+        by_slice: dict[int, list[Any]] = {}
+        for d in self._devices:
+            s = getattr(d, "slice_index", None)
+            if s is not None:
+                by_slice.setdefault(s, []).append(d)
+        for s, devs in sorted(by_slice.items()):
+            self._psets[f"{_SCHEME}slice/{s}"] = tuple(devs)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def refresh(self) -> "Session":
+        """Re-enumerate the platform (elastic resize): builtin process sets
+        are rebuilt from the current device set; user-registered sets are
+        preserved."""
+
+        self._live()
+        user = {k: v for k, v in self._psets.items() if not _is_builtin_pset(k)}
+        self._devices = tuple(jax.devices())
+        self._psets = {}
+        self._enumerate()
+        self._psets.update(user)
+        return self
+
+    @property
+    def finalized(self) -> bool:
+        return self._finalized
+
+    def finalize(self) -> None:
+        """``MPI_Session_finalize``.  Idempotent."""
+
+        self._finalized = True
+
+    def __enter__(self) -> "Session":
+        self._live()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.finalize()
+
+    def _live(self) -> None:
+        if self._finalized:
+            errors.fail(
+                errors.ErrorClass.ERR_SESSION,
+                "session is finalized (MPI_Session_finalize was called)",
+            )
+
+    # -- process-set discovery ---------------------------------------------
+
+    def num_psets(self) -> int:
+        """``MPI_Session_get_num_psets``."""
+
+        self._live()
+        return len(self._psets)
+
+    def psets(self) -> list[str]:
+        """All process-set names (``MPI_Session_get_nth_pset``, vectorised)."""
+
+        self._live()
+        return list(self._psets)
+
+    def pset(self, name: str) -> tuple[Any, ...]:
+        """The device tuple behind a named process set."""
+
+        self._live()
+        key = _normalize(name)
+        errors.check(
+            key in self._psets,
+            errors.ErrorClass.ERR_ARG,
+            f"unknown process set {name!r}; known: {list(self._psets)}",
+        )
+        return self._psets[key]
+
+    def pset_info(self, name: str) -> dict:
+        """``MPI_Session_get_pset_info`` (the standard mandates ``mpi_size``)."""
+
+        devs = self.pset(name)
+        return {"mpi_size": len(devs), "size": len(devs), "name": _normalize(name)}
+
+    def group(self, name: str = WORLD_PSET) -> Group:
+        """``MPI_Group_from_session_pset``."""
+
+        return Group(self.pset(name))
+
+    # -- user-registered sets ----------------------------------------------
+
+    def register_pset(self, name: str, members: "Group | Sequence[Any]") -> str:
+        """Register a user process set (over devices or an existing group).
+
+        Returns the normalised name.  Builtin sets cannot be shadowed.
+        """
+
+        self._live()
+        key = _normalize(name)
+        errors.check(
+            not _is_builtin_pset(key),
+            errors.ErrorClass.ERR_ARG,
+            f"cannot shadow builtin process set {name!r}",
+        )
+        devices = tuple(
+            dict.fromkeys(members.devices if isinstance(members, Group) else members)
+        )
+        errors.check(
+            len(devices) > 0, errors.ErrorClass.ERR_GROUP, f"process set {name!r} is empty"
+        )
+        known = set(self._devices)
+        for d in devices:
+            errors.check(
+                d in known,
+                errors.ErrorClass.ERR_GROUP,
+                f"device {d} of pset {name!r} is not part of this session",
+            )
+        self._psets[key] = devices
+        return key
+
+    def register_mesh_psets(self, mesh, *, prefix: str = _SCHEME + "mesh") -> list[str]:
+        """Expose a mesh's sub-grids as process sets.
+
+        For each mesh axis ``a`` and index ``i``, registers
+        ``<prefix>/<a>/<i>`` holding the devices of that slice (the sub-grid
+        with ``a`` fixed to ``i``) — the session-native spelling of
+        "the i-th data-parallel replica" / "the i-th pipeline stage".
+        """
+
+        self._live()
+        names = []
+        for axis_pos, axis in enumerate(mesh.axis_names):
+            for i in range(mesh.devices.shape[axis_pos]):
+                sub = mesh.devices.take(i, axis=axis_pos)
+                names.append(
+                    self.register_pset(f"{prefix}/{axis}/{i}", sub.reshape(-1).tolist())
+                )
+        return names
+
+    def __repr__(self) -> str:
+        state = "finalized" if self._finalized else f"{len(self._psets)} psets"
+        return f"Session(devices={len(self._devices)}, {state})"
+
+
+_DEFAULT: Session | None = None
+
+
+def default_session(refresh: bool = False) -> Session:
+    """The process-default session backing :func:`repro.core.world`.
+
+    ``refresh=True`` re-enumerates the platform (elastic resize); a finalized
+    default is replaced automatically.
+    """
+
+    global _DEFAULT
+    if _DEFAULT is None or _DEFAULT.finalized:
+        _DEFAULT = Session.init()
+    elif refresh:
+        _DEFAULT.refresh()
+    return _DEFAULT

@@ -1,9 +1,17 @@
-"""Production meshes.
+"""Production communicators (session-derived) and their meshes.
 
-``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
-importing this module never touches jax device state; the dry-run sets
-``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
-import and then calls it.
+Construction is session-first: every entry point opens (or is handed) a
+:class:`repro.core.session.Session`, picks a named process set, refines it
+with the group algebra, and builds the communicator with
+``Communicator.from_group`` — so train/serve/IO workloads can each own a
+communicator over a *declared subset* of the platform instead of all
+sharing ``world()``.
+
+``make_*_mesh`` shims are kept for callers that only need the raw
+:class:`jax.sharding.Mesh`; they are FUNCTIONS (not module-level constants)
+so that importing this module never touches jax device state; the dry-run
+sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import and then calls them.
 
 Topology (TPU v5e pods of 256 chips):
 
@@ -18,19 +26,76 @@ compression path applies to the pod axis only).
 
 from __future__ import annotations
 
-import jax
+
+def make_production_communicator(*, multi_pod: bool = False, session=None):
+    """The production communicator: the world pset folded onto the pod grid."""
+
+    from repro.core.communicator import Communicator
+    from repro.core.session import default_session
+
+    import math
+
+    from repro.core import errors
+
+    sess = session if session is not None else default_session()
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    world = sess.group("repro://world")
+    n = math.prod(shape)
+    errors.check(
+        n <= world.size(),
+        errors.ErrorClass.ERR_DIMS,
+        f"production topology {shape} needs {n} devices but the platform "
+        f"holds {world.size()}",
+    )
+    g = world.incl(range(n))
+    return Communicator.from_group(
+        g, tag="repro://production", shape=shape, axis_names=axes
+    )
 
 
 def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return make_production_communicator(multi_pod=multi_pod).mesh
+
+
+def make_host_communicator(
+    data: int | None = None,
+    model: int = 1,
+    *,
+    pset: str = "repro://world",
+    session=None,
+):
+    """A small communicator over a process set (tests / examples / benches).
+
+    ``pset`` selects which slice of the platform this workload owns
+    (``repro://world`` by default; any session pset — per-host sets,
+    user-registered sets — works).  The leading ``data × model`` devices of
+    the set are folded onto a ("data", "model") grid.
+    """
+
+    from repro.core.communicator import Communicator
+    from repro.core.session import default_session
+
+    from repro.core import errors
+
+    g = (session if session is not None else default_session()).group(pset)
+    if data is None:
+        data = g.size() // model
+    errors.check(
+        data >= 1 and data * model <= g.size(),
+        errors.ErrorClass.ERR_DIMS,
+        f"mesh {data}x{model} needs {max(data, 1) * model} devices but pset "
+        f"{pset!r} holds {g.size()}",
+    )
+    return Communicator.from_group(
+        g.incl(range(data * model)),
+        tag=pset,
+        shape=(data, model),
+        axis_names=("data", "model"),
+    )
 
 
 def make_host_mesh(data: int | None = None, model: int = 1):
     """A small mesh over whatever devices exist (tests / examples / benches)."""
 
-    n = len(jax.devices())
-    if data is None:
-        data = n // model
-    return jax.make_mesh((data, model), ("data", "model"))
+    return make_host_communicator(data, model).mesh

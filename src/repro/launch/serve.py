@@ -21,19 +21,24 @@ def main(argv=None):
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--mesh", default="auto")
+    ap.add_argument(
+        "--pset",
+        default="repro://world",
+        help="session process set the server owns (e.g. repro://host/1)",
+    )
     args = ap.parse_args(argv)
 
     from repro.configs import base
-    from repro.launch.mesh import make_host_mesh
+    from repro.launch.mesh import make_host_communicator
     from repro.runtime.server import Request, Server, ServerConfig
 
     cfg = base.get_smoke_config(args.arch) if args.smoke else base.get_config(args.arch)
     pcfg = base.get_parallel(args.arch)
     if args.mesh == "auto":
-        mesh = make_host_mesh()
+        comm = make_host_communicator(pset=args.pset)
     else:
         d, m = (int(t) for t in args.mesh.split("x"))
-        mesh = make_host_mesh(d, m)
+        comm = make_host_communicator(d, m, pset=args.pset)
 
     rng = np.random.default_rng(0)
     reqs = []
@@ -53,7 +58,7 @@ def main(argv=None):
     server = Server(
         cfg, pcfg, ServerConfig(max_batch=args.requests,
                                 max_new_tokens=args.new_tokens,
-                                temperature=args.temperature), mesh
+                                temperature=args.temperature), comm
     )
     tokens, stats = server.generate(reqs)
     print("generated shape:", tokens.shape)

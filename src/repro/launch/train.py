@@ -24,6 +24,11 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
     ap.add_argument("--mesh", default="auto", help="DxM, e.g. 2x4 (auto: all devices x 1)")
+    ap.add_argument(
+        "--pset",
+        default="repro://world",
+        help="session process set the trainer owns (e.g. repro://host/0)",
+    )
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=0)
@@ -35,17 +40,17 @@ def main(argv=None):
     logging.basicConfig(level=logging.INFO, format="%(name)s %(message)s")
 
     from repro.configs import base
-    from repro.launch.mesh import make_host_mesh
+    from repro.launch.mesh import make_host_communicator
     from repro.runtime.faults import FaultInjector
     from repro.runtime.trainer import Trainer, TrainerConfig
 
     cfg = base.get_smoke_config(args.arch) if args.smoke else base.get_config(args.arch)
     pcfg = base.get_parallel(args.arch)
     if args.mesh == "auto":
-        mesh = make_host_mesh()
+        comm = make_host_communicator(pset=args.pset)
     else:
         d, m = (int(t) for t in args.mesh.split("x"))
-        mesh = make_host_mesh(d, m)
+        comm = make_host_communicator(d, m, pset=args.pset)
 
     tcfg = TrainerConfig(
         steps=args.steps,
@@ -60,7 +65,7 @@ def main(argv=None):
         else None
     )
     trainer = Trainer(
-        cfg, pcfg, tcfg, mesh, seq_len=args.seq, global_batch=args.batch, injector=injector
+        cfg, pcfg, tcfg, comm, seq_len=args.seq, global_batch=args.batch, injector=injector
     )
     result = trainer.run()
     print(json.dumps({k: v for k, v in result.items() if k != "metrics"}, indent=1))

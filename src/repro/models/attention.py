@@ -12,7 +12,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.core import overlap
+from repro.core import _compat, overlap
 from repro.core.communicator import Communicator
 from repro.kernels.flash_attention import ops as fa_ops
 from repro.kernels.flash_attention import ref as fa_ref
@@ -210,8 +210,8 @@ def _ring_attention_sharded(q, k, v, pcfg, mesh, *, scale):
     def body(ql, kl, vl):
         return overlap.ring_attention(comm, ql, kl, vl, causal=True, scale=scale)
 
-    return jax.shard_map(
-        body, mesh=mesh, in_specs=(spec, spec, spec), out_specs=spec, check_vma=False
+    return _compat.shard_map(
+        body, mesh=mesh, in_specs=(spec, spec, spec), out_specs=spec
     )(q, k, v)
 
 
@@ -363,12 +363,11 @@ def _flash_decode_sharded(q, k_layer, v_layer, k_scale_l, v_scale_l, valid, cfg,
 
         args += [valid]
         specs += [valid_spec]
-    return jax.shard_map(
+    return _compat.shard_map(
         body_fn,
         mesh=mesh,
         in_specs=tuple(specs),
         out_specs=q_spec,
-        check_vma=False,
     )(*args)
 
 

@@ -19,6 +19,7 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.configs.base import ModelConfig, ParallelConfig
+from repro.core.communicator import Communicator
 from repro.models import api as model_api
 from repro.sharding import rules
 
@@ -43,10 +44,13 @@ class Server:
         cfg: ModelConfig,
         pcfg: ParallelConfig,
         scfg: ServerConfig,
-        mesh: Mesh,
+        comm: Communicator | Mesh,
     ):
         self.cfg, self.pcfg, self.scfg = cfg, pcfg, scfg
-        self.mesh = mesh
+        # serving owns its process set: a session-derived communicator (a
+        # bare Mesh is wrapped unmanaged for older call sites)
+        self.comm = comm if isinstance(comm, Communicator) else Communicator(comm)
+        self.mesh = mesh = self.comm.mesh
         self.bundle = model_api.build(cfg)
         with mesh:
             self.params = jax.jit(self.bundle.init)(jax.random.PRNGKey(scfg.seed))

@@ -32,6 +32,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import ModelConfig, ParallelConfig
+from repro.core.communicator import Communicator
 from repro.data import TokenPipeline
 from repro.models import api as model_api
 from repro.optim import AdamW, clip_by_global_norm, cosine_warmup
@@ -83,7 +84,7 @@ class Trainer:
         cfg: ModelConfig,
         pcfg: ParallelConfig,
         tcfg: TrainerConfig,
-        mesh: Mesh,
+        comm: Communicator | Mesh,
         *,
         seq_len: int = 512,
         global_batch: int = 8,
@@ -91,7 +92,10 @@ class Trainer:
         straggler: StragglerPolicy | None = None,
     ):
         self.cfg, self.pcfg, self.tcfg = cfg, pcfg, tcfg
-        self.mesh = mesh
+        # Session-derived communicator is the canonical handle onto the
+        # training process set; a bare Mesh is wrapped unmanaged.
+        self.comm = comm if isinstance(comm, Communicator) else Communicator(comm)
+        self.mesh = self.comm.mesh
         self.seq_len, self.global_batch = seq_len, global_batch
         self.bundle = model_api.build(cfg)
         self.opt = AdamW(

@@ -15,8 +15,8 @@ RING_ATTENTION = textwrap.dedent("""
     from repro.models import attention as attn
     from repro.models import common
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.core._compat import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     cfg = ModelConfig(name="t", family="dense", num_layers=1, d_model=64,
                       num_heads=4, num_kv_heads=4, head_dim=16, d_ff=128,
                       vocab_size=256, dtype="float32")
@@ -46,8 +46,8 @@ SHARDED_DECODE = textwrap.dedent("""
     from repro.configs import base
     from repro.models import api
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.core._compat import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     cfg = dataclasses.replace(base.get_smoke_config("phi4_mini_3_8b"),
                               dtype="float32")
     # the cell-D configuration: sequence-sharded cache + exact merge (+int8)

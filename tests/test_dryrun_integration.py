@@ -17,8 +17,8 @@ CODE = textwrap.dedent("""
     from repro.sharding import rules
     from repro.core import hloanalysis, tool
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.core._compat import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
 
     ARCH = "{arch}"
     cfg = base.get_smoke_config(ARCH)

@@ -22,10 +22,9 @@ CODE = textwrap.dedent("""
     pcfg = ParallelConfig()
     bundle = api.build(cfg)
 
-    mesh_a = jax.make_mesh((4, 2), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
-    mesh_b = jax.make_mesh((2, 4), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.core._compat import make_mesh
+    mesh_a = make_mesh((4, 2), ("data", "model"))
+    mesh_b = make_mesh((2, 4), ("data", "model"))
 
     with tempfile.TemporaryDirectory() as d:
         mgr = CheckpointManager(d, keep=2, async_save=False)

@@ -23,7 +23,15 @@ from repro.core.futures import (
 def test_host_future_get_consumes():
     f = Future(jnp.ones((2,)))
     np.testing.assert_array_equal(f.get(), np.ones(2))
-    f._valid = False
+    assert not f.valid()
+    with pytest.raises(errors.RequestError):
+        f.get()
+
+
+def test_double_get_raises():
+    f = Future(jnp.asarray(1.0))
+    assert f.valid()
+    f.get()
     with pytest.raises(errors.RequestError):
         f.get()
 
@@ -40,11 +48,50 @@ def test_when_all_joins():
     assert tuple(int(v) for v in joined.get()) == (0, 1, 2, 3)
 
 
+def test_when_all_consumes_and_rejects_consumed():
+    fs = [Future(jnp.asarray(0)), Future(jnp.asarray(1))]
+    when_all(fs)
+    for f in fs:                      # MPI_Waitall freed the requests
+        assert not f.valid()
+        with pytest.raises(errors.RequestError):
+            f.get()
+    consumed = Future(jnp.asarray(2))
+    consumed.get()
+    with pytest.raises(errors.RequestError):
+        when_all([Future(jnp.asarray(3)), consumed])
+    dup = Future(jnp.asarray(4))
+    with pytest.raises(errors.RequestError):
+        when_all([dup, dup])        # same request twice is erroneous
+    stale = Future(jnp.asarray(5))
+    stale.get()
+    with pytest.raises(errors.RequestError):
+        stale.wait()                # wait on a consumed request
+
+
 def test_when_any_returns_completed():
     fs = [Future(jnp.asarray(7)), Future(jnp.asarray(8))]
     f, idx = when_any(fs)
     assert idx in (0, 1)
     assert int(f.get()) in (7, 8)
+
+
+def test_when_any_empty_raises():
+    with pytest.raises(errors.RequestError):
+        when_any([])
+
+
+def test_when_any_rejects_consumed_input():
+    consumed = Future(jnp.asarray(0))
+    consumed.get()
+    with pytest.raises(errors.RequestError):
+        when_any([Future(jnp.asarray(1)), consumed])
+
+
+def test_trace_when_any_empty_raises():
+    from repro.core.futures import trace_when_any
+
+    with pytest.raises(errors.RequestError):
+        trace_when_any([])
 
 
 def test_trace_future_is_lazy():
@@ -61,6 +108,28 @@ def test_trace_future_is_lazy():
     assert not forced            # still nothing traced
     assert float(chained.get()) == 3.0
     assert forced == [1]
+
+
+def test_trace_future_continuations_defer_until_forced():
+    """A .then() chain builds the task graph without running any stage; only
+    forcing the chain end traces it, and exactly once."""
+
+    ran = []
+
+    def record(label, value):
+        ran.append(label)
+        return value
+
+    tf = TraceFuture(lambda: record("src", jnp.asarray(1.0)))
+    chain = tf.then(lambda f: record("c1", f.get() + 1.0)).then(
+        lambda f: record("c2", f.get() * 2.0)
+    )
+    assert ran == []             # continuations must not run before forcing
+    assert not chain.test()
+    assert float(chain.get()) == 4.0
+    assert ran == ["src", "c1", "c2"]
+    assert float(chain.get()) == 4.0  # trace futures are re-readable
+    assert ran == ["src", "c1", "c2"]  # ...without re-tracing
 
 
 def test_trace_when_all():
@@ -98,6 +167,23 @@ def test_persistent_request_reuse():
     np.testing.assert_array_equal(out1, np.full(4, 2.0))
     np.testing.assert_array_equal(out2, np.full(4, 6.0))
     assert req.as_text()  # compiled artifact is inspectable (MPI_T-ish)
+
+
+def test_persistent_request_start_futures_are_independent():
+    """Each MPI_Start yields a fresh request: consuming one leaves the others
+    valid, and the joined results are per-start."""
+
+    req = PersistentRequest(
+        jax.jit(lambda x: x + 1.0), (jax.ShapeDtypeStruct((), jnp.float32),)
+    )
+    a = req.start(jnp.float32(1.0))
+    b = req.start(jnp.float32(2.0))
+    assert float(a.get()) == 2.0
+    with pytest.raises(errors.RequestError):
+        a.get()                     # consumed
+    assert b.valid()                # sibling start unaffected
+    joined = when_all([b, req.start(jnp.float32(3.0))])
+    assert tuple(float(v) for v in joined.get()) == (3.0, 4.0)
 
 
 def test_task_graph_fork_join():

@@ -69,7 +69,8 @@ import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.core.hloanalysis import analyze_hlo
 
-mesh = jax.make_mesh((8,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.core._compat import make_mesh, shard_map
+mesh = make_mesh((8,), ("d",))
 
 def body(x, _):
     return jax.lax.psum(x, "d"), None
@@ -78,7 +79,7 @@ def f(x):
     y, _ = jax.lax.scan(body, x, None, length=7)
     return y
 
-fs = jax.shard_map(f, mesh=mesh, in_specs=P(), out_specs=P(), check_vma=False)
+fs = shard_map(f, mesh=mesh, in_specs=P(), out_specs=P())
 xs = jax.ShapeDtypeStruct((262144,), jnp.float32)   # 1 MiB payload
 c = jax.jit(fs).lower(xs).compile()
 r = analyze_hlo(c.as_text())

@@ -1,0 +1,308 @@
+"""Sessions model (MPI 4.0 §11): session lifecycle, process-set discovery,
+the full group algebra, and ``Communicator.from_group`` as the canonical
+constructor (``world()`` is a shim over it)."""
+
+from __future__ import annotations
+
+import textwrap
+
+import jax
+import pytest
+
+from repro import core as mpx
+from repro.core import errors
+from repro.core.communicator import Communicator, world
+from repro.core.session import (
+    UNDEFINED,
+    Group,
+    GroupComparison,
+    Session,
+    default_session,
+)
+
+
+# ---------------------------------------------------------------------------
+# group algebra (Groups are device-agnostic: any hashable members work)
+# ---------------------------------------------------------------------------
+
+
+def test_group_union_order():
+    a, b = Group("abc"), Group("cbd")
+    assert Group("abc").union(Group("cbd")).devices == tuple("abcd")
+    assert (a | b).devices == tuple("abcd")
+    assert (b | a).devices == tuple("cbda")
+
+
+def test_group_intersection_ordered_by_self():
+    a, b = Group("abcd"), Group("dca")
+    assert a.intersection(b).devices == tuple("acd")
+    assert (b & a).devices == tuple("dca")
+
+
+def test_group_difference():
+    a, b = Group("abcd"), Group("bd")
+    assert a.difference(b).devices == tuple("ac")
+    assert (b - a).size() == 0
+
+
+def test_group_incl_excl():
+    g = Group("abcd")
+    assert g.incl([2, 0]).devices == ("c", "a")
+    assert g.excl([1, 3]).devices == ("a", "c")
+    with pytest.raises(errors.RankError):
+        g.incl([0, 0])
+    with pytest.raises(errors.RankError):
+        g.incl([4])
+    with pytest.raises(errors.RankError):
+        g.excl([-1])
+
+
+def test_group_rank_size_translate():
+    g = Group("abcd")
+    assert g.size() == len(g) == 4
+    assert g.rank("c") == 2 and g.rank("z") == UNDEFINED
+    assert g.device(1) == "b"
+    sub = g.incl([3, 1])
+    assert sub.translate_ranks([0, 1], g) == [3, 1]
+    assert g.translate_ranks([0, 3], sub) == [UNDEFINED, 0]
+
+
+def test_group_compare():
+    g = Group("abc")
+    assert g.compare(Group("abc")) is GroupComparison.IDENT
+    assert g.compare(Group("cba")) is GroupComparison.SIMILAR
+    assert g.compare(Group("ab")) is GroupComparison.UNEQUAL
+    assert g == Group("abc") and g != Group("cba")
+    assert hash(g) == hash(Group("abc"))
+
+
+def test_group_dedups_preserving_order():
+    assert Group("abab").devices == ("a", "b")
+
+
+# ---------------------------------------------------------------------------
+# session lifecycle + process-set discovery
+# ---------------------------------------------------------------------------
+
+
+def test_session_discovers_builtin_psets():
+    sess = Session.init()
+    names = sess.psets()
+    assert "repro://world" in names and "repro://self" in names
+    assert sess.num_psets() == len(names)
+    assert any(n.startswith("repro://host/") for n in names)
+    assert any(n.startswith("repro://platform/") for n in names)
+    n = len(jax.devices())
+    assert sess.group("repro://world").size() == n
+    assert sess.pset_info("repro://world")["mpi_size"] == n
+    # mpi:// spellings alias the repro:// namespace, case-insensitively
+    assert sess.group("mpi://WORLD").size() == n
+
+
+def test_session_finalize_lifecycle():
+    sess = Session.init()
+    sess.finalize()
+    assert sess.finalized
+    with pytest.raises(errors.SessionError):
+        sess.group("repro://world")
+    with pytest.raises(errors.SessionError):
+        sess.psets()
+    # context manager finalizes on exit
+    with Session.init() as s2:
+        assert s2.group().size() >= 1
+    assert s2.finalized
+
+
+def test_session_register_pset():
+    sess = Session.init()
+    g = sess.group("repro://world")
+    name = sess.register_pset("repro://mine", g.incl([0]))
+    assert name == "repro://mine"
+    assert sess.group("repro://mine").size() == 1
+    with pytest.raises(errors.ArgError):
+        sess.register_pset("repro://world", g)  # builtins are not shadowable
+    with pytest.raises(errors.GroupError):
+        sess.register_pset("repro://empty", Group())
+    with pytest.raises(errors.GroupError):
+        sess.register_pset("repro://alien", ["not-a-device"])
+    with pytest.raises(errors.ArgError):
+        sess.group("repro://nonexistent")
+
+
+def test_default_session_caching():
+    a, b = default_session(), default_session()
+    assert a is b
+    # refresh re-enumerates in place, preserving user-registered psets
+    a.register_pset("repro://sticky", a.group().incl([0]))
+    assert default_session(refresh=True) is a
+    assert a.group("repro://sticky").size() == 1
+    assert a.group("repro://world").size() == len(jax.devices())
+    # a finalized default is replaced automatically
+    default_session().finalize()
+    assert not default_session().finalized
+
+
+def test_from_group_shape_axis_mismatch():
+    g = default_session().group("repro://world")
+    with pytest.raises(errors.DimsError):
+        Communicator.from_group(g, shape=(1, g.size()), axis_names=("only_one",))
+
+
+# ---------------------------------------------------------------------------
+# Communicator.from_group + the world() shim
+# ---------------------------------------------------------------------------
+
+
+def test_world_is_a_session_shim():
+    comm = world(refresh=True)
+    assert comm.axis_names == ("world",)
+    assert comm.tag == "repro://world"
+    assert comm.managed
+    assert comm.size() == len(jax.devices())
+    assert world() is comm  # cached singleton
+    assert comm.group().compare(default_session().group("repro://world")) is (
+        GroupComparison.IDENT
+    )
+
+
+def test_from_group_validation():
+    g = default_session().group("repro://world")
+    with pytest.raises(errors.GroupError):
+        Communicator.from_group(Group())
+    with pytest.raises(errors.GroupError):
+        Communicator.from_group("repro://world")  # needs a Group, not a name
+    with pytest.raises(errors.DimsError):
+        Communicator.from_group(g, shape=(g.size() + 1,))
+    with pytest.raises(errors.DimsError):
+        Communicator.from_group(g, shape=(1, g.size()))  # multi-axis needs names
+
+
+def test_from_group_axis_name_from_tag():
+    g = default_session().group("repro://self")
+    comm = Communicator.from_group(g, tag="repro://io")
+    assert comm.axis_names == ("io",)
+    assert Communicator.from_group(g).axis_names == ("ranks",)
+
+
+def test_create_routes_through_from_group():
+    comm = Communicator.create((1,), ("w",), devices=jax.devices())
+    assert comm.managed
+    assert comm.group().size() == 1
+    assert comm.group().devices[0] == jax.devices()[0]
+
+
+def test_dup_preserves_group():
+    comm = world(refresh=True)
+    dup = comm.dup()
+    assert dup.group().compare(comm.group()) is GroupComparison.IDENT
+    assert not dup.managed
+
+
+def test_session_run_spmd():
+    """A communicator built from a session pset runs SPMD programs."""
+
+    import jax.numpy as jnp
+
+    sess = Session.init()
+    comm = Communicator.from_group(sess.group("repro://world"), tag="repro://world")
+    out = comm.run(lambda: comm.allreduce(jnp.float32(1.0)))
+    assert float(out) == comm.size()
+
+
+# ---------------------------------------------------------------------------
+# multi-device: split routing, mesh psets, disjoint train/serve sets
+# ---------------------------------------------------------------------------
+
+
+SPLIT_CODE = textwrap.dedent("""
+    import jax
+    from repro.core.communicator import Communicator
+    from repro.core.session import Group, GroupComparison, Session
+
+    sess = Session.init()
+    world = sess.group("repro://world")
+    assert world.size() == 8
+
+    comm = Communicator.from_group(world, tag="repro://grid", shape=(4, 2),
+                                   axis_names=("data", "model"))
+    # rank r in the source group IS the device at row-major position r
+    assert comm.group().compare(world) is GroupComparison.IDENT
+
+    # from_group honors the group's own device order (no topology reorder)
+    rev = world.incl(list(reversed(range(8))))
+    rcomm = Communicator.from_group(rev, tag="repro://rev")
+    assert rcomm.group().compare(rev) is GroupComparison.IDENT
+
+    # split along "model": 4 colors of size 2, partitioning the grid
+    sub = comm.split("model")
+    assert sub.size() == 2
+    colors = [sub.group(data=i) for i in range(4)]
+    union = Group()
+    for c in colors:
+        assert c.size() == 2
+        assert not (union & c)          # pairwise disjoint
+        union = union | c
+    assert union.compare(world) is not GroupComparison.UNEQUAL
+
+    # mesh sub-grids become named process sets
+    names = sess.register_mesh_psets(comm.mesh)
+    assert "repro://mesh/data/0" in names and "repro://mesh/model/1" in names
+    assert sess.group("repro://mesh/data/0").size() == 2
+    assert sess.group("repro://mesh/model/1").size() == 4
+    assert sess.group("repro://mesh/data/0").compare(colors[0]) is not \\
+        GroupComparison.UNEQUAL
+    print("SPLIT_OK")
+""")
+
+
+def test_split_routes_through_groups_8dev(subproc):
+    out = subproc(SPLIT_CODE, n=8)
+    assert "SPLIT_OK" in out
+
+
+DISJOINT_CODE = textwrap.dedent("""
+    import jax, jax.numpy as jnp
+    from repro.core.communicator import Communicator
+    from repro.core.session import Session
+
+    sess = Session.init()
+    world = sess.group("repro://world")
+    sess.register_pset("repro://train", world.incl(range(4)))
+    sess.register_pset("repro://serve", world.excl(range(4)))
+
+    train = Communicator.from_group(sess.group("repro://train"),
+                                    tag="repro://train")
+    serve = Communicator.from_group(sess.group("repro://serve"),
+                                    tag="repro://serve")
+    assert train.axis_names == ("train",) and serve.axis_names == ("serve",)
+    assert train.size() == serve.size() == 4
+    assert not (train.group() & serve.group())      # disjoint hardware
+
+    # both run SPMD programs independently on their own process set
+    assert float(train.run(lambda: train.allreduce(jnp.float32(1.0)))) == 4.0
+    assert float(serve.run(lambda: serve.allreduce(jnp.float32(2.0)))) == 8.0
+
+    # the runtime path: a Trainer whose communicator is a non-world pset
+    from repro.configs.base import ModelConfig, ParallelConfig
+    from repro.runtime.trainer import Trainer, TrainerConfig
+
+    cfg = ModelConfig(name="tiny", family="dense", num_layers=1, d_model=32,
+                      num_heads=2, num_kv_heads=2, head_dim=16, d_ff=64,
+                      vocab_size=64)
+    comm = Communicator.from_group(sess.group("repro://train"),
+                                   tag="repro://train", shape=(4, 1),
+                                   axis_names=("data", "model"))
+    t = Trainer(cfg, ParallelConfig(), TrainerConfig(steps=2, log_every=1),
+                comm, seq_len=32, global_batch=4)
+    result = t.run()
+    assert result["final_step"] == 2
+    assert t.comm is comm
+    assert {d.id for d in t.mesh.devices.flat} == \\
+        {d.id for d in sess.pset("repro://train")}
+    print("DISJOINT_OK")
+""")
+
+
+def test_disjoint_train_serve_psets_8dev(subproc):
+    out = subproc(DISJOINT_CODE, n=8)
+    assert "DISJOINT_OK" in out

@@ -7,8 +7,11 @@ from __future__ import annotations
 import jax
 import numpy as np
 import pytest
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+
+from repro.core._compat import abstract_mesh
 
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.models import api
@@ -17,8 +20,8 @@ from repro.sharding import rules
 
 def _mesh(data=4, model=2, pod=None):
     if pod:
-        return AbstractMesh((pod, data, model), ("pod", "data", "model"))
-    return AbstractMesh((data, model), ("data", "model"))
+        return abstract_mesh((pod, data, model), ("pod", "data", "model"))
+    return abstract_mesh((data, model), ("data", "model"))
 
 
 def _axis_size(mesh, axes):
