@@ -25,11 +25,13 @@ from repro.launch.mesh import make_host_mesh
 from repro.runtime.trainer import Trainer, TrainerConfig
 
 arch, steps, batch, seq = sys.argv[1], int(sys.argv[2]), int(sys.argv[3]), int(sys.argv[4])
+persistent = sys.argv[5] == "persistent"
 cfg = base.get_smoke_config(arch)
 pcfg = base.get_parallel(arch)
 mesh = make_host_mesh()
-t = Trainer(cfg, pcfg, TrainerConfig(steps=steps, log_every=steps), mesh,
-            seq_len=seq, global_batch=batch)
+t = Trainer(cfg, pcfg,
+            TrainerConfig(steps=steps, log_every=steps, persistent=persistent),
+            mesh, seq_len=seq, global_batch=batch)
 params, opt_state = t.init_state()
 step_fn = t.compile(params, opt_state)
 b = t.pipeline.device_batch(0, mesh, pcfg)
@@ -45,6 +47,7 @@ print("RESULT " + json.dumps({
     "arch": arch, "steps": steps, "s_per_step": dt / steps,
     "tokens_per_s": batch * seq * steps / dt,
     "final_loss": float(m["loss"]),
+    "mode": "persistent" if persistent else "per-call",
 }))
 """
 
@@ -55,6 +58,8 @@ def main(argv=None):
     ap.add_argument("--steps", type=int, default=20)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--per-call", dest="per_call", action="store_true",
+                    help="plain-jit step instead of the persistent engine")
     args = ap.parse_args(argv)
 
     env = {
@@ -66,7 +71,7 @@ def main(argv=None):
     for arch in args.archs:
         proc = subprocess.run(
             [sys.executable, "-c", CHILD, arch, str(args.steps), str(args.batch),
-             str(args.seq)],
+             str(args.seq), "per-call" if args.per_call else "persistent"],
             capture_output=True, text=True, env=env, timeout=1800, cwd=str(ROOT),
         )
         if proc.returncode != 0:

@@ -56,6 +56,8 @@ from repro.core.descriptors import (  # noqa: F401
 )
 from repro.core.futures import (  # noqa: F401
     Future,
+    PartitionedRequest,
+    PersistentCollective,
     PersistentRequest,
     TraceFuture,
     trace_when_all,
@@ -85,6 +87,9 @@ from repro.core.overlap import (  # noqa: F401
     hierarchical_allreduce,
     matmul_reduce_scatter,
     merge_partial_attention,
+    partitioned_allreduce,
+    partitioned_ring_all_gather,
+    partitioned_ring_reduce_scatter,
     ring_all_gather,
     ring_all_gather_bidirectional,
     ring_attention,

@@ -15,9 +15,14 @@ from __future__ import annotations
 
 import functools
 
-from repro.core import collectives, overlap, tool
+from repro.core import collectives, datatypes, overlap, tool
 from repro.core.communicator import Communicator
-from repro.core.futures import PersistentRequest, TraceFuture
+from repro.core.futures import (
+    PersistentCollective,
+    PersistentRequest,
+    TraceFuture,
+    argument_signature,
+)
 
 
 def _counted(name, fn):
@@ -97,19 +102,95 @@ def _bind() -> None:
     Communicator.immediate_ring_allgather = immediate_ring_allgather
 
     # persistent operations (MPI_*_init / MPI_Start)
-    def persistent(self, fn, *example_args, in_specs=None, out_specs=None, **spmd_kw):
+    def persistent(
+        self,
+        fn,
+        *example_args,
+        in_specs=None,
+        out_specs=None,
+        donate_argnums=(),
+        warm_start=False,
+        **spmd_kw,
+    ):
         from jax.sharding import PartitionSpec as P
 
-        tool.pvar_count("persistent_init")
         jitted = self.spmd(
             fn,
             in_specs=in_specs if in_specs is not None else P(),
             out_specs=out_specs if out_specs is not None else P(),
+            donate_argnums=tuple(donate_argnums),
             **spmd_kw,
         )
-        return PersistentRequest(jitted, example_args)
+        return PersistentRequest(
+            jitted, example_args, donate_argnums=tuple(donate_argnums),
+            warm_start=warm_start,
+        )
 
+    persistent.__doc__ = (
+        "Persistent operation over this communicator (``MPI_Send_init`` "
+        "analogue): AOT-lower ``fn`` under :meth:`spmd` for the example "
+        "argument list and return a :class:`PersistentRequest` whose "
+        "``start()`` re-fires the compiled executable with zero re-tracing."
+    )
     Communicator.persistent = persistent
+
+    # persistent collectives (MPI_Allreduce_init & friends, MPI 4.0 §6.12):
+    # AOT-lower one executable per dtype bucket of the example's datatype.
+    def _persistent_collective(self, name, example, *, unpackable=True, **opkw):
+        import jax
+
+        fn = getattr(collectives, name)
+        if isinstance(example, jax.ShapeDtypeStruct) or collectives._is_leaf_operand(
+            example
+        ):
+            # single-array fast path: compile on the array's own shape
+            aval = (
+                example
+                if isinstance(example, jax.ShapeDtypeStruct)
+                else jax.ShapeDtypeStruct(jax.numpy.shape(example),
+                                          jax.numpy.result_type(example))
+            )
+            jitted = self.spmd(lambda b, _fn=fn: _fn(self, b, **opkw))
+            return PersistentCollective(
+                name, None, [PersistentRequest(jitted, (aval,))]
+            )
+        dt = datatypes.datatype_of(example)
+        requests = []
+        for sds in dt.shape_dtype_structs():
+            jitted = self.spmd(lambda b, _fn=fn: _fn(self, b, **opkw))
+            requests.append(PersistentRequest(jitted, (sds,)))
+        return PersistentCollective(
+            name, dt, requests, unpackable=unpackable,
+            signature=argument_signature(example),
+        )
+
+    def _bind_init(name, unpackable=True):
+        def init_method(self, example, _name=name, _u=unpackable, **k):
+            tool.pvar_count(f"{_name}_init")
+            return _persistent_collective(self, _name, example, unpackable=_u, **k)
+
+        init_method.__name__ = f"{name}_init"
+        init_method.__doc__ = (
+            f"Persistent {name} (``MPI_{name.capitalize()}_init``): AOT-lower "
+            f"one {name} per dtype bucket of ``example``'s datatype; "
+            f"``start(value)`` re-fires the compiled executables."
+        )
+        setattr(Communicator, f"{name}_init", init_method)
+
+    _bind_init("allreduce")
+    _bind_init("alltoall")
+    # shape-changing collectives return raw per-dtype buckets for aggregates
+    _bind_init("reduce_scatter", unpackable=False)
+    _bind_init("allgather", unpackable=False)
+
+    # partitioned communication (MPI_Psend_init / MPI_Pready)
+    def partitioned_allreduce(self, num_partitions, *, continuation=None):
+        return overlap.partitioned_allreduce(
+            self, num_partitions, continuation=continuation
+        )
+
+    partitioned_allreduce.__doc__ = overlap.partitioned_allreduce.__doc__
+    Communicator.partitioned_allreduce = partitioned_allreduce
 
 
 _bind()

@@ -33,6 +33,7 @@ class ErrorClass(enum.IntEnum):
     ERR_TOPOLOGY = 11
     ERR_DIMS = 12
     ERR_ARG = 13
+    ERR_PENDING = 14
     ERR_TRUNCATE = 15
     ERR_IN_STATUS = 18
     ERR_FILE = 30
@@ -100,6 +101,10 @@ class ArgError(Error):
     klass = ErrorClass.ERR_ARG
 
 
+class PendingError(Error):
+    klass = ErrorClass.ERR_PENDING
+
+
 class TruncateError(Error):
     klass = ErrorClass.ERR_TRUNCATE
 
@@ -140,6 +145,7 @@ op = ErrorClass.ERR_OP
 topology = ErrorClass.ERR_TOPOLOGY
 dims = ErrorClass.ERR_DIMS
 arg = ErrorClass.ERR_ARG
+pending = ErrorClass.ERR_PENDING
 truncate = ErrorClass.ERR_TRUNCATE
 file = ErrorClass.ERR_FILE
 io = ErrorClass.ERR_IO
@@ -161,6 +167,7 @@ _CLASS_TO_EXC: dict[ErrorClass, Any] = {
     ErrorClass.ERR_TOPOLOGY: TopologyError,
     ErrorClass.ERR_DIMS: DimsError,
     ErrorClass.ERR_ARG: ArgError,
+    ErrorClass.ERR_PENDING: PendingError,
     ErrorClass.ERR_TRUNCATE: TruncateError,
     ErrorClass.ERR_FILE: FileError,
     ErrorClass.ERR_IO: IoError,

@@ -23,13 +23,19 @@ Contents:
   sequence-sharded KV caches.
 * :func:`ring_attention` — sequence-parallel attention for training: KV
   blocks circulate the ring; online-softmax state makes every step O(local).
+* :func:`partitioned_allreduce` / :func:`partitioned_ring_reduce_scatter` /
+  :func:`partitioned_ring_all_gather` — partitioned communication
+  (``MPI_Psend_init``/``MPI_Pready``): one logical collective split into K
+  independently-ready partitions, each a lazy :class:`TraceFuture` consumed
+  in ``Pready`` order with chunk-wise fused continuations — the schedule
+  behind backward-overlapped gradient sync (:mod:`repro.optim.grad_sync`).
 """
 
 from __future__ import annotations
 
 import math
 from functools import partial
-from typing import Callable
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -38,7 +44,7 @@ from jax import lax
 from repro.core import compress, errors
 from repro.core.communicator import Communicator
 from repro.core.descriptors import Compression
-from repro.core.futures import TraceFuture
+from repro.core.futures import PartitionedRequest, TraceFuture
 
 
 def _ring_perm(n: int, offset: int = 1) -> list[tuple[int, int]]:
@@ -391,3 +397,77 @@ def immediate_send_recv(comm: Communicator, x, perm):
     from repro.core import collectives
 
     return TraceFuture(lambda: collectives.send_recv(comm, x, perm))
+
+
+# ---------------------------------------------------------------------------
+# partitioned schedules (MPI_Psend_init / MPI_Pready over ring collectives)
+# ---------------------------------------------------------------------------
+
+
+def _partitioned(comm: Communicator, num_partitions: int, reduce_one, continuation):
+    """A :class:`PartitionedRequest` whose partition ``i``, once
+    ``pready(i, x)``, lowers ``reduce_one(x)`` and fuses the optional
+    chunk-wise ``continuation(i, reduced)`` into the same trace future —
+    consumed in ``Pready`` order, forced no later than ``wait()``."""
+
+    def fn(i, x):
+        y = reduce_one(x)
+        return continuation(i, y) if continuation is not None else y
+
+    req = PartitionedRequest(fn, num_partitions)
+    return req.start()
+
+
+def partitioned_allreduce(
+    comm: Communicator,
+    num_partitions: int,
+    *,
+    continuation: Callable[[int, jax.Array], Any] | None = None,
+) -> PartitionedRequest:
+    """All-reduce split into independently-ready partitions.
+
+    Each partition is a full ``psum`` over its own payload (numerically
+    identical to reducing the concatenation), so partitions can be marked
+    ready as their producers finish — per-bucket gradient reduction
+    overlapping the still-running backward pass is exactly this schedule.
+    """
+
+    from repro.core import collectives
+
+    return _partitioned(
+        comm, num_partitions, lambda x: collectives.allreduce(comm, x), continuation
+    )
+
+
+def partitioned_ring_reduce_scatter(
+    comm: Communicator,
+    num_partitions: int,
+    *,
+    axis: int = 0,
+    continuation: Callable[[int, jax.Array], Any] | None = None,
+) -> PartitionedRequest:
+    """Reduce-scatter rings, one per partition, consumed in ``Pready`` order."""
+
+    return _partitioned(
+        comm,
+        num_partitions,
+        lambda x: ring_reduce_scatter(comm, x, axis=axis),
+        continuation,
+    )
+
+
+def partitioned_ring_all_gather(
+    comm: Communicator,
+    num_partitions: int,
+    *,
+    axis: int = 0,
+    continuation: Callable[[int, jax.Array], Any] | None = None,
+) -> PartitionedRequest:
+    """All-gather rings, one per partition, consumed in ``Pready`` order."""
+
+    return _partitioned(
+        comm,
+        num_partitions,
+        lambda x: ring_all_gather(comm, x, axis=axis),
+        continuation,
+    )

@@ -327,6 +327,20 @@ cvar_register(
 
 pvar_counters: dict[str, int] = defaultdict(int)
 
+#: Documented performance variables (``MPI_T_pvar_get_info`` analogue).
+#: Collective call-site counters are registered implicitly by the method
+#: facade; the request-layer counters are registered here so tooling can
+#: enumerate them before the first event fires.
+PVARS: dict[str, str] = {}
+
+
+def pvar_register(name: str, doc: str) -> None:
+    """Describe a pvar (idempotent).  Counting does not require prior
+    registration — unknown counters still count — but registered pvars are
+    enumerable via :func:`pvar_info` with a zero initial value."""
+
+    PVARS.setdefault(name, doc)
+
 
 def pvar_count(op: str) -> None:
     pvar_counters[op] += 1
@@ -337,4 +351,18 @@ def pvar_reset() -> None:
 
 
 def pvar_read() -> dict[str, int]:
-    return dict(pvar_counters)
+    counts = {name: 0 for name in PVARS}
+    counts.update(pvar_counters)
+    return counts
+
+
+def pvar_info() -> dict[str, str]:
+    return dict(PVARS)
+
+
+# request-layer pvars (persistent / partitioned operations, C3)
+pvar_register("persistent_init", "persistent requests initialised (AOT lower+compile)")
+pvar_register("persistent_start", "MPI_Start analogues fired on persistent requests")
+pvar_register("partitioned_init", "partitioned requests constructed (Psend_init)")
+pvar_register("partitioned_start", "partitioned request activations (MPI_Start)")
+pvar_register("partition_ready", "partitions marked ready (MPI_Pready)")

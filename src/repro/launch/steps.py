@@ -3,6 +3,12 @@
 Each is a pure jax function of explicit pytrees (params / opt_state / batch /
 cache / token) so the same callable serves ``jax.jit`` at 8 CPU devices and
 512 production chips.
+
+:func:`make_persistent_step` is the persistent-mode entry: the step is
+AOT-lowered and compiled once against an example argument list (with the
+production donation pattern — params/opt-state for train, cache for decode)
+and returned as a :class:`~repro.core.futures.PersistentRequest` whose every
+call is an ``MPI_Start``-style re-fire.
 """
 
 from __future__ import annotations
@@ -13,8 +19,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import base
+from repro.core.futures import PersistentRequest
 from repro.models import api as model_api
 from repro.optim import AdamW, clip_by_global_norm
+
+#: the production buffer-donation pattern per step kind
+DONATION = {"train": (0, 1), "prefill": (), "decode": (1,)}
 
 
 def make_train_step(cfg: base.ModelConfig, pcfg: base.ParallelConfig, opt: AdamW):
@@ -105,3 +115,30 @@ def make_step(kind: str, cfg, pcfg, opt: AdamW | None = None):
     if kind == "decode":
         return make_decode_step(cfg, pcfg)
     raise ValueError(kind)
+
+
+def make_persistent_step(
+    kind: str,
+    cfg,
+    pcfg,
+    example_args: tuple,
+    opt: AdamW | None = None,
+    *,
+    donate: bool = True,
+    warm_start: bool = False,
+    **jit_kwargs: Any,
+) -> PersistentRequest:
+    """Persistent mode: AOT-lower one production step for ``example_args``.
+
+    ``example_args`` may be concrete arrays or ``jax.ShapeDtypeStruct``
+    stand-ins (pass ``in_shardings``/``out_shardings`` through
+    ``jit_kwargs`` to pin the production layout).  The returned request is a
+    drop-in callable for the jitted step with zero re-trace risk.
+    """
+
+    fn = make_step(kind, cfg, pcfg, opt)
+    donate_argnums = DONATION[kind] if donate else ()
+    jitted = jax.jit(fn, donate_argnums=donate_argnums, **jit_kwargs)
+    return PersistentRequest(
+        jitted, example_args, donate_argnums=donate_argnums, warm_start=warm_start
+    )

@@ -4,5 +4,9 @@ LR schedules, global-norm clipping, and gradient synchronisation built on the
 
 from repro.optim.adamw import AdamW, AdamWState  # noqa: F401
 from repro.optim.schedules import constant, cosine_warmup, linear_warmup  # noqa: F401
-from repro.optim.grad_sync import sync_gradients  # noqa: F401
+from repro.optim.grad_sync import (  # noqa: F401
+    ErrorFeedbackState,
+    PartitionedGradSync,
+    sync_gradients,
+)
 from repro.optim.clip import clip_by_global_norm, global_norm  # noqa: F401

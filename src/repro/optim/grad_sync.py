@@ -1,10 +1,18 @@
-"""Gradient synchronisation through the ``repro.core`` interface.
+"""Partition-overlapped gradient synchronisation through ``repro.core``.
 
 Under pure ``jit`` (GSPMD), gradient reduction is implicit in the partitioned
 backward pass; this module is the *explicit* path used when the trainer runs
 data-parallel replicas under ``shard_map`` — and the home of the cross-pod
 distributed-optimization tricks:
 
+* **partitioned reduction** (MPI 4.0 partitioned communication): the bucketed
+  gradient pytree becomes a :class:`~repro.core.futures.PartitionedRequest` —
+  each per-dtype bucket is one partition, marked ready (``MPI_Pready``) as
+  the backward pass produces its gradients and reduced as a lazy
+  :class:`~repro.core.futures.TraceFuture`, so per-bucket communication
+  interleaves with the compute producing later buckets.  Results are
+  independent of the ready order (:meth:`PartitionedGradSync.__call__`
+  accepts any ``pready_order``);
 * hierarchical reduction (reduce-scatter intra-pod, all-reduce inter-pod,
   all-gather intra-pod) so only 1/inner_size of the payload crosses DCN;
 * int8 compression with **error feedback** (EF-SGD, Karimireddy et al.):
@@ -14,19 +22,25 @@ distributed-optimization tricks:
 * bucketed flattening via the datatype layer: one collective per dtype group
   instead of one per tensor (the MPI derived-datatype lesson applied to
   gradients).
+
+:func:`sync_gradients` is the stable functional entry point; it constructs a
+:class:`PartitionedGradSync` per call.  Long-lived callers (the trainer's
+explicit-collective path) hold one :class:`PartitionedGradSync` and re-fire
+it every step.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import datatypes
+from repro.core import datatypes, errors
 from repro.core.communicator import Communicator
 from repro.core.descriptors import Compression
+from repro.core.futures import PartitionedRequest
 from repro.core.overlap import hierarchical_allreduce
 from repro.kernels.quant import ops as quant
 
@@ -53,6 +67,90 @@ def _compress_with_feedback(g: jax.Array, e: jax.Array) -> tuple[jax.Array, jax.
     return cm, m - cm
 
 
+class PartitionedGradSync:
+    """Gradient all-reduce as a partitioned request over dtype buckets.
+
+    One instance fixes the communicator topology and compression mode; each
+    ``__call__`` packs the gradient pytree into per-dtype buckets, activates
+    a :class:`PartitionedRequest` with one partition per bucket, marks each
+    bucket ready (in ``pready_order`` — any order yields identical results),
+    and waits.  Because every partition is a lazy trace future, XLA sees each
+    bucket's reduction as an independent dependence-graph node anchored where
+    its gradients are produced — the compiler overlaps bucket ``i``'s
+    collective with the compute for bucket ``i+1`` (backward-overlap).
+    """
+
+    def __init__(
+        self,
+        inner: Communicator,
+        outer: Communicator | None = None,
+        *,
+        compression: Compression = Compression.NONE,
+        mean: bool = True,
+    ):
+        self.inner = inner
+        self.outer = outer
+        self.compression = compression
+        self.mean = mean
+
+    # -- one bucket -----------------------------------------------------------
+
+    def _reduce_bucket(self, index: int, buf: jax.Array) -> jax.Array:
+        if self.outer is None:
+            return jax.lax.psum(buf, self.inner.axis_names)
+        return hierarchical_allreduce(
+            buf, self.inner, self.outer, compression=self.compression
+        )
+
+    # -- the full pytree ------------------------------------------------------
+
+    def __call__(
+        self,
+        grads: Params,
+        ef: ErrorFeedbackState | None = None,
+        *,
+        pready_order: Sequence[int] | None = None,
+    ) -> tuple[Params, ErrorFeedbackState | None]:
+        """All-reduce a gradient pytree across data-parallel ranks.
+
+        Single fabric (``outer is None``): one bucketed all-reduce per dtype
+        group.  Two fabrics: hierarchical reduction; with
+        ``compression=INT8`` the inter-pod stage additionally moves int8
+        payloads, and — when ``ef`` is provided — the rank-local message is
+        error-feedback compressed first.  Returns (synchronised grads, new
+        error-feedback state).
+        """
+
+        n_total = self.inner.size() * (self.outer.size() if self.outer is not None else 1)
+        scale = 1.0 / n_total if self.mean else 1.0
+
+        new_ef = ef
+        if self.compression is Compression.INT8 and ef is not None:
+            flat_g, treedef = jax.tree.flatten(grads)
+            flat_e = treedef.flatten_up_to(ef.residual)
+            pairs = [_compress_with_feedback(g, e) for g, e in zip(flat_g, flat_e)]
+            grads = treedef.unflatten([p[0] for p in pairs])
+            new_ef = ErrorFeedbackState(residual=treedef.unflatten([p[1] for p in pairs]))
+
+        # bucketed: the pytree packs into per-dtype buffers; buckets are the
+        # partitions of one partitioned request, each reduced independently
+        bufs, dtype_desc = datatypes.pack(grads)
+        req = PartitionedRequest(self._reduce_bucket, len(bufs)).start()
+        order = tuple(pready_order) if pready_order is not None else tuple(range(len(bufs)))
+        errors.check(
+            sorted(order) == list(range(len(bufs))),
+            errors.ErrorClass.ERR_REQUEST,
+            f"pready_order {order} is not a permutation of {len(bufs)} buckets",
+        )
+        for i in order:
+            req.pready(i, bufs[i])
+        reduced = req.wait()                 # index order: pready-order independent
+        synced = datatypes.unpack(reduced, dtype_desc)
+
+        out = jax.tree.map(lambda s: (s.astype(jnp.float32) * scale).astype(s.dtype), synced)
+        return out, new_ef
+
+
 def sync_gradients(
     grads: Params,
     inner: Communicator,
@@ -61,36 +159,9 @@ def sync_gradients(
     compression: Compression = Compression.NONE,
     ef: ErrorFeedbackState | None = None,
     mean: bool = True,
+    pready_order: Sequence[int] | None = None,
 ) -> tuple[Params, ErrorFeedbackState | None]:
-    """All-reduce a gradient pytree across data-parallel ranks.
+    """Functional wrapper over :class:`PartitionedGradSync` (stable API)."""
 
-    Single fabric (``outer is None``): one bucketed all-reduce per dtype
-    group.  Two fabrics: hierarchical reduction; with ``compression=INT8``
-    the inter-pod stage additionally moves int8 payloads, and — when ``ef``
-    is provided — the rank-local message is error-feedback compressed first.
-    Returns (synchronised grads, new error-feedback state).
-    """
-
-    n_total = inner.size() * (outer.size() if outer is not None else 1)
-    scale = 1.0 / n_total if mean else 1.0
-
-    new_ef = ef
-    if compression is Compression.INT8 and ef is not None:
-        flat_g, treedef = jax.tree.flatten(grads)
-        flat_e = treedef.flatten_up_to(ef.residual)
-        pairs = [_compress_with_feedback(g, e) for g, e in zip(flat_g, flat_e)]
-        grads = treedef.unflatten([p[0] for p in pairs])
-        new_ef = ErrorFeedbackState(residual=treedef.unflatten([p[1] for p in pairs]))
-
-    def reduce_leaf(g):
-        if outer is None:
-            return jax.lax.psum(g, inner.axis_names)
-        return hierarchical_allreduce(g, inner, outer, compression=compression)
-
-    # bucketed: pack the whole pytree into per-dtype buffers, reduce each once
-    bufs, dtype_desc = datatypes.pack(grads)
-    reduced = [reduce_leaf(b) for b in bufs]
-    synced = datatypes.unpack(reduced, dtype_desc)
-
-    out = jax.tree.map(lambda s: (s.astype(jnp.float32) * scale).astype(s.dtype), synced)
-    return out, new_ef
+    sync = PartitionedGradSync(inner, outer, compression=compression, mean=mean)
+    return sync(grads, ef, pready_order=pready_order)

@@ -78,7 +78,19 @@ class StepGuard:
     straggler: StragglerPolicy
     injector: FaultInjector | None = None
 
-    def run(self, step: int, fn: Callable[[], object]) -> tuple[object, dict]:
+    def run(
+        self, step: int, fn: Callable[[], object], *, retry_safe: bool = True
+    ) -> tuple[object, dict]:
+        """Run one step under the policy.
+
+        ``retry_safe=False`` declares that ``fn`` cannot be re-dispatched
+        with the same inputs — the persistent-step path donates its
+        params/opt-state buffers, which a second dispatch would read after
+        free.  A straggler then goes straight to the failure path
+        (treat-as-failed → restore from checkpoint), the production practice
+        for donated step buffers.
+        """
+
         attempts = 0
         while True:
             attempts += 1
@@ -88,7 +100,7 @@ class StepGuard:
             out = fn()
             dt = time.perf_counter() - t0
             straggled = self.straggler.is_straggler(dt)
-            if straggled and self.straggler.should_retry(attempts):
+            if straggled and retry_safe and self.straggler.should_retry(attempts):
                 continue  # re-dispatch the same deterministic step
             if straggled:
                 raise WorkerFailure(

@@ -1,10 +1,17 @@
 """The Server: batched prefill + decode serving loop.
 
 Continuous-batching-lite: requests are grouped into fixed-size batches
-(padded to ``max_batch``), prefilled once, then decoded step-by-step with a
-jit-compiled single-token step over the persistent KV/SSM cache.  The cache
-is sharded per ``repro.sharding.rules`` (batch over data axes, heads or
-sequence over model axis; int8 cache when configured).
+(padded to ``max_batch``), prefilled once, then decoded step-by-step over
+the persistent KV/SSM cache.  The cache is sharded per
+``repro.sharding.rules`` (batch over data axes, heads or sequence over model
+axis; int8 cache when configured).
+
+**Persistent decode engine**: the single-token decode step — the serving hot
+loop — is built once per argument signature as a
+:class:`~repro.core.futures.PersistentRequest` (AOT lower + compile, cache
+donated) and re-fired ``MPI_Start``-style for every token; the prefill step
+is persistent per prompt-shape bucket the same way.  Steady-state decode can
+never re-trace (``trace:decode_step`` pvar stays at one per signature).
 """
 
 from __future__ import annotations
@@ -19,7 +26,9 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.configs.base import ModelConfig, ParallelConfig
+from repro.core import tool
 from repro.core.communicator import Communicator
+from repro.core.futures import PersistentRequest, argument_signature
 from repro.models import api as model_api
 from repro.sharding import rules
 
@@ -56,7 +65,43 @@ class Server:
             self.params = jax.jit(self.bundle.init)(jax.random.PRNGKey(scfg.seed))
             pspecs = rules.param_specs(self.params, mesh, pcfg)
             self.params = jax.device_put(self.params, rules.shardings(pspecs, mesh))
-        self._decode_fn = None
+        # persistent steps, keyed by argument signature (shape bucket): one
+        # AOT compile per bucket, MPI_Start re-fires ever after
+        self._prefill_reqs: dict[tuple, PersistentRequest] = {}
+        self._decode_reqs: dict[tuple, PersistentRequest] = {}
+
+    # -- persistent step construction -------------------------------------------
+
+    def _prefill_request(self, batch) -> PersistentRequest:
+        key = argument_signature(batch)
+        req = self._prefill_reqs.get(key)
+        if req is None:
+            def prefill_step(p, b):
+                tool.pvar_count("trace:prefill_step")
+                return self.bundle.prefill(
+                    p, b, self.pcfg, None,
+                    extra_capacity=self.scfg.max_new_tokens,
+                )
+
+            req = PersistentRequest(jax.jit(prefill_step), (self.params, batch))
+            self._prefill_reqs[key] = req
+        return req
+
+    def _decode_request(self, cache, tok) -> PersistentRequest:
+        key = argument_signature((cache, tok))
+        req = self._decode_reqs.get(key)
+        if req is None:
+            def decode_step(p, c, t):
+                tool.pvar_count("trace:decode_step")
+                return self.bundle.decode(p, c, t, self.pcfg, None)
+
+            req = PersistentRequest(
+                jax.jit(decode_step, donate_argnums=(1,)),
+                (self.params, cache, tok),
+                donate_argnums=(1,),
+            )
+            self._decode_reqs[key] = req
+        return req
 
     # -- batching ---------------------------------------------------------------
 
@@ -90,26 +135,17 @@ class Server:
         batch, _lens = self._pad_batch(requests)
         key = jax.random.PRNGKey(self.scfg.seed)
         with self.mesh:
-            logits, cache = jax.jit(
-                lambda p, b: self.bundle.prefill(
-                    p, b, self.pcfg, None,
-                    extra_capacity=self.scfg.max_new_tokens,
-                )
-            )(self.params, batch)
+            logits, cache = self._prefill_request(batch)(self.params, batch)
             t_prefill = time.perf_counter() - t0
 
-            if self._decode_fn is None:
-                self._decode_fn = jax.jit(
-                    lambda p, c, t: self.bundle.decode(p, c, t, self.pcfg, None),
-                    donate_argnums=(1,),
-                )
             outs = []
             tok = self._sample(logits, key)
             outs.append(tok)
             t1 = time.perf_counter()
+            decode = self._decode_request(cache, tok[:, None])
             for i in range(self.scfg.max_new_tokens - 1):
                 key, sub = jax.random.split(key)
-                logits, cache = self._decode_fn(self.params, cache, tok[:, None])
+                logits, cache = decode(self.params, cache, tok[:, None])
                 tok = self._sample(logits, sub)
                 outs.append(tok)
             jax.block_until_ready(tok)

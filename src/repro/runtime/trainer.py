@@ -14,6 +14,18 @@ Distribution is GSPMD-first: the step is a plain ``jax.jit`` with
 function lowers for 8 CPU devices here and 512 TPU chips on the production
 mesh (the dry-run proves the latter).  The explicit-collective path
 (``shard_map`` + ``repro.core``) backs the overlap/compression features.
+
+**Persistent execution engine** (default): the step is built *once* as a
+:class:`~repro.core.futures.PersistentRequest` — AOT-lowered and compiled
+with params/opt-state donated — and every step is an ``MPI_Start``-style
+re-fire of the compiled executable.  The hot loop can never re-trace (the
+``trace:train_step`` pvar counts traces; it stays at 1), argument
+shape/sharding drift raises ``ERR_REQUEST`` instead of silently recompiling,
+and donation makes steady-state steps allocation-free.  Because donated
+buffers cannot be re-dispatched, the straggler policy runs with
+``retry_safe=False``: a straggler goes straight to the failure path
+(checkpoint restore), the production behaviour for donated step buffers.
+``TrainerConfig(persistent=False)`` restores the plain-``jit`` path.
 """
 
 from __future__ import annotations
@@ -32,7 +44,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import ModelConfig, ParallelConfig
+from repro.core import tool
 from repro.core.communicator import Communicator
+from repro.core.futures import PersistentRequest
 from repro.data import TokenPipeline
 from repro.models import api as model_api
 from repro.optim import AdamW, clip_by_global_norm, cosine_warmup
@@ -55,6 +69,10 @@ class TrainerConfig:
     keep_checkpoints: int = 3
     log_every: int = 10
     max_restarts: int = 3
+    # persistent execution engine: AOT-compile the step once, MPI_Start it
+    # every iteration (zero re-traces); donate aliases params/opt-state.
+    persistent: bool = True
+    donate: bool = True
 
 
 def make_train_step(cfg: ModelConfig, pcfg: ParallelConfig, tcfg: TrainerConfig, opt: AdamW):
@@ -121,6 +139,7 @@ class Trainer:
             image_dim=1152,
         )
         self._compiled = None
+        self._bshard = None
         self.metrics_history: list[dict] = []
         self.restarts = 0
 
@@ -132,9 +151,13 @@ class Trainer:
             pspecs = rules.param_specs(params, self.mesh, self.pcfg)
             params = jax.device_put(params, rules.shardings(pspecs, self.mesh))
             opt_state = jax.jit(self.opt.init)(params)
+            # pin the optimiser state to its declared shardings up front: the
+            # persistent executable is bound to them (ERR_REQUEST on drift)
+            _, oshard = self._state_shardings(params, opt_state)
+            opt_state = jax.device_put(opt_state, oshard)
         return params, opt_state
 
-    def _shardings_for(self, params, opt_state, batch):
+    def _state_shardings(self, params, opt_state):
         pspecs = rules.param_specs(params, self.mesh, self.pcfg)
         pshard = rules.shardings(pspecs, self.mesh)
         oshard = jax.tree.map(
@@ -153,6 +176,10 @@ class Trainer:
             return by_shape.get(s, cur)
 
         oshard = jax.tree.map(moment_shard, opt_state, oshard)
+        return pshard, oshard
+
+    def _shardings_for(self, params, opt_state, batch):
+        pshard, oshard = self._state_shardings(params, opt_state)
         bshard = {
             k: NamedSharding(self.mesh, s)
             for k, s in zip(
@@ -163,21 +190,49 @@ class Trainer:
 
     def compile(self, params, opt_state):
         batch = self.pipeline.device_batch(0, self.mesh, self.pcfg)
-        step_fn = make_train_step(self.cfg, self.pcfg, self.tcfg, self.opt)
+        base_step = make_train_step(self.cfg, self.pcfg, self.tcfg, self.opt)
+
+        def step_fn(params, opt_state, batch):
+            # a python side effect at trace time: the pvar counts every trace
+            # of the step, so tests can assert the hot loop never re-traces
+            tool.pvar_count("trace:train_step")
+            return base_step(params, opt_state, batch)
+
         pshard, oshard, bshard = self._shardings_for(params, opt_state, batch)
         with self.mesh:
-            # NOTE: no donation here — the straggler policy re-dispatches the
-            # same step with the same inputs, which donated buffers forbid.
-            # The production lowering (launch/dryrun.py) donates params and
-            # opt state; at scale the straggler retry path instead restores
-            # from the last checkpoint (the failure path below).
-            jitted = jax.jit(
-                step_fn,
-                in_shardings=(pshard, oshard, bshard),
-                out_shardings=(pshard, oshard, None),
-            )
-            self._compiled = jitted
-        return jitted
+            if self.tcfg.persistent:
+                # persistent execution engine: AOT lower+compile once against
+                # the canonical shardings; every step is an MPI_Start re-fire
+                # of the executable (donated params/opt-state alias outputs).
+                example = (
+                    jax.device_put(params, pshard),
+                    jax.device_put(opt_state, oshard),
+                    jax.device_put(batch, bshard),
+                )
+                donate = (0, 1) if self.tcfg.donate else ()
+                jitted = jax.jit(
+                    step_fn,
+                    in_shardings=(pshard, oshard, bshard),
+                    out_shardings=(pshard, oshard, None),
+                    donate_argnums=donate,
+                )
+                self._compiled = PersistentRequest(
+                    jitted, example, donate_argnums=donate
+                )
+                self._bshard = bshard
+            else:
+                # NOTE: no donation here — the straggler policy re-dispatches
+                # the same step with the same inputs, which donated buffers
+                # forbid.  The production lowering (launch/dryrun.py) donates
+                # params and opt state; at scale the straggler retry path
+                # instead restores from the last checkpoint (the failure
+                # path below).
+                self._compiled = jax.jit(
+                    step_fn,
+                    in_shardings=(pshard, oshard, bshard),
+                    out_shardings=(pshard, oshard, None),
+                )
+        return self._compiled
 
     # -- the loop --------------------------------------------------------------
 
@@ -212,25 +267,40 @@ class Trainer:
         }
 
     def _run_span(self, step_fn, params, opt_state, step, steps):
+        # donated buffers cannot be re-dispatched: stragglers under the
+        # persistent engine take the failure path (checkpoint restore)
+        retry_safe = not (self.tcfg.persistent and self.tcfg.donate)
         while step < steps:
             batch = self.pipeline.device_batch(step, self.mesh, self.pcfg)
+            if self.tcfg.persistent:
+                # no-op when device_batch already matches the bound sharding
+                batch = jax.device_put(batch, self._bshard)
 
             def do_step():
                 new_p, new_o, metrics = step_fn(params, opt_state, batch)
                 jax.block_until_ready(metrics["loss"])
                 return new_p, new_o, metrics
 
-            (params, opt_state, metrics), info = self.guard.run(step, do_step)
+            (params, opt_state, metrics), info = self.guard.run(
+                step, do_step, retry_safe=retry_safe
+            )
             step += 1
             if step % self.tcfg.log_every == 0 or step == steps:
+                pvars = tool.pvar_read()
                 rec = {
                     "step": step,
                     "loss": float(metrics["loss"]),
                     "grad_norm": float(metrics["grad_norm"]),
                     **{k: float(v) for k, v in info.items() if k != "straggled"},
+                    "persistent_start": pvars.get("persistent_start", 0),
+                    "partition_ready": pvars.get("partition_ready", 0),
                 }
                 self.metrics_history.append(rec)
-                log.info("step %(step)d loss %(loss).4f", rec)
+                log.info(
+                    "step %(step)d loss %(loss).4f "
+                    "persistent_start %(persistent_start)d "
+                    "partition_ready %(partition_ready)d", rec,
+                )
             if (
                 self.ckpt is not None
                 and self.tcfg.checkpoint_every

@@ -42,6 +42,46 @@ def test_host_future_then_chains():
     assert float(g.get()) == 6.0
 
 
+def test_host_future_then_consumes_parent():
+    """Chaining hands the request to the continuation: a chained-then-get
+    double read raises ERR_REQUEST, consistent with when_all's behaviour."""
+
+    f = Future(jnp.asarray(1.0))
+    g = f.then(lambda fut: fut.get() + 1.0)
+    assert not f.valid()
+    with pytest.raises(errors.RequestError):
+        f.get()
+    assert float(g.get()) == 2.0
+
+    # even a continuation that never reads the value consumes the parent
+    h = Future(jnp.asarray(2.0))
+    h.then(lambda fut: jnp.asarray(0.0))
+    assert not h.valid()
+    with pytest.raises(errors.RequestError):
+        h.then(lambda fut: fut)     # then() on a consumed future is erroneous
+
+    # a pass-through continuation hands the value on in a fresh valid request
+    p = Future(jnp.asarray(3.0))
+    q = p.then(lambda fut: fut)
+    assert not p.valid() and q.valid()
+    assert float(q.get()) == 3.0
+
+
+def test_when_any_timeout_raises_pending():
+    class _NeverReady:
+        shape, dtype = (), jnp.float32
+
+        def is_ready(self):
+            return False
+
+    stuck = Future(_NeverReady())
+    with pytest.raises(errors.PendingError):
+        when_any([stuck], timeout_s=0.05)
+    done = Future(jnp.asarray(1.0))
+    f, idx = when_any([stuck, done], timeout_s=1.0)   # a ready peer still wins
+    assert idx == 1 and float(f.get()) == 1.0
+
+
 def test_when_all_joins():
     fs = [Future(jnp.asarray(i)) for i in range(4)]
     joined = when_all(fs)

@@ -1,0 +1,463 @@
+"""The request layer (MPI 4.0 persistent + partitioned operations):
+argument-list binding (ERR_REQUEST on drift), buffer donation, persistent
+collectives over datatypes, partitioned order-independence, chunk-fused
+continuations, partitioned gradient sync parity, and the trainer/server
+zero-retrace guarantee."""
+
+from __future__ import annotations
+
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core as mpx
+from repro.core import errors, tool
+from repro.core.futures import PartitionedRequest, PersistentRequest
+
+
+# ---------------------------------------------------------------------------
+# persistent requests: argument binding, donation, continuations
+# ---------------------------------------------------------------------------
+
+
+def test_persistent_start_shape_mismatch_raises():
+    req = PersistentRequest(
+        jax.jit(lambda x: x * 2.0), (jax.ShapeDtypeStruct((4,), jnp.float32),)
+    )
+    with pytest.raises(errors.RequestError):
+        req.start(jnp.ones((5,), jnp.float32))
+
+
+def test_persistent_start_dtype_mismatch_raises():
+    req = PersistentRequest(
+        jax.jit(lambda x: x * 2.0), (jax.ShapeDtypeStruct((4,), jnp.float32),)
+    )
+    with pytest.raises(errors.RequestError):
+        req.start(jnp.ones((4,), jnp.int32))
+
+
+def test_persistent_start_structure_mismatch_raises():
+    req = PersistentRequest(
+        jax.jit(lambda t: t["a"] + 1.0),
+        ({"a": jax.ShapeDtypeStruct((2,), jnp.float32)},),
+    )
+    with pytest.raises(errors.RequestError):
+        req.start({"a": jnp.ones((2,)), "b": jnp.ones((2,))})
+
+
+def test_persistent_donation_aliases():
+    """Donated inputs are invalidated and (where the backend aliases) the
+    output reuses the input buffer."""
+
+    jitted = jax.jit(lambda x: x + 1.0, donate_argnums=(0,))
+    req = PersistentRequest(
+        jitted, (jax.ShapeDtypeStruct((8,), jnp.float32),), donate_argnums=(0,)
+    )
+    assert req.donate_argnums == (0,)
+    inp = jnp.zeros((8,), jnp.float32)
+    try:
+        ptr = inp.unsafe_buffer_pointer()
+    except Exception:  # pragma: no cover - backend-dependent API
+        ptr = None
+    out = req.start(inp).get()
+    np.testing.assert_array_equal(np.asarray(out), np.ones(8))
+    if not inp.is_deleted():
+        pytest.skip("backend ignores donation (no aliasing to check)")
+    if ptr is not None:
+        assert out.unsafe_buffer_pointer() == ptr  # true aliasing
+
+
+def test_persistent_warm_start_prefetches():
+    fired = []
+
+    def fn(x):
+        return x + 1.0
+
+    req = PersistentRequest(
+        jax.jit(fn), (jnp.full((4,), 7.0),), warm_start=True
+    )
+    # warm start ran on zeros the request owns; a real start still works and
+    # the example argument was not consumed by the prefetch
+    out = req.start(jnp.full((4,), 1.0)).get()
+    np.testing.assert_array_equal(np.asarray(out), np.full(4, 2.0))
+    assert fired == []  # nothing host-visible leaked from the prefetch
+
+
+def test_persistent_then_continuations_chain_on_every_start():
+    req = PersistentRequest(
+        jax.jit(lambda x: x + 1.0), (jax.ShapeDtypeStruct((), jnp.float32),)
+    )
+    req.then(lambda f: f.get() * 10.0).then(lambda f: f.get() + 5.0)
+    assert float(req.start(jnp.float32(1.0)).get()) == 25.0
+    assert float(req.start(jnp.float32(2.0)).get()) == 35.0
+    assert req.starts == 2
+
+
+def test_persistent_start_counts_pvars():
+    tool.pvar_reset()
+    req = PersistentRequest(
+        jax.jit(lambda x: x), (jax.ShapeDtypeStruct((), jnp.float32),)
+    )
+    req.start(jnp.float32(0.0)).get()
+    req.start(jnp.float32(1.0)).get()
+    counts = tool.pvar_read()
+    assert counts["persistent_init"] == 1
+    assert counts["persistent_start"] == 2
+    # a rejected start is not an MPI_Start event
+    with pytest.raises(errors.RequestError):
+        req.start(jnp.ones((3,), jnp.float32))
+    assert tool.pvar_read()["persistent_start"] == 2
+    assert req.starts == 2
+    # registered request pvars are enumerable before any event
+    assert "partition_ready" in tool.pvar_info()
+
+
+# ---------------------------------------------------------------------------
+# persistent collectives (MPI_Allreduce_init & friends)
+# ---------------------------------------------------------------------------
+
+
+def test_persistent_collective_single_array():
+    comm = mpx.world()
+    req = comm.allreduce_init(jnp.ones((8,), jnp.float32))
+    out = req.start(jnp.full((8,), 3.0)).get()
+    np.testing.assert_array_equal(np.asarray(out), np.full(8, 3.0))
+    with pytest.raises(errors.RequestError):
+        req.start(jnp.ones((4,), jnp.float32))
+    assert "all-reduce" in req.as_text()
+
+
+def test_persistent_collective_aggregate_buckets():
+    """One AOT executable per dtype bucket; start() packs/unpacks the
+    aggregate through the datatype layer."""
+
+    import dataclasses
+
+    @dataclasses.dataclass
+    class Grads:
+        w: jax.Array
+        b: jax.Array
+        n: jax.Array
+
+    comm = mpx.world()
+    g = Grads(
+        w=jnp.ones((4, 2), jnp.float32),
+        b=jnp.ones((3,), jnp.float32),
+        n=jnp.ones((2,), jnp.int32),
+    )
+    req = comm.allreduce_init(g)
+    assert len(req.requests) == 2      # {f32} and {i32} buckets
+    out = req.start(g).get()
+    np.testing.assert_array_equal(np.asarray(out.w), np.ones((4, 2)))
+    np.testing.assert_array_equal(np.asarray(out.n), np.ones(2, np.int32))
+    # aggregate drift binds too: a swapped leaf dtype must not silently cast
+    bad = Grads(w=g.w, b=g.b, n=g.n.astype(jnp.float32))
+    with pytest.raises(errors.RequestError):
+        req.start(bad)
+
+
+# ---------------------------------------------------------------------------
+# partitioned requests
+# ---------------------------------------------------------------------------
+
+
+def test_partitioned_pready_order_independence():
+    import itertools
+
+    for order in itertools.permutations(range(3)):
+        req = PartitionedRequest(lambda i, x: x * (i + 1.0), 3).start()
+        for i in order:
+            req.pready(i, jnp.float32(2.0))
+        res = [float(r) for r in req.wait()]
+        assert res == [2.0, 4.0, 6.0], (order, res)
+
+
+def test_partitioned_protocol_errors():
+    req = PartitionedRequest(lambda i, x: x, 2)
+    with pytest.raises(errors.RequestError):
+        req.pready(0, 1.0)                # pready before start
+    req.start()
+    with pytest.raises(errors.RequestError):
+        req.start()                       # double activation
+    req.pready(0, jnp.float32(1.0))
+    with pytest.raises(errors.RequestError):
+        req.pready(0, jnp.float32(1.0))   # duplicate pready
+    with pytest.raises(errors.RequestError):
+        req.pready(5, jnp.float32(1.0))   # out of range
+    with pytest.raises(errors.PendingError):
+        req.wait()                        # partition 1 never readied
+    req.pready(1, jnp.float32(2.0))
+    assert [float(r) for r in req.wait()] == [1.0, 2.0]
+    req.start()                           # persistent: reusable after wait
+
+
+def test_partitioned_laziness_and_chunk_fused_continuations():
+    """Nothing is traced at pready time; the continuation fuses into each
+    partition's future and is traced exactly once per chunk at forcing.
+    The python-level assertions run at trace time inside the SPMD body."""
+
+    comm = mpx.world()
+    ran: list[int] = []
+
+    def continuation(i, reduced):
+        ran.append(i)
+        return reduced + i
+
+    @comm.spmd
+    def prog():
+        req = mpx.partitioned_allreduce(comm, 3, continuation=continuation)
+        futs = [req.pready(i, jnp.float32(10.0)) for i in (2, 0, 1)]
+        assert ran == []                  # lazy: no partition traced yet
+        assert not any(req.parrived(i) for i in range(3))
+        chained = futs[1].then(lambda f: f.get() * 2.0)   # chunk-wise then()
+        assert ran == []
+        doubled = chained.get()           # futs[1] is partition 0: force it
+        assert ran == [0]
+        res = req.wait()
+        assert ran == [0, 1, 2]           # remaining chunks, index order
+        return (doubled, *res)
+
+    doubled, *res = prog()
+    assert float(doubled) == 20.0
+    assert [float(r) for r in res] == [10.0, 11.0, 12.0]
+
+
+# ---------------------------------------------------------------------------
+# multi-device: partitioned collectives inside SPMD + sharding binding
+# ---------------------------------------------------------------------------
+
+
+PARTITIONED_SPMD = textwrap.dedent("""
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro import core as mpx
+    from repro.core import errors, overlap
+
+    comm = mpx.world()
+    N = comm.size()
+    assert N == 8
+
+    @comm.spmd
+    def prog():
+        r = comm.rank().astype(jnp.float32)
+        req = comm.partitioned_allreduce(3)
+        for i in (2, 0, 1):                      # any Pready order
+            req.pready(i, r + i)
+        return tuple(req.wait())
+
+    out = prog()
+    base = sum(range(8))
+    for i, o in enumerate(out):
+        np.testing.assert_allclose(np.asarray(o), base + 8 * i)
+    print("PARTITIONED_SPMD_OK")
+
+    # partitioned ring all-gather: chunk continuation fuses into the ring
+    @comm.spmd
+    def ring():
+        r = comm.rank().astype(jnp.float32)
+        req = overlap.partitioned_ring_all_gather(
+            comm, 2, continuation=lambda i, g: g.sum() + i)
+        req.pready(1, jnp.ones((2,)) * r)
+        req.pready(0, jnp.ones((2,)) * r)
+        return tuple(req.wait())
+
+    s0, s1 = ring()
+    np.testing.assert_allclose(np.asarray(s0), 2 * sum(range(8)))
+    np.testing.assert_allclose(np.asarray(s1), 2 * sum(range(8)) + 1)
+    print("PARTITIONED_RING_OK")
+
+    # persistent request sharding binding: starting with a differently
+    # sharded argument raises ERR_REQUEST instead of silently resharding
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    x_sharded = jax.device_put(
+        jnp.arange(16, dtype=jnp.float32),
+        NamedSharding(comm.mesh, P(comm.axis_names[0])),
+    )
+    req = comm.persistent(lambda x: x * 2.0, x_sharded,
+                          in_specs=P(comm.axis_names[0]),
+                          out_specs=P(comm.axis_names[0]))
+    req.start(x_sharded).get()
+    x_repl = jax.device_put(
+        jnp.arange(16, dtype=jnp.float32), NamedSharding(comm.mesh, P())
+    )
+    try:
+        req.start(x_repl)
+        raise SystemExit("sharding mismatch did not raise")
+    except errors.RequestError:
+        print("SHARDING_BINDING_OK")
+""")
+
+
+def test_partitioned_spmd_multidevice(subproc):
+    out = subproc(PARTITIONED_SPMD, n=8)
+    assert "PARTITIONED_SPMD_OK" in out
+    assert "PARTITIONED_RING_OK" in out
+    assert "SHARDING_BINDING_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# partitioned gradient sync: parity with the bucketed reference
+# ---------------------------------------------------------------------------
+
+
+GRAD_SYNC_PARITY = textwrap.dedent("""
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro import core as mpx
+    from repro.core import datatypes
+    from repro.core.communicator import Communicator
+    from repro.core.descriptors import Compression
+    from repro.core.overlap import hierarchical_allreduce
+    from repro.optim.grad_sync import (
+        ErrorFeedbackState, PartitionedGradSync, _compress_with_feedback,
+        sync_gradients,
+    )
+
+    comm = Communicator.create((2, 4), ("outer", "inner"))
+    inner, outer = comm.split("inner"), comm.split("outer")
+
+    def make_grads(r):
+        return {
+            "w": jnp.outer(jnp.arange(1, 5.0), jnp.ones(3)) * (r + 1.0),
+            "b": jnp.arange(3, dtype=jnp.float32) * (r - 2.0),
+        }
+
+    def reference(grads, inner_c, outer_c, compression, ef, mean):
+        # the former bucketed sync_gradients, inlined verbatim as the oracle
+        n_total = inner_c.size() * (outer_c.size() if outer_c is not None else 1)
+        scale = 1.0 / n_total if mean else 1.0
+        new_ef = ef
+        if compression is Compression.INT8 and ef is not None:
+            flat_g, treedef = jax.tree.flatten(grads)
+            flat_e = treedef.flatten_up_to(ef.residual)
+            pairs = [_compress_with_feedback(g, e) for g, e in zip(flat_g, flat_e)]
+            grads = treedef.unflatten([p[0] for p in pairs])
+            new_ef = ErrorFeedbackState(
+                residual=treedef.unflatten([p[1] for p in pairs]))
+        def reduce_leaf(g):
+            if outer_c is None:
+                return jax.lax.psum(g, inner_c.axis_names)
+            return hierarchical_allreduce(g, inner_c, outer_c,
+                                          compression=compression)
+        bufs, dt = datatypes.pack(grads)
+        synced = datatypes.unpack([reduce_leaf(b) for b in bufs], dt)
+        out = jax.tree.map(
+            lambda s: (s.astype(jnp.float32) * scale).astype(s.dtype), synced)
+        return out, new_ef
+
+    MODES = [
+        ("single", None, Compression.NONE, False),
+        ("hier", outer, Compression.NONE, False),
+        ("hier_int8_ef", outer, Compression.INT8, True),
+    ]
+
+    for name, outer_c, compression, use_ef in MODES:
+        sync = PartitionedGradSync(inner, outer_c, compression=compression)
+
+        @comm.spmd
+        def run_pair():
+            r = comm.rank().astype(jnp.float32)
+            g = make_grads(r)
+            ef = ErrorFeedbackState.init(g) if use_ef else None
+            got, got_ef = sync(g, ef)
+            want, want_ef = reference(g, inner, outer_c, compression, ef, True)
+            diffs = [got["w"] - want["w"], got["b"] - want["b"]]
+            if use_ef:
+                diffs += [got_ef.residual["w"] - want_ef.residual["w"]]
+            return [jnp.max(jnp.abs(d)) for d in diffs]
+
+        for d in run_pair():
+            assert float(np.max(np.asarray(d))) == 0.0, name
+        print(f"PARITY_{name}_OK")
+
+    # functional wrapper and pready-order permutations agree bitwise
+    # (two dtype groups -> two buckets -> two partitions to permute)
+    @comm.spmd
+    def orders():
+        r = comm.rank().astype(jnp.float32)
+        g = {
+            "w": jnp.outer(jnp.arange(1, 5.0), jnp.ones(3)) * (r + 1.0),
+            "b": (jnp.arange(3, dtype=jnp.float32) * (r - 2.0)).astype(jnp.bfloat16),
+        }
+        a, _ = sync_gradients(g, inner, outer, pready_order=(0, 1))
+        b, _ = sync_gradients(g, inner, outer, pready_order=(1, 0))
+        return (
+            jnp.max(jnp.abs(a["w"] - b["w"]))
+            + jnp.max(jnp.abs(a["b"].astype(jnp.float32) - b["b"].astype(jnp.float32)))
+        )
+
+    assert float(np.max(np.asarray(orders()))) == 0.0
+    print("ORDER_INDEPENDENT_OK")
+""")
+
+
+def test_partitioned_grad_sync_parity(subproc):
+    out = subproc(GRAD_SYNC_PARITY, n=8)
+    assert "PARITY_single_OK" in out
+    assert "PARITY_hier_OK" in out
+    assert "PARITY_hier_int8_ef_OK" in out
+    assert "ORDER_INDEPENDENT_OK" in out
+
+
+# ---------------------------------------------------------------------------
+# the persistent execution engine: zero traces after the first step
+# ---------------------------------------------------------------------------
+
+
+def _tiny_cfg():
+    from repro.configs.base import ModelConfig
+
+    return ModelConfig(
+        name="tiny", family="dense", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=128,
+    )
+
+
+def test_trainer_persistent_zero_retrace():
+    from repro.configs.base import ParallelConfig
+    from repro.launch.mesh import make_host_mesh
+    from repro.runtime.trainer import Trainer, TrainerConfig
+
+    tool.pvar_reset()
+    t = Trainer(
+        _tiny_cfg(), ParallelConfig(),
+        TrainerConfig(steps=5, lr=1e-3, log_every=5),
+        make_host_mesh(), seq_len=32, global_batch=4,
+    )
+    result = t.run()
+    assert result["final_step"] == 5
+    counts = tool.pvar_read()
+    assert counts["trace:train_step"] == 1          # traced exactly once
+    assert counts["persistent_start"] == 5          # MPI_Start per step
+    assert counts["persistent_init"] == 1
+    # the metrics line surfaces the request pvars
+    assert result["metrics"][-1]["persistent_start"] == 5
+    assert "partition_ready" in result["metrics"][-1]
+
+
+def test_server_persistent_zero_retrace():
+    from repro.configs.base import ParallelConfig
+    from repro.launch.mesh import make_host_mesh
+    from repro.runtime.server import Request, Server, ServerConfig
+
+    rng = np.random.default_rng(0)
+    s = Server(
+        _tiny_cfg(), ParallelConfig(),
+        ServerConfig(max_batch=2, max_new_tokens=4), make_host_mesh(),
+    )
+    reqs = [Request(tokens=rng.integers(1, 128, size=(8,), dtype=np.int32))
+            for _ in range(2)]
+    tool.pvar_reset()
+    s.generate(reqs)
+    first = tool.pvar_read()
+    assert first["trace:decode_step"] == 1
+    assert first["trace:prefill_step"] == 1
+    s.generate(reqs)                                # same shape bucket
+    counts = tool.pvar_read()
+    assert counts["trace:decode_step"] == 1         # zero traces after warm
+    assert counts["trace:prefill_step"] == 1
+    assert counts["persistent_start"] == 2 * (1 + 3)  # prefill + 3 decodes each
