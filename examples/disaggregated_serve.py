@@ -1,0 +1,80 @@
+"""Disaggregated prefill/decode serving over the RMA window transport.
+
+The ROADMAP's serving-scale scenario made concrete on one platform: the
+serving process set is split into a *prefill* group and a *decode* group
+(MPI 4.0 group algebra, PR 1); prefill ranks compute the KV cache and
+``rput`` it — page by page, each page's request chained onto the previous —
+into an RMA window exposed by the decode ranks (MPI 4.0 chapter 12, the C1
+one-sided interface); the decode group then generates tokens on its own
+persistent decode request, never touching prefill hardware again.
+
+The check that matters: at ``temperature=0`` the disaggregated pipeline is
+**token-for-token identical** to the single-group ``Server.generate``
+baseline — the transport moved the whole cache, bit-exactly, through the
+window (the decode-side buffers start as zeros, so parity proves the pages
+actually crossed).
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/disaggregated_serve.py
+"""
+
+import numpy as np
+
+from repro import core as mpx
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.launch.mesh import make_host_communicator
+from repro.runtime.server import DisaggregatedServer, Request, Server, ServerConfig
+
+
+def tiny_cfg() -> ModelConfig:
+    # float32: the window transport is bit-exact in any dtype (pack +
+    # permute + masked select, no arithmetic), but bf16 *compute* rounds
+    # differently across mesh partitionings, which can flip near-tied
+    # argmaxes between the 8-device baseline and the 4-device decode group —
+    # the parity check below isolates the transport, not XLA's bf16 rounding
+    return ModelConfig(
+        name="tiny", family="dense", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=128, dtype="float32",
+    )
+
+
+def main():
+    cfg, pcfg = tiny_cfg(), ParallelConfig()
+    scfg = ServerConfig(max_batch=4, max_new_tokens=12, temperature=0.0)
+
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(tokens=rng.integers(1, cfg.vocab_size, size=(24,), dtype=np.int32))
+        for _ in range(scfg.max_batch)
+    ]
+
+    # single-group baseline: prefill + decode share the whole process set
+    baseline = Server(cfg, pcfg, scfg, make_host_communicator())
+    base_tokens, base_stats = baseline.generate(reqs)
+
+    # disaggregated: prefill and decode on disjoint halves, KV over RMA
+    server = DisaggregatedServer(cfg, pcfg, scfg, kv_pages=4)
+    sess = mpx.default_session()
+    print(f"prefill pset: {sess.pset_info('repro://world/prefill')}")
+    print(f"decode pset:  {sess.pset_info('repro://world/decode')}")
+    overlap = server.prefill.comm.group().intersection(server.decode.comm.group())
+    print(f"overlapping devices: {overlap.size()} (expect 0 with >1 device)")
+
+    tokens, stats = server.generate(reqs)
+    print(f"prefill {stats['prefill_s']*1e3:.0f} ms on {stats['prefill_devices']} devices  "
+          f"| KV {stats['kv_bytes']/1024:.1f} KiB in {stats['kv_pages']} pages "
+          f"({stats['transfer_s']*1e3:.0f} ms)  "
+          f"| decode {stats['decode_s']*1e3:.0f} ms on {stats['decode_devices']} devices  "
+          f"| {stats['tokens_per_s']:.1f} tok/s")
+
+    assert np.array_equal(tokens, base_tokens), (
+        f"disaggregated tokens diverged from the single-group baseline:\n"
+        f"{tokens}\nvs\n{base_tokens}"
+    )
+    print(f"token-for-token parity with the single-group baseline: OK {tokens.shape}")
+    pv = mpx.tool.pvar_read()
+    print("pvars:", {k: v for k, v in pv.items() if k.startswith("rma_") or "kv_transfer" in k})
+
+
+if __name__ == "__main__":
+    main()

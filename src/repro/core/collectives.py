@@ -65,6 +65,35 @@ def _single_axis(comm: Communicator) -> str:
 # ---------------------------------------------------------------------------
 
 
+def combine(op: ReduceOp, a: jax.Array, b: jax.Array) -> jax.Array:
+    """Two-operand combine for a :class:`ReduceOp` — the binary form the
+    gather-based fallbacks fold with, and the ``buffer ⊕ contribution`` step
+    of RMA ``accumulate`` (:mod:`repro.core.onesided`).  Logical ops return
+    booleans; callers preserve buffer dtypes themselves."""
+
+    if op is ReduceOp.SUM:
+        return a + b
+    if op is ReduceOp.PROD:
+        return a * b
+    if op is ReduceOp.MAX:
+        return jnp.maximum(a, b)
+    if op is ReduceOp.MIN:
+        return jnp.minimum(a, b)
+    if op is ReduceOp.LAND:
+        return (a != 0) & (b != 0)
+    if op is ReduceOp.LOR:
+        return (a != 0) | (b != 0)
+    if op is ReduceOp.LXOR:
+        return (a != 0) ^ (b != 0)
+    if op is ReduceOp.BAND:
+        return jnp.bitwise_and(a, b)
+    if op is ReduceOp.BOR:
+        return jnp.bitwise_or(a, b)
+    if op is ReduceOp.BXOR:
+        return jnp.bitwise_xor(a, b)
+    errors.fail(errors.ErrorClass.ERR_OP, f"{op} has no two-operand combine")
+
+
 def _reduce_array(x: jax.Array, axes: Axes, op: ReduceOp):
     x = jnp.asarray(x)
     if op is ReduceOp.SUM:
@@ -83,14 +112,8 @@ def _reduce_array(x: jax.Array, axes: Axes, op: ReduceOp):
         return (lax.psum((x != 0).astype(jnp.int32), axes) % 2) != 0
     # gather-based fallbacks (PROD and the bitwise family have no psum form)
     g = lax.all_gather(x, axes, axis=0, tiled=False)
-    if op is ReduceOp.PROD:
-        return jnp.prod(g, axis=0)
-    if op is ReduceOp.BAND:
-        return functools.reduce(jnp.bitwise_and, _unstack(g))
-    if op is ReduceOp.BOR:
-        return functools.reduce(jnp.bitwise_or, _unstack(g))
-    if op is ReduceOp.BXOR:
-        return functools.reduce(jnp.bitwise_xor, _unstack(g))
+    if op in (ReduceOp.PROD, ReduceOp.BAND, ReduceOp.BOR, ReduceOp.BXOR):
+        return functools.reduce(functools.partial(combine, op), _unstack(g))
     errors.fail(errors.ErrorClass.ERR_OP, f"unsupported reduction {op}")
 
 

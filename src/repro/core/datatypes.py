@@ -90,22 +90,33 @@ def builtins_isinstance(value: Any, t: type) -> bool:
 
 
 def is_compliant(value: Any) -> bool:
-    """The ``mpi::compliant`` concept, evaluated on an instance."""
+    """The ``mpi::compliant`` concept, evaluated on an instance.
+
+    ``None`` is compliant only as an aggregate *member* (a pytree-empty
+    subtree, e.g. an absent optional field such as an unquantised cache's
+    scale); a bare ``None`` operand is not — accepting it would turn a
+    forgotten value into a silent zero-extent no-op.
+    """
 
     if _leaf_dtype(value) is not None:
         return True
     if isinstance(value, (tuple, list)):
-        return all(is_compliant(v) for v in value)
+        return all(_member_compliant(v) for v in value)
     if isinstance(value, dict):
         return all(isinstance(k, Hashable) for k in value) and all(
-            is_compliant(v) for v in value.values()
+            _member_compliant(v) for v in value.values()
         )
     if dataclasses.is_dataclass(value) and not isinstance(value, type):
         register_aggregate(type(value))
         return all(
-            is_compliant(getattr(value, f.name)) for f in dataclasses.fields(value)
+            _member_compliant(getattr(value, f.name))
+            for f in dataclasses.fields(value)
         )
     return False
+
+
+def _member_compliant(value: Any) -> bool:
+    return value is None or is_compliant(value)
 
 
 # ---------------------------------------------------------------------------
@@ -248,6 +259,23 @@ class DataType:
             leaves.append(piece.reshape(layout.shape).astype(layout.dtype))
         return jax.tree_util.tree_unflatten(self.treedef, leaves)
 
+    def page_bounds(self, num_pages: int) -> list[list[tuple[int, int]]]:
+        """Even page split of each packed group buffer: per group, a list of
+        ``(offset, length)`` pairs (lengths differ by at most one element).
+
+        This is the paged-transfer layout for RMA windows over aggregates
+        (:mod:`repro.core.onesided`): one ``rput`` moves page ``i`` of every
+        dtype group, so a large KV cache streams in ``num_pages`` epochs'
+        worth of traffic instead of one monolithic message.
+        """
+
+        errors.check(
+            num_pages >= 1,
+            errors.ErrorClass.ERR_COUNT,
+            f"page_bounds needs >= 1 page, got {num_pages}",
+        )
+        return [even_page_bounds(size, num_pages) for size in self.group_sizes]
+
     def shape_dtype_structs(self) -> list[jax.ShapeDtypeStruct]:
         """Stand-ins for the packed buffers (for AOT lowering)."""
 
@@ -255,6 +283,20 @@ class DataType:
             jax.ShapeDtypeStruct((s,), d)
             for s, d in zip(self.group_sizes, self.group_dtypes)
         ]
+
+
+def even_page_bounds(size: int, num_pages: int) -> list[tuple[int, int]]:
+    """``num_pages`` contiguous ``(offset, length)`` spans covering ``size``
+    elements, lengths differing by at most one (later pages may be empty when
+    ``size < num_pages``)."""
+
+    base, rem = divmod(int(size), int(num_pages))
+    bounds, offset = [], 0
+    for p in range(num_pages):
+        length = base + (1 if p < rem else 0)
+        bounds.append((offset, length))
+        offset += length
+    return bounds
 
 
 def _as_array(value: Any, dtype: Any) -> jax.Array:

@@ -33,6 +33,11 @@ class ReduceOp(enum.Enum):
     BXOR = "bxor"
     MAXLOC = "maxloc"
     MINLOC = "minloc"
+    # RMA-only operators (MPI 4.0 §12.3): REPLACE is valid for accumulate
+    # (put-with-ordering semantics), NO_OP for get_accumulate/fetch_and_op
+    # (pure fetch).  Collectives reject both with ERR_OP.
+    REPLACE = "replace"
+    NO_OP = "no_op"
 
 
 class Algorithm(enum.Enum):
@@ -110,9 +115,29 @@ class CollectiveSpec:
 
 @dataclasses.dataclass(frozen=True)
 class WindowSpec:
-    """Description object for one-sided windows (``MPI_Win_create``)."""
+    """Description object for one-sided windows (``MPI_Win_create``).
+
+    Attributes
+    ----------
+    accumulate_op: the default operator for ``accumulate`` / ``raccumulate``
+        / ``get_accumulate`` when no explicit op is passed (the
+        ``accumulate_ops`` info-key analogue).
+    no_locks: the ``no_locks`` info key.  Passive-target lock/unlock has no
+        SPMD analogue (see the honesty note in :mod:`repro.core.onesided`),
+        so only ``no_locks=True`` windows can be created; asking for lock
+        support raises ``ERR_UNSUPPORTED_OPERATION`` instead of silently
+        pretending.
+    fence_barrier: emit an ``optimization_barrier`` at every ``fence`` so
+        XLA cannot move operations across the epoch boundary.  Disable only
+        when program order already pins the schedule (cheaper epochs).
+    num_pages: default page count for paged transfers (``put``/``rput`` with
+        ``page=(i, n)``); the paged-KV-block granularity.
+    """
 
     accumulate_op: ReduceOp = ReduceOp.SUM
+    no_locks: bool = True
+    fence_barrier: bool = True
+    num_pages: int = 1
 
 
 @dataclasses.dataclass(frozen=True)

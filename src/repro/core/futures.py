@@ -43,6 +43,13 @@ host code and inside the parallel program, and how MPI 4.0 extends them:
 datatype layer: ``comm.allreduce_init(example)`` AOT-lowers **one collective
 per dtype bucket** of the example aggregate, and every ``start()`` re-fires
 the compiled executables on a new aggregate of the same datatype.
+
+Request-based RMA (``MPI_Rput``/``MPI_Rget``/``MPI_Raccumulate``, chapter
+12) rides the same engine: :class:`repro.core.onesided.Window` returns
+:class:`TraceFuture`\\ s from ``rput``/``rget``/``raccumulate``, so one-sided
+traffic chains with ``then()`` and joins with :func:`when_all` exactly like
+nonblocking collectives; ``fence`` completes any outstanding RMA requests
+(``MPI_Win_fence`` closes the epoch on unwaited requests).
 """
 
 from __future__ import annotations
@@ -117,14 +124,26 @@ class Future:
         return Future(result)
 
 
-def when_all(futures: Sequence[Future]) -> Future:
+def when_all(futures: Sequence[Future]) -> "Future | TraceFuture":
     """``MPI_Waitall`` join: a future over the tuple of results.
 
     Like ``MPI_Waitall``, the joined requests are consumed: each input must
     still be valid (``ERR_REQUEST`` otherwise, exactly as a double ``get()``
     would raise) and is invalidated by the join.
+
+    A sequence of :class:`TraceFuture`\\ s (nonblocking collectives or RMA
+    requests inside an SPMD region) dispatches to :func:`trace_when_all` —
+    the join stays lazy and forces its inputs in issue order.
     """
 
+    if len(futures) > 0 and all(isinstance(f, TraceFuture) for f in futures):
+        return trace_when_all(futures)
+    errors.check(
+        not any(isinstance(f, TraceFuture) for f in futures),
+        errors.ErrorClass.ERR_REQUEST,
+        "when_all over mixed host and trace futures: a trace-level request "
+        "cannot be joined outside its SPMD region (join each level separately)",
+    )
     seen: set[int] = set()
     for i, f in enumerate(futures):
         errors.check(

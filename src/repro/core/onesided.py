@@ -2,15 +2,40 @@
 
 A window (``MPI_Win``) exposes each rank's local buffer for remote ``put`` /
 ``get`` / ``accumulate``.  The SPMD adaptation: a :class:`Window` is the
-per-rank array inside an SPMD region; RMA operations with *trace-time static*
-target patterns lower to ``collective-permute`` (put/get) and masked ``psum``
-(accumulate).  Epochs (``fence``) map to program-order barriers.
+per-rank value inside an SPMD region; RMA operations with *trace-time static*
+target patterns lower to ``collective-permute`` (put/get) and masked
+reductions (accumulate).  Epochs (``fence``) map to program-order barriers.
+
+Three MPI 4.0 capabilities beyond the plain put/get subset:
+
+* **Request-based RMA** (``MPI_Rput``/``MPI_Rget``/``MPI_Raccumulate``):
+  :meth:`Window.rput` / :meth:`Window.rget` / :meth:`Window.raccumulate`
+  return lazy :class:`~repro.core.futures.TraceFuture`\\ s that chain with
+  ``then()`` and join with ``when_all`` exactly like nonblocking collectives
+  — one-sided traffic rides the same request engine.  :meth:`Window.fence`
+  completes any requests not explicitly waited on (in issue order), the
+  epoch-close semantics of ``MPI_Win_fence``.
+
+* **Derived-datatype windows**: a window may be created over any
+  :func:`repro.core.datatypes.is_compliant` aggregate.  The C2 reflection
+  system derives the packed per-dtype layout, the window holds one packed
+  buffer per dtype group, and every RMA operation moves the whole aggregate
+  (or a *page* of its packed extent via ``page=(i, n)``) in one epoch — a KV
+  cache or train-state struct crosses as one logical object.
+
+* **Atomic read-modify-write**: :meth:`Window.get_accumulate`,
+  :meth:`Window.fetch_and_op` and :meth:`Window.compare_and_swap`, with the
+  full :class:`ReduceOp` set (reusing the collectives lowering) plus the
+  RMA-only ``REPLACE`` / ``NO_OP`` operators.
 
 Honesty note (recorded in DESIGN.md): true *passive-target* progress —
 one rank mutating another's memory while the target computes — has no
-analogue in a statically scheduled SPMD program.  What transfers is the
-*active-target* (fence-epoch) subset, which is also the portable subset MPI
-codes rely on for correctness.
+analogue in a statically scheduled SPMD program, which is why
+``WindowSpec(no_locks=False)`` is refused rather than faked.  What transfers
+is the *active-target* (fence-epoch) subset, which is also the portable
+subset MPI codes rely on for correctness.  The disaggregated serving
+transport (:mod:`repro.runtime.server`) lives entirely inside that subset:
+prefill→decode KV movement is epoch-delimited, not asynchronous intrusion.
 """
 
 from __future__ import annotations
@@ -21,29 +46,89 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import collectives, errors
+from repro.core import collectives, datatypes, errors, tool
 from repro.core.communicator import Communicator
 from repro.core.descriptors import ReduceOp, WindowSpec
+from repro.core.futures import TraceFuture
+
+#: Operators with no two-operand combine / cross-rank reduction — rejected
+#: for accumulate with ERR_OP before any lowering is attempted.
+_LOC_OPS = (ReduceOp.MAXLOC, ReduceOp.MINLOC)
 
 
 class Window:
-    """An RMA window over this rank's local array (inside ``spmd``)."""
+    """An RMA window over this rank's local array or aggregate (inside
+    ``spmd``)."""
 
-    def __init__(self, comm: Communicator, local: jax.Array, spec: WindowSpec | None = None):
+    def __init__(self, comm: Communicator, local: Any, spec: WindowSpec | None = None):
         self.comm = comm
         self.spec = spec or WindowSpec()
-        self._buffer = jnp.asarray(local)
+        errors.check(
+            self.spec.no_locks,
+            errors.ErrorClass.ERR_UNSUPPORTED_OPERATION,
+            "passive-target lock/unlock has no SPMD analogue; windows are "
+            "active-target only (no_locks=True)",
+        )
+        if collectives._is_leaf_operand(local):
+            self._datatype = None
+            self._buffers = [jnp.asarray(local)]
+        else:
+            errors.check(
+                datatypes.is_compliant(local),
+                errors.ErrorClass.ERR_TYPE,
+                f"window over a non-compliant aggregate of type "
+                f"{type(local).__name__}",
+            )
+            self._datatype = datatypes.datatype_of(local)
+            self._buffers = self._datatype.pack(local)
         self._epoch_open = False
+        self._pending: list[TraceFuture] = []
+        # per-epoch write ledger: target rank -> page specs written (None =
+        # the whole window); overlapping writes in one epoch are a data race
+        self._writes: dict[int, list[tuple[int, int] | None]] = {}
+
+    # -- introspection ------------------------------------------------------
 
     @property
-    def buffer(self) -> jax.Array:
-        return self._buffer
+    def buffer(self) -> Any:
+        """The window's local value (the aggregate view for datatype
+        windows)."""
+
+        if self._datatype is None:
+            return self._buffers[0]
+        return self._datatype.unpack(self._buffers)
+
+    @property
+    def datatype(self) -> "datatypes.DataType | None":
+        """The derived datatype (``None`` for plain-array windows)."""
+
+        return self._datatype
+
+    def extent(self) -> int:
+        """Window size in bytes (``MPI_Win_get_attr(MPI_WIN_SIZE)``)."""
+
+        if self._datatype is not None:
+            return self._datatype.extent
+        b = self._buffers[0]
+        return int(b.size) * jnp.dtype(b.dtype).itemsize
+
+    # -- epochs -------------------------------------------------------------
 
     def fence(self) -> "Window":
-        """Open/close an access epoch (``MPI_Win_fence``)."""
+        """Open/close an access epoch (``MPI_Win_fence``).
 
-        self._buffer = lax.optimization_barrier(self._buffer)
+        Closing completes outstanding request-based operations in issue
+        order (requests chained through ``then()`` drain recursively: a
+        continuation that issues another RMA op extends the queue).
+        """
+
+        tool.pvar_count("rma_fence")
+        while self._pending:
+            self._pending.pop(0).get()
+        if self.spec.fence_barrier:
+            self._buffers = list(lax.optimization_barrier(tuple(self._buffers)))
         self._epoch_open = not self._epoch_open
+        self._writes = {}
         return self
 
     def _check_epoch(self):
@@ -53,51 +138,394 @@ class Window:
             "RMA access outside a fence epoch; call win.fence() first",
         )
 
-    def put(self, value: jax.Array, perm: Sequence[tuple[int, int]]) -> "Window":
+    # -- validation ---------------------------------------------------------
+
+    def _validate_perm(self, perm: Sequence[tuple[int, int]], *, writes: bool) -> None:
+        n = self.comm.size()
+        for s, d in perm:
+            errors.check(
+                0 <= s < n and 0 <= d < n,
+                errors.ErrorClass.ERR_RANK,
+                f"RMA pair ({s}, {d}) out of range for window over {n} ranks",
+            )
+        if writes:
+            # mirrors send_recv's duplicate-source check: two origins writing
+            # one target in the same epoch is a data race, never
+            # last-writer-wins
+            targets = [d for _, d in perm]
+            errors.check(
+                len(set(targets)) == len(targets),
+                errors.ErrorClass.ERR_RANK,
+                f"duplicate put targets in {list(perm)}: a window location "
+                "may be written by at most one origin per epoch",
+            )
+
+    def _pages_overlap(
+        self,
+        a: tuple[int, int] | None,
+        b: tuple[int, int] | None,
+    ) -> bool:
+        """Do two page specs cover a common span of the packed extent?"""
+
+        if a is None or b is None:
+            return True            # a full-window put covers every page
+        (ia, na), (ib, nb) = a, b
+        if na == nb:
+            return ia == ib
+        for ga, gb in zip(self._page_bounds(na), self._page_bounds(nb)):
+            sa, la = ga[ia]
+            sb, lb = gb[ib]
+            if la and lb and sa < sb + lb and sb < sa + la:
+                return True
+        return False
+
+    def _note_writes(
+        self, perm: Sequence[tuple[int, int]], page: tuple[int, int] | None
+    ) -> None:
+        """Record this epoch's put targets; overlapping spans are the same
+        data race the per-call duplicate check rejects, across calls."""
+
+        for target in {d for _, d in perm}:
+            for prior in self._writes.get(target, []):
+                errors.check(
+                    not self._pages_overlap(prior, page),
+                    errors.ErrorClass.ERR_RANK,
+                    f"target {target} already written this epoch "
+                    f"(prior {prior}, new {page}): a window location may be "
+                    "written by at most one origin per epoch",
+                )
+            self._writes.setdefault(target, []).append(page)
+
+    def _check_target(self, target: int) -> None:
+        errors.check(
+            0 <= int(target) < self.comm.size(),
+            errors.ErrorClass.ERR_RANK,
+            f"target {target} out of range for window over {self.comm.size()} ranks",
+        )
+
+    def _pack_value(self, value: Any) -> list[jax.Array]:
+        """An origin-side value, packed to match the window layout."""
+
+        if self._datatype is None:
+            v = jnp.asarray(value, self._buffers[0].dtype)
+            errors.check(
+                tuple(v.shape) == tuple(self._buffers[0].shape),
+                errors.ErrorClass.ERR_TRUNCATE,
+                f"value shape {v.shape} does not match window shape "
+                f"{self._buffers[0].shape}",
+            )
+            return [v]
+        bufs = self._datatype.pack(value)
+        return [b.astype(w.dtype) for b, w in zip(bufs, self._buffers)]
+
+    def _is_target(self, perm: Sequence[tuple[int, int]]) -> jax.Array:
+        """Scalar boolean: does this rank's window receive under ``perm``?
+        (One shape for the empty and non-empty cases.)"""
+
+        targets = sorted({d for _, d in perm})
+        if not targets:
+            return jnp.zeros((), jnp.bool_)
+        return jnp.any(jnp.asarray(targets, jnp.int32) == self.comm.rank())
+
+    def _page_bounds(self, num_pages: int) -> list[list[tuple[int, int]]]:
+        if self._datatype is not None:
+            return self._datatype.page_bounds(num_pages)
+        b = self._buffers[0]
+        errors.check(
+            b.ndim >= 1 or num_pages == 1,
+            errors.ErrorClass.ERR_COUNT,
+            "paged transfer needs a window with a leading axis",
+        )
+        size = b.shape[0] if b.ndim >= 1 else 1
+        return [datatypes.even_page_bounds(size, num_pages)]
+
+    # -- put / get ----------------------------------------------------------
+
+    def _apply_put(
+        self,
+        value: Any,
+        perm: Sequence[tuple[int, int]],
+        page: tuple[int, int] | None,
+    ) -> Any:
+        vals = self._pack_value(value)
+        is_target = self._is_target(perm)
+        new_buffers = []
+        if page is None:
+            for v, b in zip(vals, self._buffers):
+                moved = collectives.send_recv(self.comm, v, perm)
+                new_buffers.append(jnp.where(is_target, moved, b))
+        else:
+            index, num_pages = page     # validated by _resolve_page at issue
+            bounds = self._page_bounds(num_pages)
+            for v, b, bd in zip(vals, self._buffers, bounds):
+                start, length = bd[index]
+                if length == 0:
+                    new_buffers.append(b)
+                    continue
+                piece = lax.slice_in_dim(v, start, start + length, axis=0)
+                moved = collectives.send_recv(self.comm, piece, perm)
+                merged = lax.dynamic_update_slice_in_dim(b, moved, start, axis=0)
+                new_buffers.append(jnp.where(is_target, merged, b))
+        self._buffers = new_buffers
+        return self.buffer
+
+    def _resolve_page(
+        self, page: int | tuple[int, int] | None
+    ) -> tuple[int, int] | None:
+        # a bare index is a page of the spec's configured count; validation
+        # happens here — at issue time — so rput errors before any tracing
+        # and before the write ledger indexes the bounds
+        if isinstance(page, int):
+            page = (page, self.spec.num_pages)
+        if page is not None:
+            index, num_pages = page
+            errors.check(
+                num_pages >= 1 and 0 <= index < num_pages,
+                errors.ErrorClass.ERR_COUNT,
+                f"page {index} out of range for {num_pages} pages",
+            )
+        return page
+
+    def put(
+        self,
+        value: Any,
+        perm: Sequence[tuple[int, int]],
+        *,
+        page: int | tuple[int, int] | None = None,
+    ) -> "Window":
         """``MPI_Put``: origin ``s`` overwrites target ``d``'s window, for the
-        static pattern ``perm``.  Ranks not targeted keep their buffer."""
+        static pattern ``perm``.  Ranks not targeted keep their buffer.
+        ``page=(i, n)`` moves only page ``i`` of ``n`` over the window's
+        packed extent (leading axis for plain arrays); a bare ``page=i``
+        divides by ``spec.num_pages``."""
 
         self._check_epoch()
-        n = self.comm.size()
-        moved = collectives.send_recv(self.comm, jnp.asarray(value, self._buffer.dtype), perm)
-        targets = {d for _, d in perm}
-        rank = self.comm.rank()
-        is_target = jnp.zeros((n,), jnp.bool_).at[jnp.array(sorted(targets), jnp.int32)].set(
-            True
-        )[rank] if targets else jnp.zeros((), jnp.bool_)
-        self._buffer = jnp.where(is_target, moved, self._buffer)
+        self._validate_perm(perm, writes=True)
+        page = self._resolve_page(page)
+        self._note_writes(perm, page)
+        tool.pvar_count("rma_put")
+        self._apply_put(value, perm, page)
         return self
 
-    def get(self, perm: Sequence[tuple[int, int]]) -> jax.Array:
-        """``MPI_Get``: origin ``d`` reads target ``s``'s window for each
-        ``(s, d)`` — i.e. the *reverse* data flow of ``put``."""
+    def rput(
+        self,
+        value: Any,
+        perm: Sequence[tuple[int, int]],
+        *,
+        page: int | tuple[int, int] | None = None,
+    ) -> TraceFuture:
+        """``MPI_Rput``: request-based put.  Validation happens at issue
+        time; the transfer is traced when the returned future is forced
+        (``get()``/``then()`` chain or the closing :meth:`fence`)."""
 
         self._check_epoch()
-        return collectives.send_recv(self.comm, self._buffer, perm)
+        self._validate_perm(perm, writes=True)
+        page = self._resolve_page(page)
+        self._note_writes(perm, page)
+        tool.pvar_count("rma_rput")
+        fut = TraceFuture(lambda: self._apply_put(value, perm, page))
+        self._pending.append(fut)
+        return fut
+
+    def get(self, perm: Sequence[tuple[int, int]]) -> Any:
+        """``MPI_Get``: origin ``d`` reads target ``s``'s window for each
+        ``(s, d)`` — i.e. the *reverse* data flow of ``put``.  Ranks not
+        reading receive zeros (the SPMD convention)."""
+
+        self._check_epoch()
+        self._validate_perm(perm, writes=False)
+        tool.pvar_count("rma_get")
+        out = [collectives.send_recv(self.comm, b, perm) for b in self._buffers]
+        if self._datatype is None:
+            return out[0]
+        return self._datatype.unpack(out)
+
+    def rget(self, perm: Sequence[tuple[int, int]]) -> TraceFuture:
+        """``MPI_Rget``: request-based get; the future's value is the fetched
+        array/aggregate."""
+
+        self._check_epoch()
+        self._validate_perm(perm, writes=False)
+        tool.pvar_count("rma_rget")
+        fut = TraceFuture(lambda: self.get(perm))
+        self._pending.append(fut)
+        return fut
+
+    # -- accumulate family --------------------------------------------------
+
+    def _resolve_op(self, op: ReduceOp | None, *, fetch: bool) -> ReduceOp:
+        op = self.spec.accumulate_op if op is None else op
+        errors.check(
+            op not in _LOC_OPS,
+            errors.ErrorClass.ERR_OP,
+            f"accumulate does not support {op} (no two-operand combine)",
+        )
+        errors.check(
+            fetch or op is not ReduceOp.NO_OP,
+            errors.ErrorClass.ERR_OP,
+            "NO_OP is only valid for get_accumulate / fetch_and_op",
+        )
+        return op
+
+    def _apply_accumulate(self, value: Any, target: int, op: ReduceOp) -> Any:
+        """Reduce every origin's contribution into the target's window."""
+
+        if op is ReduceOp.NO_OP:
+            return self.buffer
+        vals = self._pack_value(value)
+        rank = self.comm.rank()
+        new_buffers = []
+        for v, b in zip(vals, self._buffers):
+            if op is ReduceOp.REPLACE:
+                # MPI leaves the multi-origin order undefined; the SPMD
+                # serialization is deterministic: the lowest-ranked origin's
+                # contribution is the one deposited (it must still CROSS
+                # ranks — the target's own copy would mean no data movement)
+                new = collectives.broadcast(self.comm, v, root=0)
+            else:
+                total = collectives._reduce_array(v, self.comm.axis_names, op)
+                new = collectives.combine(op, b, total)
+            new_buffers.append(jnp.where(rank == target, new.astype(b.dtype), b))
+        self._buffers = new_buffers
+        return self.buffer
 
     def accumulate(
         self,
-        value: jax.Array,
+        value: Any,
         target: int,
-        op: ReduceOp = ReduceOp.SUM,
+        op: ReduceOp | None = None,
     ) -> "Window":
         """``MPI_Accumulate``: every origin's contribution reduces into the
-        target's window (here: all ranks contribute; pass zeros to opt out —
-        the SPMD convention for a static program)."""
+        target's window (here: all ranks contribute; pass the op's identity
+        to opt out — the SPMD convention for a static program).  ``op``
+        defaults to ``spec.accumulate_op``; the full :class:`ReduceOp` set
+        lowers through the collectives reduction kernels.  The RMA-only
+        ``REPLACE`` (put semantics) deposits the **lowest-ranked** origin's
+        contribution — MPI leaves the multi-origin order undefined, the SPMD
+        serialization pins it."""
 
         self._check_epoch()
-        errors.check(
-            op is ReduceOp.SUM,
-            errors.ErrorClass.ERR_OP,
-            "accumulate supports SUM (psum lowering)",
-        )
-        total = lax.psum(jnp.asarray(value, self._buffer.dtype), self.comm.axis_names)
-        rank = self.comm.rank()
-        self._buffer = jnp.where(rank == target, self._buffer + total, self._buffer)
+        self._check_target(target)
+        tool.pvar_count("rma_accumulate")
+        self._apply_accumulate(value, target, self._resolve_op(op, fetch=False))
         return self
 
+    def raccumulate(
+        self,
+        value: Any,
+        target: int,
+        op: ReduceOp | None = None,
+    ) -> TraceFuture:
+        """``MPI_Raccumulate``: request-based accumulate."""
 
-def create_window(comm: Communicator, local: jax.Array, spec: WindowSpec | None = None):
-    """``MPI_Win_create`` analogue."""
+        self._check_epoch()
+        self._check_target(target)
+        op = self._resolve_op(op, fetch=False)
+        tool.pvar_count("rma_accumulate")
+        fut = TraceFuture(lambda: self._apply_accumulate(value, target, op))
+        self._pending.append(fut)
+        return fut
+
+    def get_accumulate(
+        self,
+        value: Any,
+        target: int,
+        op: ReduceOp | None = None,
+    ) -> Any:
+        """``MPI_Get_accumulate``: atomically fetch the target's *prior*
+        window value (delivered to every origin) and reduce the contributions
+        in.  ``op=NO_OP`` is a pure fetch."""
+
+        self._check_epoch()
+        self._check_target(target)
+        op = self._resolve_op(op, fetch=True)
+        old = [collectives.broadcast(self.comm, b, root=target) for b in self._buffers]
+        self._apply_accumulate(value, target, op)
+        if self._datatype is None:
+            return old[0]
+        return self._datatype.unpack(old)
+
+    def fetch_and_op(
+        self,
+        value: Any,
+        target: int,
+        op: ReduceOp | None = None,
+        *,
+        index: int = 0,
+    ) -> jax.Array:
+        """``MPI_Fetch_and_op``: the single-element ``get_accumulate`` —
+        fetch element ``index`` of the target's window (flattened), combine
+        ``value`` in.  Plain-array windows only (MPI restricts this call to
+        one predefined-datatype element)."""
+
+        self._check_epoch()
+        self._check_target(target)
+        op = self._resolve_op(op, fetch=True)
+        errors.check(
+            self._datatype is None,
+            errors.ErrorClass.ERR_TYPE,
+            "fetch_and_op operates on a plain-array window (one element)",
+        )
+        buf = self._buffers[0]
+        flat = buf.reshape(-1)
+        errors.check(
+            0 <= index < flat.shape[0],
+            errors.ErrorClass.ERR_COUNT,
+            f"element index {index} out of range for window of {flat.shape[0]}",
+        )
+        cur = lax.dynamic_slice(flat, (index,), (1,))
+        old = collectives.broadcast(self.comm, cur, root=target)
+        if op is not ReduceOp.NO_OP:
+            v = jnp.asarray(value, buf.dtype).reshape(())
+            if op is ReduceOp.REPLACE:
+                # lowest-ranked origin's value, as in _apply_accumulate
+                new = collectives.broadcast(self.comm, v.reshape(1), root=0)
+            else:
+                total = collectives._reduce_array(v, self.comm.axis_names, op)
+                new = collectives.combine(op, cur, total.reshape(1))
+            updated = lax.dynamic_update_slice(flat, new.astype(buf.dtype), (index,))
+            merged = jnp.where(self.comm.rank() == target, updated, flat)
+            self._buffers = [merged.reshape(buf.shape)]
+        return old.reshape(())
+
+    def compare_and_swap(
+        self,
+        compare: Any,
+        value: Any,
+        target: int,
+        *,
+        index: int = 0,
+    ) -> jax.Array:
+        """``MPI_Compare_and_swap``: fetch element ``index`` of the target's
+        window; iff it equals ``compare``, replace it with ``value``.
+        Returns the fetched (prior) element on every origin."""
+
+        self._check_epoch()
+        self._check_target(target)
+        errors.check(
+            self._datatype is None,
+            errors.ErrorClass.ERR_TYPE,
+            "compare_and_swap operates on a plain-array window (one element)",
+        )
+        buf = self._buffers[0]
+        flat = buf.reshape(-1)
+        errors.check(
+            0 <= index < flat.shape[0],
+            errors.ErrorClass.ERR_COUNT,
+            f"element index {index} out of range for window of {flat.shape[0]}",
+        )
+        cur = lax.dynamic_slice(flat, (index,), (1,))
+        old = collectives.broadcast(self.comm, cur, root=target)
+        c = jnp.asarray(compare, buf.dtype).reshape(1)
+        v = jnp.asarray(value, buf.dtype).reshape(1)
+        swapped = jnp.where(cur == c, v, cur)
+        updated = lax.dynamic_update_slice(flat, swapped, (index,))
+        merged = jnp.where(self.comm.rank() == target, updated, flat)
+        self._buffers = [merged.reshape(buf.shape)]
+        return old.reshape(())
+
+
+def create_window(comm: Communicator, local: Any, spec: WindowSpec | None = None):
+    """``MPI_Win_create`` analogue (arrays and compliant aggregates)."""
 
     return Window(comm, local, spec)

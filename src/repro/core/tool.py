@@ -366,3 +366,9 @@ pvar_register("persistent_start", "MPI_Start analogues fired on persistent reque
 pvar_register("partitioned_init", "partitioned requests constructed (Psend_init)")
 pvar_register("partitioned_start", "partitioned request activations (MPI_Start)")
 pvar_register("partition_ready", "partitions marked ready (MPI_Pready)")
+pvar_register("rma_fence", "window fence epochs opened/closed (MPI_Win_fence)")
+pvar_register("rma_put", "blocking window puts (MPI_Put)")
+pvar_register("rma_rput", "request-based window puts (MPI_Rput)")
+pvar_register("rma_get", "blocking window gets (MPI_Get)")
+pvar_register("rma_rget", "request-based window gets (MPI_Rget)")
+pvar_register("rma_accumulate", "window accumulates (MPI_Accumulate/Raccumulate)")

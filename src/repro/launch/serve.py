@@ -2,6 +2,11 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch gemma2_9b --smoke \
         --requests 8 --prompt-len 64 --new-tokens 16
+
+``--disaggregate`` splits the serving process set into prefill and decode
+worker groups (``<pset>/prefill`` / ``<pset>/decode``): prefill ranks
+compute the KV cache and stream it into the decode ranks' RMA window
+(``--kv-pages`` pages per handoff); decode rides its persistent request.
 """
 
 from __future__ import annotations
@@ -26,19 +31,36 @@ def main(argv=None):
         default="repro://world",
         help="session process set the server owns (e.g. repro://host/1)",
     )
+    ap.add_argument(
+        "--disaggregate",
+        action="store_true",
+        help="split the pset into prefill/decode groups; KV crosses via RMA",
+    )
+    ap.add_argument("--prefill-fraction", type=float, default=0.5)
+    ap.add_argument("--kv-pages", type=int, default=4)
     args = ap.parse_args(argv)
+    if args.disaggregate and args.mesh != "auto":
+        ap.error("--mesh has no effect with --disaggregate (group layouts "
+                 "come from --prefill-fraction); drop one of the two")
 
     from repro.configs import base
     from repro.launch.mesh import make_host_communicator
-    from repro.runtime.server import Request, Server, ServerConfig
+    from repro.runtime.server import (
+        DisaggregatedServer,
+        Request,
+        Server,
+        ServerConfig,
+    )
 
     cfg = base.get_smoke_config(args.arch) if args.smoke else base.get_config(args.arch)
     pcfg = base.get_parallel(args.arch)
-    if args.mesh == "auto":
-        comm = make_host_communicator(pset=args.pset)
-    else:
-        d, m = (int(t) for t in args.mesh.split("x"))
-        comm = make_host_communicator(d, m, pset=args.pset)
+    comm = None
+    if not args.disaggregate:
+        if args.mesh == "auto":
+            comm = make_host_communicator(pset=args.pset)
+        else:
+            d, m = (int(t) for t in args.mesh.split("x"))
+            comm = make_host_communicator(d, m, pset=args.pset)
 
     rng = np.random.default_rng(0)
     reqs = []
@@ -55,11 +77,18 @@ def main(argv=None):
             )
         reqs.append(Request(tokens=toks, extra=extra))
 
-    server = Server(
-        cfg, pcfg, ServerConfig(max_batch=args.requests,
-                                max_new_tokens=args.new_tokens,
-                                temperature=args.temperature), comm
-    )
+    scfg = ServerConfig(max_batch=args.requests,
+                        max_new_tokens=args.new_tokens,
+                        temperature=args.temperature)
+    if args.disaggregate:
+        server = DisaggregatedServer(
+            cfg, pcfg, scfg,
+            pset=args.pset,
+            prefill_fraction=args.prefill_fraction,
+            kv_pages=args.kv_pages,
+        )
+    else:
+        server = Server(cfg, pcfg, scfg, comm)
     tokens, stats = server.generate(reqs)
     print("generated shape:", tokens.shape)
     print(json.dumps({k: round(v, 4) if isinstance(v, float) else v for k, v in stats.items()},

@@ -52,7 +52,12 @@ class StragglerPolicy:
     window: int = 32
     max_retries: int = 1
     min_samples: int = 5
-    _history: deque = dataclasses.field(default_factory=lambda: deque(maxlen=32))
+    _history: deque = dataclasses.field(default_factory=deque)
+
+    def __post_init__(self):
+        # the history bound IS the configured window (it was silently
+        # hardcoded to 32 before, making the field dead config)
+        self._history = deque(self._history, maxlen=self.window)
 
     def observe(self, duration_s: float) -> None:
         self._history.append(duration_s)

@@ -178,6 +178,26 @@ def test_trace_when_all():
     assert tuple(int(v) for v in out) == (0, 1, 2)
 
 
+def test_when_all_dispatches_trace_futures():
+    # an all-TraceFuture join goes to trace_when_all and stays lazy
+    hits = []
+    futs = [TraceFuture(lambda i=i: hits.append(i) or i) for i in range(3)]
+    joined = when_all(futs)
+    assert isinstance(joined, TraceFuture)
+    assert hits == []                       # nothing forced yet
+    assert joined.get() == (0, 1, 2)
+    assert hits == [0, 1, 2]                # forced in issue order
+
+
+def test_when_all_rejects_mixed_levels():
+    # a trace-level request cannot be joined outside its SPMD region: the
+    # host branch would read its unforced value as None and drop the op
+    hits = []
+    with pytest.raises(errors.RequestError):
+        when_all([Future(7), TraceFuture(lambda: hits.append(1) or 1)])
+    assert hits == []
+
+
 def test_listing2_chain_single_device():
     """The paper's Listing 2 semantics on a 1-device world: the broadcast
     chain increments on designated ranks; with world size 1 every root is

@@ -1,0 +1,346 @@
+"""RMA window subsystem (paper C1 — MPI 4.0 chapter 12).
+
+Epoch discipline and argument validation run in-process (they raise at
+trace/issue time, before any collective lowers); numerics — put/get across
+patterns, the full accumulate op set, atomics, pytree windows, paged and
+request-based transfers, and the disaggregated serving transport — run on an
+8-virtual-device world in a subprocess."""
+
+from __future__ import annotations
+
+import textwrap
+
+import jax.numpy as jnp
+import pytest
+
+from repro import core as mpx
+from repro.core import errors, onesided
+from repro.core.descriptors import ReduceOp, WindowSpec
+
+
+# -- epoch / validation (trace-time, single device) ---------------------------
+
+
+def test_access_outside_epoch_is_err_win():
+    win = onesided.Window(mpx.world(), jnp.zeros((4,), jnp.float32))
+    with pytest.raises(errors.WinError):
+        win.put(jnp.ones((4,), jnp.float32), [(0, 0)])
+    with pytest.raises(errors.WinError):
+        win.get([(0, 0)])
+    with pytest.raises(errors.WinError):
+        win.accumulate(jnp.ones((4,), jnp.float32), target=0)
+    with pytest.raises(errors.WinError):
+        win.rput(jnp.ones((4,), jnp.float32), [(0, 0)])
+
+
+def test_duplicate_put_targets_are_err_rank():
+    # two origins writing one target in an epoch is a data race, never
+    # last-writer-wins (mirrors send_recv's duplicate-source check)
+    win = onesided.Window(mpx.world(), jnp.zeros((4,), jnp.float32)).fence()
+    with pytest.raises(errors.RankError):
+        win.put(jnp.ones((4,), jnp.float32), [(0, 1), (2, 1)])
+    with pytest.raises(errors.RankError):
+        win.rput(jnp.ones((4,), jnp.float32), [(0, 1), (2, 1)])
+
+
+def test_epoch_write_ledger_spans_calls():
+    """The duplicate-target invariant holds per EPOCH, not per call: a
+    second put covering an already-written span of the same target raises
+    ERR_RANK even from a separate call (rput is lazy, so this validates at
+    issue time without tracing)."""
+
+    win = onesided.Window(mpx.world(), jnp.zeros((8,), jnp.float32)).fence()
+    win.rput(jnp.ones((8,), jnp.float32), [(0, 0)], page=(0, 2))
+    win.rput(jnp.ones((8,), jnp.float32), [(0, 0)], page=(1, 2))  # disjoint: ok
+    with pytest.raises(errors.RankError):
+        win.rput(jnp.ones((8,), jnp.float32), [(0, 0)])           # overlaps both
+    with pytest.raises(errors.RankError):
+        win.rput(jnp.ones((8,), jnp.float32), [(0, 0)], page=(1, 4))  # inside page 1/2
+
+
+def test_perm_out_of_range_is_err_rank():
+    win = onesided.Window(mpx.world(), jnp.zeros((4,), jnp.float32)).fence()
+    n = mpx.world().size()
+    with pytest.raises(errors.RankError):
+        win.put(jnp.ones((4,), jnp.float32), [(0, n)])
+    with pytest.raises(errors.RankError):
+        win.accumulate(jnp.ones((4,), jnp.float32), target=n)
+
+
+def test_page_out_of_range_is_err_count_at_issue():
+    # validated when the request is issued (rput is lazy: without this, a
+    # bad index would surface as a raw IndexError at force time)
+    win = onesided.Window(mpx.world(), jnp.zeros((8,), jnp.float32)).fence()
+    with pytest.raises(errors.CountError):
+        win.rput(jnp.ones((8,), jnp.float32), [(0, 0)], page=(5, 2))
+    with pytest.raises(errors.CountError):
+        win.put(jnp.ones((8,), jnp.float32), [(0, 0)], page=(2, 2))
+
+
+def test_bare_none_window_is_err_type():
+    # None is compliant only as an aggregate member; a bare None operand
+    # must not become a zero-extent no-op window
+    with pytest.raises(errors.TypeError_):
+        onesided.Window(mpx.world(), None)
+
+
+def test_window_spec_honored():
+    # passive-target locks cannot be emulated: asking for them is refused
+    with pytest.raises(errors.UnsupportedError):
+        onesided.Window(mpx.world(), jnp.zeros(4), WindowSpec(no_locks=False))
+    # loc ops have no two-operand combine
+    win = onesided.Window(mpx.world(), jnp.zeros((4,), jnp.float32)).fence()
+    with pytest.raises(errors.OpError):
+        win.accumulate(jnp.ones((4,), jnp.float32), target=0, op=ReduceOp.MAXLOC)
+    # NO_OP only makes sense where there is a fetch
+    with pytest.raises(errors.OpError):
+        win.accumulate(jnp.ones((4,), jnp.float32), target=0, op=ReduceOp.NO_OP)
+
+
+def test_shape_mismatch_is_err_truncate():
+    win = onesided.Window(mpx.world(), jnp.zeros((4,), jnp.float32)).fence()
+    with pytest.raises(errors.TruncateError):
+        win.put(jnp.ones((5,), jnp.float32), [(0, 0)])
+
+
+def test_extent_and_datatype():
+    win = onesided.Window(mpx.world(), jnp.zeros((4,), jnp.float32))
+    assert win.extent() == 16
+    assert win.datatype is None
+    agg = {"a": jnp.zeros((2,), jnp.float32), "b": jnp.zeros((3,), jnp.int32)}
+    win = onesided.Window(mpx.world(), agg)
+    assert win.extent() == 2 * 4 + 3 * 4
+    assert win.datatype is not None
+
+
+# -- numerics on 8 virtual ranks ----------------------------------------------
+
+
+CODE_RMA = textwrap.dedent("""
+    import dataclasses
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro import core as mpx
+    from repro.core import futures, onesided
+    from repro.core.descriptors import ReduceOp, WindowSpec
+
+    comm = mpx.world()
+    N = comm.size()
+    assert N == 8
+
+    # --- put / get / accumulate over the op set -----------------------------
+    @comm.spmd
+    def ops():
+        win = onesided.Window(comm, jnp.full((4,), comm.rank() + 1, jnp.float32))
+        win.fence()
+        got = win.get([((d - 1) % N, d) for d in range(N)])       # ring read
+        win.put(jnp.full((4,), 99.0, jnp.float32), [(1, 0)])
+        win.accumulate(jnp.full((4,), comm.rank() + 1, jnp.float32),
+                       target=2, op=ReduceOp.MAX)
+        win.accumulate(jnp.full((4,), 2.0, jnp.float32),
+                       target=3, op=ReduceOp.PROD)
+        win.fence()
+        b = win.buffer
+        return (got,
+                mpx.broadcast(comm, b, root=0),
+                mpx.broadcast(comm, b, root=2),
+                mpx.broadcast(comm, b, root=3))
+
+    got, b0, b2, b3 = ops()
+    np.testing.assert_array_equal(np.asarray(got), np.full(4, float(N)))
+    np.testing.assert_array_equal(np.asarray(b0), np.full(4, 99.0))
+    # rank 2 window: max(own 3, contributions 1..8) = 8
+    np.testing.assert_array_equal(np.asarray(b2), np.full(4, 8.0))
+    # rank 3 window: 4 * prod(2^8) = 4 * 256
+    np.testing.assert_array_equal(np.asarray(b3), np.full(4, 4.0 * 2.0 ** N))
+    print("OPS_OK")
+
+    # --- WindowSpec default accumulate op ------------------------------------
+    @comm.spmd
+    def spec_default():
+        win = onesided.Window(comm, jnp.full((2,), comm.rank(), jnp.float32),
+                              WindowSpec(accumulate_op=ReduceOp.MIN))
+        win.fence()
+        win.accumulate(jnp.full((2,), comm.rank(), jnp.float32), target=5)
+        win.fence()
+        return mpx.broadcast(comm, win.buffer, root=5)
+
+    np.testing.assert_array_equal(np.asarray(spec_default()), np.zeros(2))
+    print("SPEC_OK")
+
+    # --- atomics -------------------------------------------------------------
+    @comm.spmd
+    def atomics():
+        win = onesided.Window(comm, jnp.full((4,), comm.rank(), jnp.float32))
+        win.fence()
+        old_fo = win.fetch_and_op(jnp.float32(5.0), target=1,
+                                  op=ReduceOp.SUM, index=2)
+        old_cas = win.compare_and_swap(2.0, 42.0, target=2, index=0)
+        old_miss = win.compare_and_swap(7.0, -1.0, target=2, index=1)
+        ga = win.get_accumulate(jnp.ones((4,), jnp.float32), target=4,
+                                op=ReduceOp.NO_OP)
+        win.fence()
+        b = win.buffer
+        return (old_fo, old_cas, old_miss, ga,
+                mpx.broadcast(comm, b, root=1), mpx.broadcast(comm, b, root=2),
+                mpx.broadcast(comm, b, root=4))
+
+    old_fo, old_cas, old_miss, ga, b1, b2, b4 = atomics()
+    assert float(old_fo) == 1.0
+    assert float(old_cas) == 2.0 and float(old_miss) == 2.0
+    np.testing.assert_array_equal(np.asarray(ga), np.full(4, 4.0))
+    np.testing.assert_array_equal(np.asarray(b1), np.array([1., 1., 41., 1.]))
+    np.testing.assert_array_equal(np.asarray(b2), np.array([42., 2., 2., 2.]))
+    np.testing.assert_array_equal(np.asarray(b4), np.full(4, 4.0))  # NO_OP left it
+    print("ATOMICS_OK")
+
+    # --- pytree window: pack/unpack round-trip via paged rput ----------------
+    @mpx.register_aggregate
+    @dataclasses.dataclass
+    class KV:
+        k: jax.Array
+        v: jax.Array
+
+    @comm.spmd
+    def pytree():
+        agg = KV(k=jnp.full((2, 3), comm.rank(), jnp.float32),
+                 v=jnp.full((4,), comm.rank(), jnp.int32))
+        win = onesided.Window(comm, jax.tree_util.tree_map(jnp.zeros_like, agg),
+                              WindowSpec(num_pages=3))
+        win.fence()
+        # bare page index: spec.num_pages is the divisor (honored field)
+        futs = [win.rput(agg, [(5, 1)], page=p) for p in range(3)]
+        futures.when_all(futs).get()      # trace-level Waitall dispatch
+        win.fence()
+        out = win.buffer
+        return mpx.broadcast(comm, out.k, root=1), mpx.broadcast(comm, out.v, root=1)
+
+    k, v = pytree()
+    np.testing.assert_array_equal(np.asarray(k), np.full((2, 3), 5.0, np.float32))
+    np.testing.assert_array_equal(np.asarray(v), np.full((4,), 5, np.int32))
+    print("PYTREE_OK")
+
+    # --- rput/raccumulate -> then ordering: chains apply in issue order -----
+    # REPLACE-then-SUM is order-observable: issue order gives 5 + N*1 = 13;
+    # the reverse would give 5.  (Two puts to one location in an epoch is the
+    # race the write ledger rejects, so ordering is shown through accumulate.)
+    @comm.spmd
+    def ordering():
+        win = onesided.Window(comm, jnp.zeros((4,), jnp.float32))
+        win.fence()
+        f1 = win.raccumulate(jnp.full((4,), 5.0, jnp.float32),
+                             target=6, op=ReduceOp.REPLACE)
+        f2 = f1.then(lambda f: (
+            f.get(),
+            win.raccumulate(jnp.ones((4,), jnp.float32),
+                            target=6, op=ReduceOp.SUM).get(),
+        )[1])
+        futures.when_all([f1, f2]).get()   # then-derived futures are caller-owned
+        win.fence()
+        return mpx.broadcast(comm, win.buffer, root=6)
+
+    np.testing.assert_array_equal(np.asarray(ordering()), np.full(4, 5.0 + N))
+    print("ORDER_OK")
+
+    # --- REPLACE moves data across ranks (lowest-ranked origin wins) --------
+    @comm.spmd
+    def replace_moves():
+        win = onesided.Window(comm, jnp.zeros((2,), jnp.float32))
+        win.fence()
+        win.accumulate(jnp.full((2,), comm.rank() + 10, jnp.float32),
+                       target=3, op=ReduceOp.REPLACE)
+        win.fence()
+        return mpx.broadcast(comm, win.buffer, root=3)
+
+    np.testing.assert_array_equal(np.asarray(replace_moves()), np.full(2, 10.0))
+    print("REPLACE_OK")
+
+    # --- per-epoch write ledger: disjoint pages fine, overlap is ERR_RANK ---
+    @comm.spmd
+    def epoch_ledger():
+        win = onesided.Window(comm, jnp.zeros((8,), jnp.float32))
+        win.fence()
+        win.put(jnp.full((8,), 1.0, jnp.float32), [(0, 7)], page=(0, 2))
+        win.put(jnp.full((8,), 2.0, jnp.float32), [(1, 7)], page=(1, 2))
+        try:
+            win.put(jnp.full((8,), 3.0, jnp.float32), [(2, 7)])  # full window
+            raise AssertionError("expected ERR_RANK")
+        except mpx.errors.RankError:
+            pass
+        win.fence()
+        win.fence()   # fresh epoch: the ledger is cleared
+        win.put(jnp.full((8,), 4.0, jnp.float32), [(2, 7)])
+        win.fence()
+        return mpx.broadcast(comm, win.buffer, root=7)
+
+    np.testing.assert_array_equal(np.asarray(epoch_ledger()), np.full(8, 4.0))
+    print("LEDGER_OK")
+
+    # --- unified mask shape: empty perm is a well-formed no-op ---------------
+    @comm.spmd
+    def empty_perm():
+        win = onesided.Window(comm, jnp.full((4,), comm.rank(), jnp.float32))
+        win.fence()
+        win.put(jnp.full((4,), 7.0, jnp.float32), [])
+        win.fence()
+        return mpx.broadcast(comm, win.buffer, root=3)
+
+    np.testing.assert_array_equal(np.asarray(empty_perm()), np.full(4, 3.0))
+    print("EMPTY_OK")
+""")
+
+
+def test_rma_numerics_8dev(subproc):
+    out = subproc(CODE_RMA, n=8)
+    for marker in ("OPS_OK", "SPEC_OK", "ATOMICS_OK", "PYTREE_OK",
+                   "ORDER_OK", "REPLACE_OK", "LEDGER_OK", "EMPTY_OK"):
+        assert marker in out
+
+
+# -- the disaggregated serving transport --------------------------------------
+
+
+CODE_DISAGG = textwrap.dedent("""
+    import numpy as np
+    from repro.configs.base import ModelConfig, ParallelConfig
+    from repro.launch.mesh import make_host_communicator
+    from repro.runtime.server import (
+        DisaggregatedServer, Request, Server, ServerConfig)
+    from repro.core import tool
+
+    # float32: the transport is bit-exact in any dtype; pinning the compute
+    # dtype isolates it from partitioning-dependent bf16 rounding
+    cfg = ModelConfig(name="tiny", family="dense", num_layers=2, d_model=32,
+                      num_heads=2, num_kv_heads=1, head_dim=16, d_ff=64,
+                      vocab_size=64, dtype="float32")
+    scfg = ServerConfig(max_batch=2, max_new_tokens=6, temperature=0.0)
+    rng = np.random.default_rng(0)
+    reqs = [Request(tokens=rng.integers(1, cfg.vocab_size, size=(8,),
+                                        dtype=np.int32))
+            for _ in range(2)]
+
+    base = Server(cfg, ParallelConfig(), scfg, make_host_communicator())
+    tok_base, _ = base.generate(reqs)
+
+    dis = DisaggregatedServer(cfg, ParallelConfig(), scfg, kv_pages=3)
+    assert dis.prefill.comm.group().intersection(dis.decode.comm.group()).size() == 0
+    tok_dis, stats = dis.generate(reqs)
+    assert np.array_equal(tok_base, tok_dis), (tok_base, tok_dis)
+    assert stats["kv_bytes"] > 0 and stats["kv_pages"] == 3
+
+    # the handoff is persistent: a second generate re-fires, never re-traces
+    tok2, _ = dis.generate(reqs)
+    assert np.array_equal(tok2, tok_base)
+    assert tool.pvar_read()["trace:kv_transfer"] == 1
+    assert tool.pvar_read()["rma_rput"] == 3
+    print("DISAGG_OK")
+""")
+
+
+def test_disaggregated_serving_parity_8dev(subproc):
+    """Prefill and decode on disjoint groups of one session pset; KV blocks
+    cross via window rput; tokens match the single-group baseline
+    token-for-token at temperature 0."""
+
+    out = subproc(CODE_DISAGG, n=8)
+    assert "DISAGG_OK" in out

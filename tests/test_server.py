@@ -1,0 +1,103 @@
+"""Serving-loop batching and PRNG behaviour (single-device; the
+disaggregated transport's multi-device path lives in test_onesided.py)."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.core import errors
+from repro.launch.mesh import make_host_communicator
+from repro.runtime.server import Request, Server, ServerConfig
+
+
+def _tiny_cfg():
+    return ModelConfig(
+        name="tiny", family="dense", num_layers=2, d_model=32, num_heads=2,
+        num_kv_heads=1, head_dim=16, d_ff=64, vocab_size=64,
+    )
+
+
+@pytest.fixture(scope="module")
+def sampling_server():
+    return Server(
+        _tiny_cfg(), ParallelConfig(),
+        ServerConfig(max_batch=2, max_new_tokens=5, temperature=0.8, seed=7),
+        make_host_communicator(),
+    )
+
+
+def _reqs(cfg, n=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(tokens=rng.integers(1, cfg.vocab_size, size=(8,), dtype=np.int32))
+        for _ in range(n)
+    ]
+
+
+# -- _pad_batch: extras are keyed off the batch UNION -------------------------
+
+
+def test_pad_batch_union_of_extras(sampling_server):
+    # request 0 has NO extras; request 1 carries one — the old code keyed
+    # off requests[0] and silently dropped it
+    reqs = [
+        Request(tokens=np.ones((4,), np.int32)),
+        Request(tokens=np.ones((6,), np.int32),
+                extra={"image_embeds": np.ones((3, 8), np.float32)}),
+    ]
+    with pytest.raises(errors.ArgError):
+        sampling_server._pad_batch(reqs)
+
+    # both requests supply the key: it must appear, stacked, in the batch
+    reqs = [
+        Request(tokens=np.ones((4,), np.int32),
+                extra={"image_embeds": np.zeros((3, 8), np.float32)}),
+        Request(tokens=np.ones((6,), np.int32),
+                extra={"image_embeds": np.ones((3, 8), np.float32)}),
+    ]
+    batch, lens = sampling_server._pad_batch(reqs)
+    assert batch["image_embeds"].shape == (2, 3, 8)
+    assert list(lens) == [4, 6]
+    # left-padding keeps the last token aligned
+    assert batch["tokens"].shape == (2, 6)
+
+
+def test_pad_batch_missing_key_is_err_arg(sampling_server):
+    reqs = [
+        Request(tokens=np.ones((4,), np.int32),
+                extra={"image_embeds": np.zeros((3, 8), np.float32)}),
+        Request(tokens=np.ones((4,), np.int32)),   # lacks the key
+    ]
+    with pytest.raises(errors.ArgError) as e:
+        sampling_server._pad_batch(reqs)
+    assert "image_embeds" in str(e.value)
+
+
+# -- generate: per-call PRNG keys ---------------------------------------------
+
+
+def test_sampling_keys_vary_per_call_and_replay(sampling_server):
+    """With temperature > 0, successive batches must sample different keys
+    (the old code re-seeded PRNGKey(seed) every call), while the sequence of
+    calls stays reproducible from the seed."""
+
+    cfg = sampling_server.cfg
+    reqs = _reqs(cfg)
+    first, _ = sampling_server.generate(reqs)
+    second, _ = sampling_server.generate(reqs)
+    assert not np.array_equal(first, second), (
+        "two generate() calls on identical requests sampled identical keys"
+    )
+
+    # a fresh server with the same seed replays the same call sequence
+    replay = Server(
+        cfg, sampling_server.pcfg,
+        ServerConfig(max_batch=2, max_new_tokens=5, temperature=0.8, seed=7),
+        make_host_communicator(),
+    )
+    r_first, _ = replay.generate(reqs)
+    r_second, _ = replay.generate(reqs)
+    assert np.array_equal(first, r_first)
+    assert np.array_equal(second, r_second)

@@ -89,6 +89,21 @@ def test_straggler_redispatch():
     assert out == 2
 
 
+def test_straggler_window_is_honored():
+    """StragglerPolicy.window sizes the history deque (it was dead config:
+    the deque hardcoded maxlen=32 regardless of the field)."""
+
+    p = StragglerPolicy(window=4, min_samples=2)
+    for i in range(10):
+        p.observe(float(i))
+    assert p._history.maxlen == 4
+    assert list(p._history) == [6.0, 7.0, 8.0, 9.0]
+    assert p.median() == 8.0      # median of the WINDOW, not of all history
+
+    # default stays at 32
+    assert StragglerPolicy()._history.maxlen == 32
+
+
 def test_elastic_remesh_restore(tmp_path):
     """Checkpoint written under one mesh restores under a different
     data-parallel size (elastic rescale)."""
