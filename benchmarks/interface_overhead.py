@@ -17,6 +17,13 @@ And with the **RMA series** (MPI 4.0 chapter 12, one-sided): window
 (``fence``/``fence``) cost against a bare ``optimization_barrier`` — the
 interface tax of the epoch machinery, masking and datatype plumbing.
 
+And with the **I/O series** (MPI 4.0 chapter 14, nonblocking collective
+file I/O): checkpoint write bandwidth, the issue latency of a request-based
+async save (the synchronous part is only the device→host gather), and the
+**overlap** claim — an async save plus a compute span costs ~max(I/O,
+compute) wall-clock where the synchronous form costs the sum — with the
+manifest-commit count per save (exactly one: the single sync point).
+
 Run directly (spawns subprocesses with N virtual devices):
 
     PYTHONPATH=src python -m benchmarks.interface_overhead [--quick]
@@ -192,6 +199,104 @@ def geomean(xs):
     return math.exp(sum(math.log(max(x, 1e-9)) for x in xs) / len(xs))
 
 
+def io_series(reps: int, quick: bool) -> list[dict]:
+    """Checkpoint I/O bandwidth + async-overlap measurements (main process —
+    file I/O needs no virtual devices)."""
+
+    import tempfile
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    sys.path.insert(0, str(ROOT / "src"))  # when PYTHONPATH was not exported
+
+    from repro.checkpoint import CheckpointManager
+    from repro.core import tool
+
+    sizes = [1 << 18, 1 << 20] if quick else [1 << 18, 1 << 20, 1 << 22]
+    reps = max(2, min(reps, 5))
+    x = jnp.ones((512, 512), jnp.float32)
+    step_fn = jax.jit(lambda a: a @ a.T / 512.0 + 1.0)
+    jax.block_until_ready(step_fn(x))
+
+    rows = []
+    for n in sizes:
+        # two dtype buckets (f32 + bf16) → two I/O requests per save
+        state = {
+            "w32": jnp.arange(n, dtype=jnp.float32),
+            "w16": jnp.ones((n // 2,), jnp.bfloat16),
+        }
+        jax.block_until_ready(state)
+        nbytes = 4 * n + 2 * (n // 2)
+
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, keep=2, async_save=False, verify=False)
+            mgr.save(0, state)  # warm path/allocators
+            c0 = tool.pvar_read().get("io_manifest_commit", 0)
+            t0 = time.perf_counter()
+            for r in range(reps):
+                mgr.save(r + 1, state)
+            sync_s = (time.perf_counter() - t0) / reps
+            commits = (tool.pvar_read().get("io_manifest_commit", 0) - c0) / reps
+
+        # calibrate a compute span comparable to one save
+        t0 = time.perf_counter()
+        jax.block_until_ready(step_fn(x))
+        step_s = max(time.perf_counter() - t0, 1e-5)
+        k = max(1, int(sync_s / step_s))
+
+        def compute():
+            y = x
+            for _ in range(k):
+                y = step_fn(y)
+            jax.block_until_ready(y)
+
+        # serial: blocking save then compute; overlapped: async save + the
+        # same compute while the I/O requests run, then join
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, keep=2, async_save=False, verify=False)
+            mgr.save(0, state)
+            t0 = time.perf_counter()
+            for r in range(reps):
+                mgr.save(r + 1, state)
+                compute()
+            serial_s = (time.perf_counter() - t0) / reps
+        with tempfile.TemporaryDirectory() as d:
+            mgr = CheckpointManager(d, keep=2, async_save=True, verify=False)
+            mgr.save(0, state)
+            mgr.wait()
+            issue_us = []
+            t0 = time.perf_counter()
+            for r in range(reps):
+                # join the previous save outside the issue timer: save()'s
+                # internal wait would otherwise charge residual I/O from the
+                # last iteration to this iteration's "issue latency"
+                mgr.wait()
+                t1 = time.perf_counter()
+                mgr.save(r + 1, state)
+                issue_us.append((time.perf_counter() - t1) * 1e6)
+                compute()
+            mgr.wait()
+            overlap_s = (time.perf_counter() - t0) / reps
+
+        rows.append(
+            {
+                "series": "io",
+                "state_mb": nbytes / 2**20,
+                "sync_save_ms": sync_s * 1e3,
+                "write_MBps": nbytes / 2**20 / sync_s,
+                "issue_us": sum(issue_us) / len(issue_us),
+                "serial_ms": serial_s * 1e3,
+                "overlapped_ms": overlap_s * 1e3,
+                "overlap_ratio": overlap_s / serial_s,
+                "manifest_commits_per_save": commits,
+            }
+        )
+        print(f"io: state={nbytes / 2**20:.1f}MB done")
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -207,9 +312,11 @@ def main(argv=None):
     for d in device_counts:
         all_rows += run(d, msg_lens, args.reps)
         print(f"devices={d}: done")
+    io_rows = io_series(args.reps, args.quick)
 
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / "interface_overhead.json").write_text(json.dumps(all_rows, indent=1))
+    (OUT / "io_overhead.json").write_text(json.dumps(io_rows, indent=1))
 
     # paper-style summary: geometric mean over the op set per (devices, len)
     lines = ["| devices | msg elems | raw µs (geo) | interface µs (geo) | ratio |",
@@ -260,7 +367,23 @@ def main(argv=None):
                     f"| {d} | {n} | {r['op']} | {r['raw_us']:.1f} | "
                     f"{r['iface_us']:.1f} | {ratio:.3f} |"
                 )
-    table = "\n".join(lines + plines + rlines)
+    # I/O series: checkpoint bandwidth + async overlap (single manifest
+    # commit per save — the sync-point count is part of the claim)
+    iolines = ["", "| state MB | sync save ms | MB/s | issue µs | serial ms | "
+               "overlapped ms | overlap | commits/save |",
+               "|---|---|---|---|---|---|---|---|"]
+    worst_overlap = 0.0
+    worst_commits = 0.0
+    for r in io_rows:
+        worst_overlap = max(worst_overlap, r["overlap_ratio"])
+        worst_commits = max(worst_commits, r["manifest_commits_per_save"])
+        iolines.append(
+            f"| {r['state_mb']:.1f} | {r['sync_save_ms']:.1f} | "
+            f"{r['write_MBps']:.0f} | {r['issue_us']:.0f} | "
+            f"{r['serial_ms']:.1f} | {r['overlapped_ms']:.1f} | "
+            f"{r['overlap_ratio']:.3f} | {r['manifest_commits_per_save']:.1f} |"
+        )
+    table = "\n".join(lines + plines + rlines + iolines)
     (OUT / "interface_overhead.md").write_text(table + "\n")
     print(table)
     print(f"worst geomean ratio: {worst:.3f} (paper claim: ~1.0, 'no recognizable disparity')")
@@ -268,7 +391,10 @@ def main(argv=None):
           "(claim: <= 1.0 — setup cost amortized by *_init + Start)")
     print(f"worst RMA/raw ratio: {worst_rma:.3f} "
           "(window epoch + masking tax over the bare collective)")
-    return 0 if worst_persist <= 1.0 else 1
+    print(f"worst async/serial checkpoint ratio: {worst_overlap:.3f} "
+          "(claim: < 1.0 — I/O requests overlap compute; "
+          f"manifest commits per save: {worst_commits:.1f}, claim: exactly 1)")
+    return 0 if worst_persist <= 1.0 and worst_commits == 1.0 else 1
 
 
 if __name__ == "__main__":

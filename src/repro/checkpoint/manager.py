@@ -1,4 +1,4 @@
-"""Sharded, atomic, async-capable checkpointing.
+"""Sharded, atomic, async checkpointing on the parallel-IO request engine.
 
 Layout::
 
@@ -15,18 +15,33 @@ Fault-tolerance properties:
 * restore picks the newest *complete* step — a torn save is skipped;
 * **elastic restore**: fragments record global offsets, so a checkpoint
   written on one mesh restores onto any other mesh/sharding (the fragments
-  are reassembled to the global array and re-placed);
-* async save: the device→host transfer happens synchronously (cheap), the
-  file writes go to a background thread; ``wait()`` joins before the next
-  save or at exit.
+  are reassembled to the global array and re-placed through the file's
+  ``set_view`` storage representation);
+* **async save on the request engine**: the device→host gather is
+  synchronous (cheap, and required — the trainer's persistent step donates
+  its buffers, so the copy must land before the next ``MPI_Start``), then
+  the file writes run as **one I/O request per dtype bucket**
+  (``File.awrite_fragments``), joined with ``when_all`` and chained with
+  ``then()`` into a **single manifest commit** (one ``MPI_File_sync``-style
+  atomic write per step, not one rewrite per array);
+* **errors are never swallowed**: ``wait()`` (and ``get()`` on the request
+  ``save()`` returns) re-raises any background failure as ``ERR_IO``, and a
+  failed save never writes ``_COMPLETE`` or advances ``latest``.  Every
+  fragment is read back and checksum-verified before the manifest commits
+  (``FileSpec.verify``);
+* an ``atexit`` hook joins the outstanding save, so interpreter shutdown
+  cannot kill a daemon I/O thread mid-save.
 """
 
 from __future__ import annotations
 
+import atexit
 import json
+import logging
 import os
 import re
-import threading
+import sys
+import weakref
 from typing import Any
 
 import jax
@@ -35,6 +50,7 @@ import numpy as np
 from repro.core import errors
 from repro.core import io as pio
 from repro.core.descriptors import Mode
+from repro.core.futures import Future, when_all
 
 
 def _flatten_with_names(tree: Any) -> list[tuple[str, Any]]:
@@ -48,27 +64,77 @@ def _flatten_with_names(tree: Any) -> list[tuple[str, Any]]:
     return out
 
 
+log = logging.getLogger("repro.checkpoint")
+
+_MANAGERS: "weakref.WeakSet[CheckpointManager]" = weakref.WeakSet()
+
+
+@atexit.register
+def _drain_managers_at_exit() -> None:
+    for mgr in list(_MANAGERS):
+        try:
+            mgr.wait()
+        except errors.Error as e:
+            print(
+                f"repro.checkpoint: pending save failed at interpreter exit: {e}",
+                file=sys.stderr,
+            )
+
+
 class CheckpointManager:
-    def __init__(self, directory: str, *, keep: int = 3, async_save: bool = True):
+    def __init__(
+        self,
+        directory: str,
+        *,
+        keep: int = 3,
+        async_save: bool = True,
+        verify: bool = True,
+        injector: Any | None = None,
+    ):
         self.directory = directory
         self.keep = keep
         self.async_save = async_save
-        self._thread: threading.Thread | None = None
+        self.verify = verify
+        #: optional runtime.faults.FaultInjector whose ``check_io`` is wired
+        #: as the fragment write hook (torn-save fault injection)
+        self.injector = injector
+        self._pending: pio.IORequest | None = None
         os.makedirs(directory, exist_ok=True)
+        _MANAGERS.add(self)
 
     # -- save ----------------------------------------------------------------
 
-    def save(self, step: int, tree: Any, *, extra: dict | None = None) -> str:
-        """Save a pytree checkpoint for ``step``.  Returns the step dir."""
+    def save(self, step: int, tree: Any, *, extra: dict | None = None) -> Future:
+        """Save a pytree checkpoint for ``step``.
+
+        Returns the completion request: a host future resolving to the step
+        directory once every fragment is durable (read-back verified) and
+        the manifest, ``_COMPLETE`` marker and ``latest`` pointer are
+        committed.  With ``async_save`` the request runs in the background
+        and the caller overlaps it with further work; :meth:`wait` (called
+        automatically before the next save and at exit) joins it and
+        **re-raises any failure** as ``ERR_IO``.
+        """
+
+        from repro.core import tool
 
         self.wait()
+        tool.pvar_count("ckpt_save")
         step_dir = os.path.join(self.directory, f"step_{step:08d}")
         leaves = _flatten_with_names(tree)
-        # synchronous device→host gather of addressable shards
-        host_shards: list[tuple[str, list[tuple[tuple[int, ...], np.ndarray]], tuple, str]] = []
+
+        # synchronous device→host gather of addressable shards (donated
+        # buffers may be re-fired immediately after save() returns).
+        # Deliberately NOT File._gather: leaf names are sanitised ('/'→'.')
+        # and checksums are deferred to the bucket threads (off the issue
+        # path) — keep the fragment/record shape in sync with File._gather.
+        records: dict[str, dict] = {}
+        buckets: dict[np.dtype, list[tuple[str, np.ndarray]]] = {}
+        entry_by_frag: dict[str, dict] = {}
         for name, leaf in leaves:
+            frags: list[tuple[tuple[int, ...], np.ndarray]] = []
             if isinstance(leaf, jax.Array):
-                frags = []
+                gshape, dtype = tuple(leaf.shape), np.dtype(leaf.dtype)
                 seen = set()
                 for sh in leaf.addressable_shards:
                     start = tuple(s.start or 0 for s in sh.index)
@@ -76,53 +142,123 @@ class CheckpointManager:
                         continue
                     seen.add(start)
                     frags.append((start, np.asarray(sh.data)))
-                host_shards.append((name, frags, tuple(leaf.shape), str(np.dtype(leaf.dtype))))
             else:
                 arr = np.asarray(leaf)
-                host_shards.append(
-                    (name, [((0,) * arr.ndim, arr)], tuple(arr.shape), str(arr.dtype))
-                )
-
-        def write():
-            f = pio.open(step_dir, Mode.CREATE | Mode.WRONLY, checksum=True)
-            for name, frags, gshape, dtype in host_shards:
-                entries = []
-                for start, buf in frags:
-                    fragname = f"{name.replace('/', '.')}.{'_'.join(map(str, start))}.npy"
-                    f._write_fragment(fragname, buf)
-                    entries.append(
-                        {
-                            "fragment": fragname,
-                            "offset": list(start),
-                            "shape": list(buf.shape),
-                            "checksum": pio._checksum(buf),
-                        }
+                gshape, dtype = tuple(arr.shape), arr.dtype
+                frags.append(((0,) * arr.ndim, arr))
+            entries = []
+            for start, buf in frags:
+                fragname = f"{name.replace('/', '.')}.{'_'.join(map(str, start))}.npy"
+                if fragname in entry_by_frag:
+                    # sanitised names can collide ("a/b" vs {"a": {"b"}});
+                    # last-writer-wins would silently restore wrong data
+                    errors.fail(
+                        errors.ErrorClass.ERR_IO,
+                        f"leaf {name!r} collides with another leaf on "
+                        f"fragment {fragname!r} after '/'→'.' sanitisation",
                     )
-                f._update_manifest(
-                    name,
-                    {"name": name, "shape": list(gshape), "dtype": dtype, "fragments": entries},
+                buckets.setdefault(dtype, []).append((fragname, buf))
+                entries.append(
+                    {
+                        "fragment": fragname,
+                        "offset": list(start),
+                        "shape": list(buf.shape),
+                        # filled by the commit continuation: digests are
+                        # computed on the I/O threads, off the issue path
+                        "checksum": None,
+                    }
                 )
+                entry_by_frag[fragname] = entries[-1]
+            record = {
+                "name": name,
+                "shape": list(gshape),
+                "dtype": str(dtype),
+                "fragments": entries,
+            }
+            alias = pio.storage_alias(dtype)
+            if alias is not None:
+                record["etype"] = str(alias)
+            records[name] = record
+
+        f = pio.open(step_dir, Mode.CREATE | Mode.WRONLY, checksum=True,
+                     verify=self.verify)
+        if self.injector is not None and hasattr(self.injector, "check_io"):
+            f.write_hook = self.injector.check_io
+
+        # one I/O request per dtype bucket, joined into a single commit; the
+        # buckets are created inactive and fanned out by the driver below,
+        # so the issue path pays one thread launch, not one per bucket
+        reqs = [
+            f.awrite_fragments(f"ckpt[{step}] bucket {dt}", frags, start=False)
+            for dt, frags in buckets.items()
+        ]
+
+        def commit(joined: Future) -> str:
+            # joins every bucket; a failed write raises ERR_IO here.  Each
+            # bucket resolves to its {fragment: checksum} map — merge them
+            # into the records before the single manifest sync point.
+            for sums in joined.get():
+                for fragname, digest in sums.items():
+                    entry_by_frag[fragname]["checksum"] = digest
+            f.commit_manifest(records)  # ONE manifest sync point per step
             if extra:
                 pio._atomic_write(
                     os.path.join(step_dir, "extra.json"), json.dumps(extra).encode()
                 )
             pio._atomic_write(os.path.join(step_dir, "_COMPLETE"), b"ok")
-            pio._atomic_write(
-                os.path.join(self.directory, "latest"), str(step).encode()
-            )
+            pio._atomic_write(os.path.join(self.directory, "latest"), str(step).encode())
             self._gc()
+            return step_dir
 
+        chain = when_all(reqs).then(commit)  # lazy: nothing blocks here
+
+        def drive():
+            for r in reqs:
+                r.start()  # fan the bucket threads out together
+            return chain._wait_value()
+
+        # drive the chain on its own I/O thread so the commit lands without
+        # the caller waiting; the returned request is the completion handle
+        completion = pio.IORequest(f"ckpt[{step}] commit", drive)
         if self.async_save:
-            self._thread = threading.Thread(target=write, daemon=True)
-            self._thread.start()
+            self._pending = completion
         else:
-            write()
-        return step_dir
+            # join inline — a failure raises from save() itself — but leave
+            # the returned request valid so the caller's get()/then() still
+            # works (it resolves immediately)
+            completion._wait_value()
+        return completion
 
-    def wait(self) -> None:
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
+    def wait(self) -> str | None:
+        """Join the outstanding save and return its step directory.
+
+        A failure captured in the background — a fragment write error, a
+        read-back verify mismatch — is **re-raised here as ``ERR_IO``** (it
+        used to be silently dropped with the save reported as success);
+        ``latest`` never advances past a failed save.  Callers that already
+        consumed the request ``save()`` returned have seen its outcome, so
+        the join is a no-op then.
+        """
+
+        from repro.core import tool
+
+        req, self._pending = self._pending, None
+        if req is None:
+            return None
+        if not req.valid():
+            # caller consumed the returned request (get/then); only re-raise
+            # a failure that was never actually delivered to anyone
+            exc = req.drain()
+            if exc is not None and not req.delivered:
+                raise exc
+            return None
+        tool.pvar_count("ckpt_wait")
+        return req.get()
+
+    def pending(self) -> bool:
+        """Is a background save still in flight (``MPI_Test`` style)?"""
+
+        return self._pending is not None and not self._pending.test()
 
     def _gc(self) -> None:
         steps = self.steps()
@@ -150,17 +286,35 @@ class CheckpointManager:
 
         ``shardings``: matching pytree of NamedShardings (or None leaves) —
         pass the *current* mesh's shardings for elastic restore onto a
-        different topology than the writer's.
+        different topology than the writer's (the straggler/failure recovery
+        path).  Each record is read through ``set_view`` with its recorded
+        storage etype, so extended dtypes (bf16, fp8) reinterpret through
+        the declared representation rather than a blind cast; checksums
+        verify every fragment on the way back in.
         Returns (tree, step).
         """
 
+        from repro.core import tool
+
+        # join the in-flight save BEFORE resolving the step: an unjoined
+        # save is invisible to latest_step(), so waiting later would restore
+        # a stale step (or fail) when the pending one was about to land.
+        # Tolerantly: "a torn save is skipped" — restore proceeds from the
+        # newest COMPLETE step even when the pending save just failed (the
+        # failure is logged and counted, not dropped).
+        try:
+            self.wait()
+        except errors.Error as e:
+            tool.pvar_count("ckpt_save_failed")
+            log.warning("pending save failed; restoring newest complete step: %s", e)
         step = step if step is not None else self.latest_step()
         errors.check(
             step is not None, errors.ErrorClass.ERR_IO, f"no checkpoint in {self.directory}"
         )
-        self.wait()
+        tool.pvar_count("ckpt_restore")
         step_dir = os.path.join(self.directory, f"step_{step:08d}")
         f = pio.open(step_dir, Mode.RDONLY, checksum=True)
+        arrays = f.manifest()["arrays"]
         names = [n for n, _ in _flatten_with_names(template)]
         flat_t, treedef = jax.tree_util.tree_flatten(template)
         flat_s = (
@@ -168,6 +322,12 @@ class CheckpointManager:
         )
         restored = []
         for name, tmpl, shd in zip(names, flat_t, flat_s):
+            rec = arrays.get(name)
+            if rec is None:
+                errors.fail(
+                    errors.ErrorClass.ERR_IO, f"array {name!r} not in {step_dir}"
+                )
+            f.set_view(etype=rec.get("etype"))
             arr = f.read_at_all(name, shd)
             if hasattr(tmpl, "dtype") and arr.dtype != tmpl.dtype:
                 arr = arr.astype(tmpl.dtype)

@@ -55,6 +55,7 @@ from repro.core.descriptors import (  # noqa: F401
     WindowSpec,
 )
 from repro.core.futures import (  # noqa: F401
+    DeferredFuture,
     Future,
     PartitionedRequest,
     PersistentCollective,

@@ -276,6 +276,20 @@ class DataType:
         )
         return [even_page_bounds(size, num_pages) for size in self.group_sizes]
 
+    def layout_signature(self) -> dict:
+        """JSON-able description of the packed layout (group dtypes and
+        element counts) — what a :class:`repro.core.io.File` view records in
+        the manifest so a reader's ``set_view`` is validated against the
+        writer's (the MPI etype/filetype-equivalence rule for collective
+        file views)."""
+
+        return {
+            "groups": [
+                {"dtype": str(np.dtype(d)), "size": int(s)}
+                for d, s in zip(self.group_dtypes, self.group_sizes)
+            ]
+        }
+
     def shape_dtype_structs(self) -> list[jax.ShapeDtypeStruct]:
         """Stand-ins for the packed buffers (for AOT lowering)."""
 

@@ -142,11 +142,25 @@ class WindowSpec:
 
 @dataclasses.dataclass(frozen=True)
 class FileSpec:
-    """Description object for parallel IO (``MPI_File_open``)."""
+    """Description object for parallel IO (``MPI_File_open``).
+
+    Attributes
+    ----------
+    mode: access mode flags.  ``EXCL`` raises ``ERR_FILE`` when the dataset
+        already exists — with or without ``CREATE``, matching
+        ``MPI_ERR_FILE_EXISTS`` semantics.
+    atomic: manifests are written atomically (tmp + rename).
+    checksum: record per-fragment checksums and verify them on read.
+    verify: read each fragment back after writing it and compare checksums
+        before the write is reported complete (read-back verify — the
+        durability check an async checkpoint save runs before committing its
+        manifest).
+    """
 
     mode: Mode = Mode.RDONLY
     atomic: bool = True          # manifests are written atomically
     checksum: bool = True
+    verify: bool = False
 
 
 DEFAULT_COLLECTIVE = CollectiveSpec()

@@ -21,6 +21,13 @@ host code and inside the parallel program, and how MPI 4.0 extends them:
   chunk-wise with the communication schedule — the TPU-native meaning of
   "overlap nonblocking communication with computation".
 
+* :class:`DeferredFuture` — **host level, off the dispatch path**.  Some
+  completions are not XLA values: background file I/O
+  (:class:`repro.core.io.IORequest`), joins over such requests.  A deferred
+  future resolves at wait time, ``then()`` chains lazily (the continuation
+  runs when the chain is waited), and resolver errors propagate through
+  ``get()``/``wait()`` — the error-forwarding thin wrappers lose.
+
 * :class:`PersistentRequest` — persistent operations (``MPI_Send_init`` /
   ``MPI_Allreduce_init`` + ``MPI_Start``): the argument/plan setup is
   amortised by AOT lowering and compilation; ``start()`` re-fires the
@@ -86,6 +93,12 @@ class Future:
 
         errors.check(self._valid, errors.ErrorClass.ERR_REQUEST, "future already consumed")
         self._valid = False
+        return self._wait_value()
+
+    def _wait_value(self) -> Any:
+        """Block until the value is materialised and return it (no validity
+        bookkeeping — ``get``/``wait`` own that)."""
+
         jax.block_until_ready(self._value)
         return self._value
 
@@ -93,7 +106,7 @@ class Future:
         """Block until complete (does not consume; ``get()`` does)."""
 
         errors.check(self._valid, errors.ErrorClass.ERR_REQUEST, "future already consumed")
-        jax.block_until_ready(self._value)
+        self._wait_value()
         return self
 
     def test(self) -> bool:
@@ -124,6 +137,70 @@ class Future:
         return Future(result)
 
 
+class DeferredFuture(Future):
+    """Host future whose value is produced by a *resolver* at completion
+    time — the host-level request behind operations that finish off the XLA
+    dispatch path (background file I/O, joins over such requests).
+
+    ``get()``/``wait()`` run the resolver exactly once; an error raised
+    there (e.g. ``ERR_IO`` from a failed background write) propagates to the
+    caller — a failed operation can never read as success.  ``test()`` uses
+    the optional ``probe`` (e.g. a thread-completion event); without one it
+    reports completion only after resolution, like :class:`TraceFuture`.
+
+    ``then()`` on a deferred request is itself deferred: the continuation
+    runs when the *chained* request is waited, not at chain time, so a chain
+    built over in-flight I/O does not block the issuing thread (the host
+    analogue of :meth:`TraceFuture.then`).
+    """
+
+    def __init__(self, resolver: Callable[[], Any], probe: Callable[[], bool] | None = None):
+        super().__init__(None)
+        self._resolver = resolver
+        self._probe = probe
+        self._resolved = False
+
+    def _wait_value(self) -> Any:
+        if not self._resolved:
+            self._value = self._resolver()
+            self._resolved = True
+        jax.block_until_ready(self._value)
+        return self._value
+
+    def test(self) -> bool:
+        if self._resolved:
+            return True
+        if self._probe is not None:
+            return bool(self._probe())
+        return False
+
+    def then(self, fn: Callable[["Future"], Any]) -> "DeferredFuture":
+        errors.check(
+            self._valid, errors.ErrorClass.ERR_REQUEST, "then() on a consumed future"
+        )
+        self._valid = False
+        parent = self
+
+        def resolver():
+            # the chain owns the parent request now: re-validate it for the
+            # continuation's own get()/wait(), exactly as the eager form
+            # hands fn a still-valid future
+            parent._valid = True
+            try:
+                result = fn(parent)
+            finally:
+                parent._valid = False
+            if result is parent:
+                return parent._wait_value()
+            if isinstance(result, Future):
+                return result._wait_value()
+            return result
+
+        # no probe: the continuation only runs at wait, so completion is not
+        # observable earlier (same semantics as TraceFuture.then)
+        return DeferredFuture(resolver)
+
+
 def when_all(futures: Sequence[Future]) -> "Future | TraceFuture":
     """``MPI_Waitall`` join: a future over the tuple of results.
 
@@ -152,9 +229,18 @@ def when_all(futures: Sequence[Future]) -> "Future | TraceFuture":
             f"when_all: future {i} already consumed",
         )
         seen.add(id(f))
-    values = tuple(f._value for f in futures)
     for f in futures:
         f._valid = False
+    if any(isinstance(f, DeferredFuture) for f in futures):
+        # a join over in-flight host I/O stays lazy: waiting the join waits
+        # every input (in order) and surfaces the first failure (ERR_IO from
+        # a background write propagates, MPI_Waitall-style)
+        inputs = tuple(futures)
+        return DeferredFuture(
+            lambda: tuple(f._wait_value() for f in inputs),
+            probe=lambda: all(f.test() for f in inputs),
+        )
+    values = tuple(f._value for f in futures)
     return Future(values)
 
 

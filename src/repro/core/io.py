@@ -7,26 +7,55 @@ global offset) plus an atomically renamed JSON manifest — the idiom every
 production checkpointing system on TPU uses (and what
 :mod:`repro.checkpoint` builds on).
 
-``write_at_all`` / ``read_at_all`` mirror the collective ``MPI_File_*_at_all``
-calls: every process participates, offsets are disjoint by construction
-(derived from the array sharding), and completion of the manifest write is
-the ``MPI_File_sync`` point.
+The chapter-14 surface and its mapping:
+
+===============================  ==========================================
+MPI 4.0                          here
+===============================  ==========================================
+``MPI_File_open``                :func:`open` / :class:`File` (``EXCL``
+                                 raises ``ERR_FILE`` on an existing
+                                 dataset, with or without ``CREATE``)
+``MPI_File_write_at_all``        :meth:`File.write_at_all` (blocking)
+``MPI_File_iwrite_at_all``       :meth:`File.iwrite_at_all` → a host
+                                 :class:`IORequest` future in the C3 engine
+``MPI_File_iread_at_all``        :meth:`File.iread_at_all`
+``MPI_File_*_at_all_begin/end``  :meth:`File.write_at_all_begin` /
+                                 ``..._end`` split collectives (one active
+                                 split collective per handle, MPI's rule)
+``MPI_File_set_view``            :meth:`File.set_view` — etype (storage
+                                 representation) + filetype (a C2
+                                 :class:`~repro.core.datatypes.DataType`
+                                 packed layout, paged like an RMA window)
+``MPI_File_sync``                :meth:`File.commit_manifest` — one atomic
+                                 manifest write covering many records
+===============================  ==========================================
+
+Completion of the manifest write is the sync point; nonblocking operations
+complete at ``get()``/``wait()`` on their request, where any background
+failure is re-raised as ``ERR_IO`` — a failed write can never read as
+success (the error-forwarding gap thin wrappers are criticised for).
 """
 
 from __future__ import annotations
 
+import atexit
 import builtins
+import dataclasses
 import hashlib
 import json
 import os
+import sys
 import tempfile
-from typing import Any
+import threading
+import weakref
+from typing import Any, Callable
 
 import jax
 import numpy as np
 
-from repro.core import errors
+from repro.core import datatypes, errors
 from repro.core.descriptors import FileSpec, Mode
+from repro.core.futures import DeferredFuture
 
 MANIFEST = "manifest.json"
 
@@ -60,42 +89,263 @@ def _checksum(buf: np.ndarray) -> str:
     return hashlib.sha256(np.ascontiguousarray(buf).tobytes()).hexdigest()[:16]
 
 
+def storage_alias(dtype: Any) -> np.dtype | None:
+    """The on-disk alias for dtypes ``np.save`` cannot serialise (bfloat16,
+    fp8, ...): the same-itemsize unsigned integer, so the bytes round-trip
+    exactly.  ``None`` for natively serialisable dtypes."""
+
+    dtype = np.dtype(dtype)
+    if dtype.kind in "biufc":
+        return None
+    return np.dtype(f"uint{dtype.itemsize * 8}")
+
+
+# ---------------------------------------------------------------------------
+# request-based nonblocking IO (MPI_File_i*)
+# ---------------------------------------------------------------------------
+
+_OUTSTANDING: "weakref.WeakSet[IORequest]" = weakref.WeakSet()
+
+
+class IORequest(DeferredFuture):
+    """A nonblocking file operation's request (``MPI_File_i*``).
+
+    The operation body runs on a background thread; the request itself is a
+    host :class:`~repro.core.futures.DeferredFuture`, so it chains with
+    ``then()`` and joins with ``when_all`` exactly like every other request
+    in the C3 engine.  ``get()``/``wait()`` join the thread and re-raise any
+    failure — typed :class:`~repro.core.errors.Error`\\ s pass through
+    unchanged, anything else is wrapped as ``ERR_IO`` — so a background
+    failure always surfaces at the completion call, never as a silent
+    success.  Threads are daemonic, but every live request is joined by an
+    ``atexit`` hook: interpreter shutdown cannot kill an operation mid-write.
+    """
+
+    def __init__(self, op: str, fn: Callable[[], Any], *, start: bool = True):
+        self.op = op
+        self._exc: BaseException | None = None
+        self._result: Any = None
+        self._event = threading.Event()
+        self._start_lock = threading.Lock()
+        self._launched = False
+        self._delivered = False
+
+        def run():
+            try:
+                self._result = fn()
+            except errors.Error as e:
+                self._exc = e
+            except BaseException as e:  # noqa: BLE001 — forwarded, never dropped
+                exc = errors.exception(errors.ErrorClass.ERR_IO, f"{op}: {e!r}")
+                exc.__cause__ = e
+                self._exc = exc
+            finally:
+                self._event.set()
+
+        super().__init__(self._join, probe=self._event.is_set)
+        self._thread = threading.Thread(target=run, name=f"repro-io:{op}", daemon=True)
+        _OUTSTANDING.add(self)
+        if start:
+            self.start()
+
+    def start(self) -> "IORequest":
+        """Activate the request (idempotent).  ``start=False`` construction
+        is the persistent-style two-phase form: a batch issuer creates all
+        its requests cheaply and a single driver fans them out, paying one
+        thread launch on the issue path instead of N (the checkpoint
+        manager's bucket requests)."""
+
+        with self._start_lock:
+            if not self._launched:
+                self._launched = True
+                self._thread.start()
+        return self
+
+    @property
+    def delivered(self) -> bool:
+        """Has the captured failure (if any) been raised to a caller?  The
+        atexit reporter uses this instead of request validity: a request
+        consumed by ``then()`` whose chain is never waited must still have
+        its failure surfaced somewhere."""
+
+        return self._delivered
+
+    def _join(self) -> Any:
+        self.start()  # waiting an inactive request activates it first
+        self._thread.join()
+        if self._exc is not None:
+            self._delivered = True
+            raise self._exc
+        return self._result
+
+    def drain(self) -> BaseException | None:
+        """Join without raising; return the captured failure, if any (the
+        atexit path — exceptions cannot propagate out of interpreter
+        shutdown, but they must not vanish either)."""
+
+        self.start()
+        self._thread.join()
+        return self._exc
+
+
+@atexit.register
+def _join_outstanding_at_exit() -> None:
+    for req in list(_OUTSTANDING):
+        exc = req.drain()
+        if exc is not None and not req.delivered:
+            print(
+                f"repro.core.io: background {req.op} failed at interpreter "
+                f"exit: {exc}",
+                file=sys.stderr,
+            )
+
+
+# ---------------------------------------------------------------------------
+# file views (MPI_File_set_view)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FileView:
+    """An installed file view: how collective accesses interpret the data.
+
+    ``etype`` is the elementary storage representation — fragments are
+    stored as this (same-itemsize) dtype and reinterpreted back to the
+    manifest dtype on read.  ``filetype`` is a C2
+    :class:`~repro.core.datatypes.DataType`: writes pack the aggregate into
+    its per-dtype group buffers and store them page-by-page
+    (:meth:`~repro.core.datatypes.DataType.page_bounds` — the same paging an
+    RMA window uses), reads reassemble and unpack.
+    """
+
+    etype: np.dtype | None = None
+    filetype: "datatypes.DataType | None" = None
+    num_pages: int = 1
+
+
 class File:
     """A parallel dataset directory (``MPI_File`` analogue)."""
 
     def __init__(self, path: str, spec: FileSpec | None = None):
         self.path = path
         self.spec = spec or FileSpec()
+        # MPI_ERR_FILE_EXISTS semantics: EXCL rejects an existing dataset
+        # whether or not CREATE is also set (the old elif skipped the check
+        # whenever CREATE was present, so CREATE | EXCL could never raise)
+        if Mode.EXCL in self.spec.mode and os.path.exists(os.path.join(path, MANIFEST)):
+            errors.fail(errors.ErrorClass.ERR_FILE, f"{path} already exists (EXCL)")
         if Mode.CREATE in self.spec.mode:
             os.makedirs(path, exist_ok=True)
-        elif Mode.EXCL in self.spec.mode and os.path.exists(os.path.join(path, MANIFEST)):
-            errors.fail(errors.ErrorClass.ERR_FILE, f"{path} already exists (EXCL)")
+        self._view = FileView()
+        self._split: tuple[str, str, IORequest] | None = None
+        self._manifest_cache: dict | None = None
+        self._manifest_lock = threading.Lock()
+        #: fault-injection / test hook, called with each fragment name just
+        #: before its write (see ``runtime.faults.FaultInjector.check_io``)
+        self.write_hook: Callable[[str], None] | None = None
+
+    # -- views ---------------------------------------------------------------
+
+    def set_view(
+        self,
+        etype: Any | None = None,
+        filetype: Any | None = None,
+        *,
+        num_pages: int | None = None,
+    ) -> "File":
+        """``MPI_File_set_view``: install (or, with no arguments, reset) the
+        view through which subsequent collective accesses run.
+
+        ``filetype`` may be a :class:`~repro.core.datatypes.DataType` or any
+        compliant example aggregate (its datatype is derived, the C2
+        reflection step).  The written layout records the view's group
+        signature; a reader must install a matching view (``ERR_IO``
+        otherwise) — MPI's etype/filetype equivalence rule for collective
+        accesses.  ``num_pages`` splits each group buffer into near-equal
+        page fragments, the granularity at which RMA window pages round-trip
+        through files.
+        """
+
+        from repro.core import tool
+
+        if filetype is not None and not isinstance(filetype, datatypes.DataType):
+            filetype = datatypes.datatype_of(filetype)
+        et = None if etype is None else np.dtype(etype)
+        if et is not None:
+            errors.check(
+                et.kind in "biufc",
+                errors.ErrorClass.ERR_TYPE,
+                f"etype {et} is not a serialisable storage dtype",
+            )
+        n = 1 if num_pages is None else int(num_pages)
+        errors.check(
+            n >= 1, errors.ErrorClass.ERR_ARG, f"set_view needs >= 1 page, got {n}"
+        )
+        if et is not None and filetype is not None:
+            for d in filetype.group_dtypes:
+                errors.check(
+                    np.dtype(d).itemsize == et.itemsize,
+                    errors.ErrorClass.ERR_TYPE,
+                    f"etype {et} (itemsize {et.itemsize}) cannot represent "
+                    f"group dtype {np.dtype(d)}",
+                )
+        self._view = FileView(et, filetype, n)
+        tool.pvar_count("io_set_view")
+        return self
+
+    @property
+    def view(self) -> FileView:
+        return self._view
 
     # -- collective writes ---------------------------------------------------
 
-    def write_at_all(self, name: str, array: jax.Array | np.ndarray) -> dict:
-        """Collective write: each process writes the addressable shards it
-        owns at their global offsets; one manifest describes the whole."""
-
+    def _check_writable(self) -> None:
         errors.check(
             Mode.WRONLY in self.spec.mode or Mode.RDWR in self.spec.mode,
             errors.ErrorClass.ERR_FILE,
             f"{self.path} not opened for writing",
         )
-        entries = []
+
+    def _storage_dtype(self, dtype: Any) -> np.dtype | None:
+        """The dtype a fragment is stored as, or ``None`` for as-is."""
+
+        dtype = np.dtype(dtype)
+        et = self._view.etype
+        if et is not None and et != dtype:
+            errors.check(
+                et.itemsize == dtype.itemsize,
+                errors.ErrorClass.ERR_TYPE,
+                f"etype {et} (itemsize {et.itemsize}) cannot store dtype {dtype}",
+            )
+            return et
+        return storage_alias(dtype)
+
+    def _gather(self, name: str, array: Any) -> tuple[dict, list[tuple[str, np.ndarray]]]:
+        """Synchronous device→host gather: the fragment buffers plus the
+        manifest record describing them.  Shared by the blocking,
+        nonblocking and split collective forms — the buffers are stable
+        before control returns, so a pending request never races the
+        caller's arrays.  The checkpoint manager keeps its own variant of
+        this gather (sanitised names, checksums deferred to the bucket
+        threads): fragment/record shape changes here must be mirrored
+        there."""
+
+        if self._view.filetype is not None:
+            return self._gather_view(name, array)
+        entries: list[dict] = []
+        frags: list[tuple[str, np.ndarray]] = []
         if isinstance(array, jax.Array) and hasattr(array, "addressable_shards"):
-            shards = array.addressable_shards
             global_shape = tuple(array.shape)
             dtype = str(np.dtype(array.dtype))
             seen = set()
-            for shard in shards:
+            for shard in array.addressable_shards:
                 start = tuple(s.start or 0 for s in shard.index)
                 if start in seen:  # replicated shard: first owner writes
                     continue
                 seen.add(start)
                 buf = np.asarray(shard.data)
                 frag = f"{name}.{'_'.join(map(str, start))}.npy"
-                self._write_fragment(frag, buf)
+                frags.append((frag, buf))
                 entries.append(
                     {
                         "fragment": frag,
@@ -109,7 +359,7 @@ class File:
             global_shape = tuple(buf.shape)
             dtype = str(buf.dtype)
             frag = f"{name}.0.npy"
-            self._write_fragment(frag, buf)
+            frags.append((frag, buf))
             entries.append(
                 {
                     "fragment": frag,
@@ -118,66 +368,342 @@ class File:
                     "checksum": _checksum(buf) if self.spec.checksum else None,
                 }
             )
-        record = {"name": name, "shape": list(global_shape), "dtype": dtype, "fragments": entries}
+        record = {
+            "name": name,
+            "shape": list(global_shape),
+            "dtype": dtype,
+            "fragments": entries,
+        }
+        if self._view.etype is not None:
+            record["etype"] = str(self._view.etype)
+        return record, frags
+
+    def _gather_view(self, name: str, aggregate: Any) -> tuple[dict, list]:
+        """Filetype-view gather: pack the aggregate into the datatype's
+        per-dtype group buffers and page them (one fragment per page)."""
+
+        dt = self._view.filetype
+        bufs = dt.pack(aggregate)
+        bounds = dt.page_bounds(self._view.num_pages)
+        entries, frags = [], []
+        for g, (buf, pages) in enumerate(zip(bufs, bounds)):
+            host = np.asarray(buf)
+            for p, (off, length) in enumerate(pages):
+                page = host[off : off + length]
+                frag = f"{name}.g{g}.p{p}.npy"
+                frags.append((frag, page))
+                entries.append(
+                    {
+                        "fragment": frag,
+                        "group": g,
+                        "offset": [int(off)],
+                        "shape": [int(length)],
+                        "checksum": _checksum(page) if self.spec.checksum else None,
+                    }
+                )
+        record = {
+            "name": name,
+            "view": {**dt.layout_signature(), "num_pages": self._view.num_pages},
+            "fragments": entries,
+        }
+        if self._view.etype is not None:
+            record["etype"] = str(self._view.etype)
+        return record, frags
+
+    def write_at_all(self, name: str, array: Any) -> dict:
+        """Collective write: each process writes the addressable shards it
+        owns at their global offsets (or, under a filetype view, the packed
+        group-buffer pages); one manifest record describes the whole.  The
+        manifest write is the sync point."""
+
+        from repro.core import tool
+
+        self._check_writable()
+        tool.pvar_count("io_write")
+        record, frags = self._gather(name, array)
+        for frag, buf in frags:
+            self._write_fragment(frag, buf)
         self._update_manifest(name, record)
         return record
 
-    def _write_fragment(self, frag: str, buf: np.ndarray) -> None:
+    def iwrite_at_all(self, name: str, array: Any, *, commit: bool = True) -> IORequest:
+        """``MPI_File_iwrite_at_all``: nonblocking collective write.
+
+        The device→host gather happens synchronously (the buffers are
+        stable before control returns); fragment and manifest writes run on
+        a background thread.  The returned request chains with ``then()``
+        and joins with ``when_all``; completing it is the manifest sync
+        point, and a failed write raises ``ERR_IO`` from ``get()``/``wait()``
+        — never a silent success.
+
+        ``commit=False`` defers the manifest update: the request completes
+        once the fragments are durable and resolves to the record, which the
+        caller later passes to :meth:`commit_manifest` — one sync point over
+        many writes, the checkpoint manager's single-commit save.
+        """
+
+        from repro.core import tool
+
+        self._check_writable()
+        tool.pvar_count("io_iwrite")
+        record, frags = self._gather(name, array)
+
+        def work():
+            for frag, buf in frags:
+                self._write_fragment(frag, buf)
+            if commit:
+                self._update_manifest(name, record)
+            return record
+
+        return IORequest(f"iwrite_at_all({name!r})", work)
+
+    def awrite_fragments(
+        self, op: str, frags: list[tuple[str, np.ndarray]], *, start: bool = True
+    ) -> IORequest:
+        """One request over pre-gathered ``(fragment, buffer)`` pairs — the
+        checkpoint manager's per-dtype-bucket write.  No manifest update:
+        pair with :meth:`commit_manifest` for the single sync point.
+
+        Resolves to ``{fragment: checksum}`` — digests are computed on the
+        background thread (off the issue path) and flow through the request
+        join into the commit continuation (Listing-2 dataflow)."""
+
+        self._check_writable()
+
+        def work():
+            sums = {}
+            for frag, buf in frags:
+                self._write_fragment(frag, buf)
+                sums[frag] = _checksum(buf) if self.spec.checksum else None
+            return sums
+
+        return IORequest(op, work, start=start)
+
+    def _write_fragment(self, frag: str, buf: np.ndarray) -> int:
         import io as _io
 
-        # np.save cannot serialise extended ml_dtypes (bfloat16, fp8):
-        # store them as unsigned views; the manifest dtype restores them.
-        if buf.dtype.kind not in "biufc":
-            buf = buf.view(np.dtype(f"uint{buf.dtype.itemsize * 8}"))
+        from repro.core import tool
+
+        if self.write_hook is not None:
+            self.write_hook(frag)
+        store = self._storage_dtype(buf.dtype)
+        if store is not None:
+            buf = np.ascontiguousarray(buf).view(store)
         bio = _io.BytesIO()
         np.save(bio, buf, allow_pickle=False)
-        _atomic_write(os.path.join(self.path, frag), bio.getvalue())
+        data = bio.getvalue()
+        _atomic_write(os.path.join(self.path, frag), data)
+        if self.spec.verify:
+            # data integrity, not interface validation: raises even with the
+            # error_checking cvar off (a torn write must never read as ok)
+            back = np.load(os.path.join(self.path, frag), allow_pickle=False)
+            if _checksum(back) != _checksum(buf):
+                errors.fail(
+                    errors.ErrorClass.ERR_IO, f"read-back verify failed for {frag}"
+                )
+        tool.pvar_add("io_bytes_written", len(data))
+        return len(data)
+
+    # -- the manifest sync point ----------------------------------------------
+
+    def commit_manifest(self, records: dict[str, dict]) -> None:
+        """Merge ``records`` and write the manifest **once**, atomically —
+        the explicit ``MPI_File_sync``.  N arrays cost a single
+        read-modify-write, not N rewrites of an ever-growing JSON (the old
+        per-array update was O(n²) over a whole checkpoint)."""
+
+        from repro.core import tool
+
+        with self._manifest_lock:
+            manifest = self.manifest()
+            for name, record in records.items():
+                manifest["arrays"][name] = record
+            _atomic_write(
+                os.path.join(self.path, MANIFEST),
+                json.dumps(manifest, indent=1).encode(),
+            )
+            self._manifest_cache = manifest
+        tool.pvar_count("io_manifest_commit")
 
     def _update_manifest(self, name: str, record: dict) -> None:
-        manifest = self.manifest()
-        manifest["arrays"][name] = record
-        _atomic_write(
-            os.path.join(self.path, MANIFEST),
-            json.dumps(manifest, indent=1).encode(),
+        self.commit_manifest({name: record})
+
+    # -- split collectives (MPI_File_*_at_all_begin / _end) --------------------
+
+    def write_at_all_begin(self, name: str, array: Any) -> None:
+        """``MPI_File_write_at_all_begin``: start the split collective.  At
+        most one split collective may be active per file handle (MPI's
+        rule) — ``ERR_REQUEST`` otherwise."""
+
+        from repro.core import tool
+
+        self._check_split_free()
+        tool.pvar_count("io_split_begin")
+        self._split = ("write", name, self.iwrite_at_all(name, array))
+
+    def write_at_all_end(self, name: str) -> dict:
+        """Complete the split collective write; returns the manifest record.
+        Failures surface here as ``ERR_IO``."""
+
+        return self._split_end("write", name)
+
+    def read_at_all_begin(self, name: str, sharding: Any | None = None) -> None:
+        """``MPI_File_read_at_all_begin``: start the split collective read."""
+
+        from repro.core import tool
+
+        self._check_split_free()
+        tool.pvar_count("io_split_begin")
+        self._split = ("read", name, self.iread_at_all(name, sharding))
+
+    def read_at_all_end(self, name: str) -> Any:
+        return self._split_end("read", name)
+
+    def _check_split_free(self) -> None:
+        active = self._split
+        errors.check(
+            active is None,
+            errors.ErrorClass.ERR_REQUEST,
+            f"split collective already active on {self.path}"
+            + (f" ({active[0]}_at_all({active[1]!r}))" if active else ""),
         )
+
+    def _split_end(self, kind: str, name: str) -> Any:
+        errors.check(
+            self._split is not None,
+            errors.ErrorClass.ERR_REQUEST,
+            f"{kind}_at_all_end({name!r}) without a matching begin",
+        )
+        k, n, req = self._split
+        errors.check(
+            (k, n) == (kind, name),
+            errors.ErrorClass.ERR_REQUEST,
+            f"{kind}_at_all_end({name!r}) does not match the active split "
+            f"collective {k}_at_all({n!r})",
+        )
+        self._split = None
+        return req.get()
 
     # -- collective reads ------------------------------------------------------
 
-    def manifest(self) -> dict:
+    def manifest(self, *, refresh: bool = False) -> dict:
         p = os.path.join(self.path, MANIFEST)
-        if os.path.exists(p):
+        if self._manifest_cache is None or refresh:
+            if not os.path.exists(p):
+                return {"version": 1, "arrays": {}}  # absence is not cached
             with builtins.open(p) as f:
-                return json.load(f)
-        return {"version": 1, "arrays": {}}
+                self._manifest_cache = json.load(f)
+        return self._manifest_cache
 
-    def read_at_all(self, name: str, sharding: Any | None = None) -> jax.Array:
+    def read_at_all(self, name: str, sharding: Any | None = None) -> Any:
         """Collective read: reassemble (and optionally reshard) an array.
 
         With a target ``sharding`` whose mesh differs from the writer's, this
         is the *elastic restore* path: fragments are assembled to the global
-        array and placed under the new sharding.
+        array and placed under the new sharding.  Under a filetype view the
+        result is the unpacked aggregate.
         """
 
+        from repro.core import tool
+
+        tool.pvar_count("io_read")
+        return self._read(name, sharding)
+
+    def iread_at_all(self, name: str, sharding: Any | None = None) -> IORequest:
+        """``MPI_File_iread_at_all``: nonblocking collective read; the
+        request resolves to the assembled (optionally resharded) array, or
+        the unpacked aggregate under a filetype view."""
+
+        from repro.core import tool
+
+        tool.pvar_count("io_iread")
+        return IORequest(f"iread_at_all({name!r})", lambda: self._read(name, sharding))
+
+    def _read(self, name: str, sharding: Any | None = None) -> Any:
         rec = self.manifest()["arrays"].get(name)
         if rec is None:
             errors.fail(errors.ErrorClass.ERR_IO, f"array {name!r} not in {self.path}")
+        if "view" in rec:
+            return self._read_view(name, rec)
         dtype = _resolve_dtype(rec["dtype"])
         out = np.zeros(rec["shape"], dtype=dtype)
         for e in rec["fragments"]:
-            buf = np.load(os.path.join(self.path, e["fragment"]), allow_pickle=False)
-            if self.spec.checksum and e.get("checksum"):
-                errors.check(
-                    _checksum(buf) == e["checksum"],
-                    errors.ErrorClass.ERR_IO,
-                    f"checksum mismatch in {e['fragment']}",
-                )
-            if buf.dtype != dtype:  # stored as an unsigned view (bf16/fp8)
-                buf = buf.view(dtype)
+            buf = self._load_fragment(e, dtype, rec)
             idx = tuple(slice(o, o + s) for o, s in zip(e["offset"], e["shape"]))
             out[idx] = buf
         if sharding is not None:
             return jax.device_put(out, sharding)
         return jax.numpy.asarray(out)
+
+    def _read_view(self, name: str, rec: dict) -> Any:
+        # unconditional (data integrity): a wrong view would unpack wrong
+        # bytes into right-looking arrays
+        dt = self._view.filetype
+        if dt is None:
+            errors.fail(
+                errors.ErrorClass.ERR_IO,
+                f"{name!r} was written through a file view; "
+                "set_view(filetype=...) before reading it",
+            )
+        if rec["view"]["groups"] != dt.layout_signature()["groups"]:
+            errors.fail(
+                errors.ErrorClass.ERR_IO,
+                f"file view mismatch for {name!r}: dataset layout "
+                f"{rec['view']['groups']}, installed view "
+                f"{dt.layout_signature()['groups']}",
+            )
+        bufs = []
+        for g, grp in enumerate(rec["view"]["groups"]):
+            gd = _resolve_dtype(grp["dtype"])
+            out = np.zeros(grp["size"], dtype=gd)
+            for e in rec["fragments"]:
+                if e.get("group") != g:
+                    continue
+                buf = self._load_fragment(e, gd, rec)
+                off = e["offset"][0]
+                out[off : off + e["shape"][0]] = buf
+            bufs.append(jax.numpy.asarray(out))
+        return dt.unpack(bufs)
+
+    def _load_fragment(self, e: dict, dtype: np.dtype, rec: dict) -> np.ndarray:
+        from repro.core import tool
+
+        buf = np.load(os.path.join(self.path, e["fragment"]), allow_pickle=False)
+        tool.pvar_add("io_bytes_read", buf.nbytes)
+        # integrity checks below are unconditional: they guard the data, not
+        # the interface, so the error_checking cvar must not disable them
+        if self.spec.checksum and e.get("checksum"):
+            if _checksum(buf) != e["checksum"]:
+                errors.fail(
+                    errors.ErrorClass.ERR_IO,
+                    f"checksum mismatch in {e['fragment']}",
+                )
+        if buf.dtype != dtype:
+            # reinterpret ONLY a declared storage representation — the
+            # record's etype, the installed view etype, or the unsigned
+            # serialisation alias (all same-itemsize, so the bytes
+            # round-trip exactly).  Anything else is a corrupt or foreign
+            # fragment: a typed ERR_IO, never a blind view() (a float64
+            # fragment against a float32 manifest used to corrupt silently
+            # or crash with a bare numpy error).
+            declared: set[np.dtype] = set()
+            if rec.get("etype") is not None:
+                declared.add(np.dtype(rec["etype"]))
+            if self._view.etype is not None:
+                declared.add(self._view.etype)
+            alias = storage_alias(dtype)
+            if alias is not None:
+                declared.add(alias)
+            if not (buf.dtype in declared and buf.dtype.itemsize == dtype.itemsize):
+                errors.fail(
+                    errors.ErrorClass.ERR_IO,
+                    f"fragment {e['fragment']} has dtype {buf.dtype}; the "
+                    f"manifest says {dtype} (declared storage: "
+                    f"{sorted(str(d) for d in declared)}) — refusing to "
+                    "reinterpret",
+                )
+            buf = buf.view(dtype)
+        return buf
 
     def names(self) -> list[str]:
         return sorted(self.manifest()["arrays"].keys())

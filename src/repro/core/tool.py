@@ -21,6 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
+import threading
 from collections import defaultdict
 from typing import Any, Callable
 
@@ -327,6 +328,10 @@ cvar_register(
 
 pvar_counters: dict[str, int] = defaultdict(int)
 
+# counters are bumped from I/O request threads too (io_bytes_*, commits) —
+# `+=` on a dict entry is not atomic, so updates take this lock
+_PVAR_LOCK = threading.Lock()
+
 #: Documented performance variables (``MPI_T_pvar_get_info`` analogue).
 #: Collective call-site counters are registered implicitly by the method
 #: facade; the request-layer counters are registered here so tooling can
@@ -343,16 +348,26 @@ def pvar_register(name: str, doc: str) -> None:
 
 
 def pvar_count(op: str) -> None:
-    pvar_counters[op] += 1
+    with _PVAR_LOCK:
+        pvar_counters[op] += 1
+
+
+def pvar_add(op: str, amount: int) -> None:
+    """Add to an accumulating pvar (byte counters and the like)."""
+
+    with _PVAR_LOCK:
+        pvar_counters[op] += int(amount)
 
 
 def pvar_reset() -> None:
-    pvar_counters.clear()
+    with _PVAR_LOCK:
+        pvar_counters.clear()
 
 
 def pvar_read() -> dict[str, int]:
     counts = {name: 0 for name in PVARS}
-    counts.update(pvar_counters)
+    with _PVAR_LOCK:
+        counts.update(pvar_counters)
     return counts
 
 
@@ -372,3 +387,18 @@ pvar_register("rma_rput", "request-based window puts (MPI_Rput)")
 pvar_register("rma_get", "blocking window gets (MPI_Get)")
 pvar_register("rma_rget", "request-based window gets (MPI_Rget)")
 pvar_register("rma_accumulate", "window accumulates (MPI_Accumulate/Raccumulate)")
+
+# file-I/O pvars (chapter 14) and the checkpoint subsystem built on it
+pvar_register("io_write", "blocking collective file writes (MPI_File_write_at_all)")
+pvar_register("io_read", "blocking collective file reads (MPI_File_read_at_all)")
+pvar_register("io_iwrite", "nonblocking collective writes issued (MPI_File_iwrite_at_all)")
+pvar_register("io_iread", "nonblocking collective reads issued (MPI_File_iread_at_all)")
+pvar_register("io_split_begin", "split collectives begun (MPI_File_*_at_all_begin)")
+pvar_register("io_set_view", "file views installed (MPI_File_set_view)")
+pvar_register("io_manifest_commit", "manifest sync points written (MPI_File_sync)")
+pvar_register("io_bytes_written", "fragment bytes written (accumulating)")
+pvar_register("io_bytes_read", "fragment bytes read (accumulating)")
+pvar_register("ckpt_save", "checkpoint saves issued (async or sync)")
+pvar_register("ckpt_save_failed", "checkpoint saves that surfaced an I/O error")
+pvar_register("ckpt_restore", "checkpoint restores")
+pvar_register("ckpt_wait", "checkpoint completions joined (wait)")

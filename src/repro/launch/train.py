@@ -32,6 +32,13 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument(
+        "--async-checkpoint",
+        action=argparse.BooleanOptionalAction,
+        default=True,
+        help="checkpoint writes ride the I/O request engine and overlap the "
+        "next persistent step (--no-async-checkpoint joins each save)",
+    )
     ap.add_argument("--inject-failure-at", type=int, default=None)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--out", default=None, help="write metrics history JSON here")
@@ -57,6 +64,7 @@ def main(argv=None):
         lr=args.lr,
         checkpoint_dir=args.checkpoint_dir,
         checkpoint_every=args.checkpoint_every or max(1, args.steps // 2),
+        async_checkpoint=args.async_checkpoint,
         log_every=args.log_every,
     )
     injector = (

@@ -32,16 +32,39 @@ class WorkerFailure(RuntimeError):
 
 @dataclasses.dataclass
 class FaultInjector:
-    """Deterministic failure schedule: raise at the given step numbers."""
+    """Deterministic failure schedule.
+
+    * ``fail_at_steps`` — raise ``kind`` at those step numbers (device /
+      worker failures; each fires once).
+    * ``fail_fragments`` — raise ``OSError`` when a checkpoint fragment
+      whose name contains one of these substrings is about to be written
+      (each pattern fires once).  This is the torn-save injection: the
+      background save must surface the error as ``ERR_IO`` from
+      ``CheckpointManager.wait()`` and ``latest`` must not advance — a
+      silently "successful" failed save is the defect this exists to catch.
+    """
 
     fail_at_steps: tuple[int, ...] = ()
     kind: type[Exception] = WorkerFailure
+    fail_fragments: tuple[str, ...] = ()
     _fired: set = dataclasses.field(default_factory=set)
 
     def check(self, step: int) -> None:
         if step in self.fail_at_steps and step not in self._fired:
             self._fired.add(step)
             raise self.kind(f"injected worker failure at step {step}")
+
+    def check_io(self, fragment: str) -> None:
+        """Fragment-write hook (wired as ``File.write_hook``)."""
+
+        for pattern in self.fail_fragments:
+            key = ("io", pattern)
+            if pattern in fragment and key not in self._fired:
+                self._fired.add(key)
+                raise OSError(
+                    f"injected fragment-write fault on {fragment!r} "
+                    f"(pattern {pattern!r})"
+                )
 
 
 @dataclasses.dataclass
@@ -84,7 +107,12 @@ class StepGuard:
     injector: FaultInjector | None = None
 
     def run(
-        self, step: int, fn: Callable[[], object], *, retry_safe: bool = True
+        self,
+        step: int,
+        fn: Callable[[], object],
+        *,
+        retry_safe: bool = True,
+        exempt: bool = False,
     ) -> tuple[object, dict]:
         """Run one step under the policy.
 
@@ -94,6 +122,11 @@ class StepGuard:
         free.  A straggler then goes straight to the failure path
         (treat-as-failed → restore from checkpoint), the production practice
         for donated step buffers.
+
+        ``exempt=True`` declares known interference — a background
+        checkpoint save is stealing cycles from this step — so a slow step
+        is *not* marked a straggler (it is not evidence of a sick worker)
+        and its polluted duration is kept out of the running median.
         """
 
         attempts = 0
@@ -104,6 +137,8 @@ class StepGuard:
                 self.injector.check(step)
             out = fn()
             dt = time.perf_counter() - t0
+            if exempt:
+                return out, {"duration_s": dt, "attempts": attempts, "straggled": False}
             straggled = self.straggler.is_straggler(dt)
             if straggled and retry_safe and self.straggler.should_retry(attempts):
                 continue  # re-dispatch the same deterministic step

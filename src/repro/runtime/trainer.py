@@ -26,6 +26,16 @@ buffers cannot be re-dispatched, the straggler policy runs with
 ``retry_safe=False``: a straggler goes straight to the failure path
 (checkpoint restore), the production behaviour for donated step buffers.
 ``TrainerConfig(persistent=False)`` restores the plain-``jit`` path.
+
+**Async checkpointing on the same engine** (default): ``ckpt.save`` gathers
+device state synchronously (donation-safe) and runs the file writes as I/O
+requests overlapping the next persistent step; the single manifest commit
+is the durability point.  A failed save surfaces as ``ERR_IO`` at the next
+join — the trainer counts it (``ckpt_failures`` in the result, the
+``ckpt_save_failed`` pvar), logs it and keeps training from device state
+(``latest`` stays at the previous complete step); it is never reported as
+success.  The straggler/failure recovery path restores elastically through
+the checkpoint's ``set_view`` storage representation.
 """
 
 from __future__ import annotations
@@ -44,7 +54,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import ModelConfig, ParallelConfig
-from repro.core import tool
+from repro.core import errors, tool
 from repro.core.communicator import Communicator
 from repro.core.futures import PersistentRequest
 from repro.data import TokenPipeline
@@ -73,6 +83,9 @@ class TrainerConfig:
     # every iteration (zero re-traces); donate aliases params/opt-state.
     persistent: bool = True
     donate: bool = True
+    # checkpoint writes ride the I/O request engine and overlap the next
+    # step; False joins each save before the next step starts
+    async_checkpoint: bool = True
 
 
 def make_train_step(cfg: ModelConfig, pcfg: ParallelConfig, tcfg: TrainerConfig, opt: AdamW):
@@ -123,10 +136,16 @@ class Trainer:
         )
         self.guard = StepGuard(straggler or StragglerPolicy(), injector)
         self.ckpt = (
-            CheckpointManager(tcfg.checkpoint_dir, keep=tcfg.keep_checkpoints)
+            CheckpointManager(
+                tcfg.checkpoint_dir,
+                keep=tcfg.keep_checkpoints,
+                async_save=tcfg.async_checkpoint,
+                injector=injector,
+            )
             if tcfg.checkpoint_dir
             else None
         )
+        self.ckpt_failures = 0
         self.pipeline = TokenPipeline(
             vocab_size=cfg.vocab_size,
             seq_len=seq_len,
@@ -258,13 +277,41 @@ class Trainer:
                 params, opt_state, step = self._recover()
                 step_fn = self._compiled
         if self.ckpt is not None:
-            self.ckpt.save(step, {"params": params, "opt": opt_state}, extra={"step": step})
-            self.ckpt.wait()
+            self._checkpoint(step, params, opt_state, join=True)
         return {
             "final_step": step,
             "restarts": self.restarts,
+            "ckpt_failures": self.ckpt_failures,
             "metrics": self.metrics_history,
         }
+
+    def _checkpoint(self, step, params, opt_state, *, join: bool = False) -> None:
+        """Issue the (async) checkpoint save; ``join=True`` additionally
+        waits for durability.  A failed save — surfaced as ``ERR_IO`` from
+        the request join, typically when the *previous* save's completion is
+        collected — is counted and logged, never silently dropped: training
+        continues from device state and ``latest`` stays at the last
+        complete step (the production policy for checkpoint I/O errors)."""
+
+        try:
+            # collect the previous save's outcome first, so its failure is
+            # reported without skipping this step's save
+            self.ckpt.wait()
+        except errors.IoError as e:
+            self._note_ckpt_failure(step, e)
+        try:
+            self.ckpt.save(
+                step, {"params": params, "opt": opt_state}, extra={"step": step}
+            )
+            if join:
+                self.ckpt.wait()
+        except errors.IoError as e:
+            self._note_ckpt_failure(step, e)
+
+    def _note_ckpt_failure(self, step: int, e: Exception) -> None:
+        self.ckpt_failures += 1
+        tool.pvar_count("ckpt_save_failed")
+        log.warning("checkpoint save failed at step %d: %s", step, e)
 
     def _run_span(self, step_fn, params, opt_state, step, steps):
         # donated buffers cannot be re-dispatched: stragglers under the
@@ -282,7 +329,12 @@ class Trainer:
                 return new_p, new_o, metrics
 
             (params, opt_state, metrics), info = self.guard.run(
-                step, do_step, retry_safe=retry_safe
+                step,
+                do_step,
+                retry_safe=retry_safe,
+                # a step sharing the host with an in-flight checkpoint save
+                # is slow from known interference, not worker sickness
+                exempt=self.ckpt is not None and self.ckpt.pending(),
             )
             step += 1
             if step % self.tcfg.log_every == 0 or step == steps:
@@ -306,9 +358,9 @@ class Trainer:
                 and self.tcfg.checkpoint_every
                 and step % self.tcfg.checkpoint_every == 0
             ):
-                self.ckpt.save(
-                    step, {"params": params, "opt": opt_state}, extra={"step": step}
-                )
+                # the save's file I/O overlaps the following steps; the next
+                # save (or run-end/exit) joins it and surfaces any failure
+                self._checkpoint(step, params, opt_state)
         return params, opt_state, step
 
     # -- recovery ---------------------------------------------------------------
@@ -317,6 +369,15 @@ class Trainer:
         """Restart protocol: re-form mesh (elastic), restore newest complete
         checkpoint, resume from its step (data is stateless)."""
 
+        if self.ckpt is not None:
+            # join the in-flight save first (tolerantly): without this,
+            # latest_step() cannot see a save that is mid-commit and
+            # recovery would reinitialise, discarding the steps that save
+            # was about to preserve
+            try:
+                self.ckpt.wait()
+            except errors.IoError as e:
+                self._note_ckpt_failure(-1, e)
         if self.ckpt is None or self.ckpt.latest_step() is None:
             params, opt_state = self.init_state()
             return params, opt_state, 0
@@ -324,6 +385,13 @@ class Trainer:
         return self._restore(params, opt_state)
 
     def _restore(self, params, opt_state):
+        # collect any in-flight save first, tolerantly: recovery must
+        # proceed from the newest COMPLETE checkpoint even if the save that
+        # was pending when the worker failed has itself failed
+        try:
+            self.ckpt.wait()
+        except errors.IoError as e:
+            self._note_ckpt_failure(-1, e)
         pshard, oshard, _ = self._shardings_for(
             params, opt_state, self.pipeline.device_batch(0, self.mesh, self.pcfg)
         )

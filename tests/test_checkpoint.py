@@ -65,6 +65,189 @@ def test_async_save_overlaps_and_waits(tmp_path):
     assert mgr.latest_step() == 5
 
 
+def test_async_save_overlaps_foreground_work(tmp_path):
+    """save() returns with the I/O still in flight (the gather is the only
+    synchronous part); wait() is the durability point."""
+
+    import threading
+
+    gate = threading.Event()
+
+    class SlowDisk:
+        def check_io(self, frag):
+            assert gate.wait(10)
+
+    mgr = CheckpointManager(str(tmp_path), async_save=True, injector=SlowDisk())
+    req = mgr.save(1, _state())
+    assert not req.test()                  # still writing: save didn't block
+    assert mgr.pending()
+    gate.set()
+    mgr.wait()
+    assert not mgr.pending()
+    assert mgr.latest_step() == 1
+
+
+def test_failed_async_save_raises_from_wait(tmp_path):
+    """A fragment-write fault in the background save surfaces as ERR_IO
+    from wait() — it used to be reported as success — and `latest` never
+    advances past the failed step."""
+
+    from repro.core import errors
+    from repro.runtime.faults import FaultInjector
+
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_save=True)
+    mgr.save(1, _state(1))
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+    mgr.injector = FaultInjector(fail_fragments=("params.w",))
+    mgr.save(2, _state(2))
+    with pytest.raises(errors.IoError):
+        mgr.wait()
+    assert mgr.latest_step() == 1          # the torn save is not "latest"
+    assert (tmp_path / "latest").read_text() == "1"
+
+    # the injector fires once: the retried save lands
+    mgr.save(2, _state(2))
+    mgr.wait()
+    assert mgr.latest_step() == 2
+
+
+def test_failed_save_raises_from_returned_request(tmp_path):
+    from repro.core import errors
+    from repro.runtime.faults import FaultInjector
+
+    mgr = CheckpointManager(
+        str(tmp_path), async_save=True,
+        injector=FaultInjector(fail_fragments=("opt.mu",)),
+    )
+    req = mgr.save(3, _state())
+    with pytest.raises(errors.IoError):
+        req.get()
+    assert mgr.wait() is None              # outcome was already delivered
+    assert mgr.latest_step() is None
+
+
+def test_restore_sees_inflight_save(tmp_path):
+    """restore() joins the pending async save BEFORE resolving the step —
+    an unjoined save used to be invisible to latest_step()."""
+
+    import jax.numpy as jnp
+
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    state = _state()
+    mgr.save(1, state)                     # no explicit wait
+    restored, step = mgr.restore(jax.tree.map(jnp.zeros_like, state))
+    assert step == 1
+
+
+def test_sync_save_returns_usable_request(tmp_path):
+    """With async_save=False the returned request is already complete but
+    still valid: get() resolves immediately instead of ERR_REQUEST."""
+
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    req = mgr.save(1, _state())
+    assert req.test()
+    assert req.get().endswith("step_00000001")
+
+
+def test_wait_reraises_error_from_chained_unwaited_request(tmp_path):
+    """A failed save whose returned request was then()-chained but never
+    waited is NOT silently dropped: wait() still surfaces the error."""
+
+    from repro.core import errors
+    from repro.runtime.faults import FaultInjector
+
+    mgr = CheckpointManager(
+        str(tmp_path), async_save=True,
+        injector=FaultInjector(fail_fragments=("params.w",)),
+    )
+    req = mgr.save(1, _state())
+    req.then(lambda r: "chain never waited")   # consumes without delivering
+    with pytest.raises(errors.IoError):
+        mgr.wait()
+    assert mgr.latest_step() is None
+
+
+def test_leaf_name_collision_fails_fast(tmp_path):
+    """'/'→'.' sanitisation can collide leaf fragment names; that must be a
+    typed save-time failure, not last-writer-wins corruption at restore."""
+
+    import jax.numpy as jnp
+
+    from repro.core import errors
+
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    with pytest.raises(errors.IoError, match="collides"):
+        mgr.save(1, {"a.b": jnp.ones(4), "a": {"b": jnp.zeros(4)}})
+
+
+def test_single_manifest_commit_per_save(tmp_path):
+    """One manifest sync point per step, however many arrays the tree has
+    (the per-array rewrite was O(n²) over a checkpoint)."""
+
+    from repro.core import tool
+
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    before = tool.pvar_read().get("io_manifest_commit", 0)
+    mgr.save(1, _state())                  # 4 leaves
+    assert tool.pvar_read().get("io_manifest_commit", 0) == before + 1
+
+
+def test_mid_save_crash_leaves_no_manifest(tmp_path):
+    """Atomicity under a mid-save crash: a save that dies writing fragments
+    commits nothing — no manifest, no _COMPLETE — so restore skips it."""
+
+    import jax.numpy as jnp
+
+    from repro.core import errors
+    from repro.runtime.faults import FaultInjector
+
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, _state(1))
+
+    mgr.injector = FaultInjector(fail_fragments=("opt.step",))
+    with pytest.raises(errors.IoError):
+        mgr.save(2, _state(2))             # sync save joins inline
+    step2 = tmp_path / "step_00000002"
+    assert not (step2 / "manifest.json").exists()
+    assert not (step2 / "_COMPLETE").exists()
+    _, step = mgr.restore(jax.tree.map(jnp.zeros_like, _state()))
+    assert step == 1
+
+
+def test_async_save_request_is_chainable(tmp_path):
+    """save() returns the completion request: test()/then() work like any
+    request in the engine."""
+
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    req = mgr.save(7, _state())
+    done = req.then(lambda r: ("committed", r.get()))
+    tag, step_dir = done.get()
+    assert tag == "committed" and step_dir.endswith("step_00000007")
+    assert mgr.latest_step() == 7
+
+
+def test_bf16_state_roundtrip(tmp_path):
+    """bf16 leaves bucket separately, store as the uint16 alias, and restore
+    through the recorded etype view; parity asserted in float32."""
+
+    import jax.numpy as jnp
+
+    state = {
+        "w32": jnp.linspace(0, 1, 16, dtype=jnp.float32).reshape(4, 4),
+        "w16": jnp.linspace(0, 1, 16, dtype=jnp.bfloat16).reshape(4, 4),
+    }
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, state)
+    restored, _ = mgr.restore(jax.tree.map(jnp.zeros_like, state))
+    assert restored["w16"].dtype == jnp.bfloat16
+    for k in state:
+        np.testing.assert_array_equal(
+            np.asarray(restored[k], np.float32), np.asarray(state[k], np.float32)
+        )
+
+
 def test_io_file_roundtrip(tmp_path):
     from repro.core import io as pio
 

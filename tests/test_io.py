@@ -1,0 +1,319 @@
+"""Parallel file I/O (MPI 4.0 chapter 14): nonblocking collective requests
+in the futures engine, split collectives, file views, open-mode semantics,
+and the typed failure paths (a background error must never read as
+success)."""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core as mpx
+from repro.core import errors
+from repro.core import io as pio
+from repro.core import tool
+from repro.core.descriptors import Mode
+from repro.core.futures import when_all
+
+
+def _pvar(name):
+    return tool.pvar_read().get(name, 0)
+
+
+# -- nonblocking collective requests (MPI_File_iwrite/iread_at_all) ----------
+
+
+def test_iwrite_returns_future_and_commits_manifest(tmp_path):
+    f = pio.open(str(tmp_path / "d"), Mode.CREATE | Mode.WRONLY)
+    req = f.iwrite_at_all("x", np.arange(12.0).reshape(3, 4))
+    assert isinstance(req, mpx.Future)
+    rec = req.get()                      # completion = manifest sync point
+    assert rec["shape"] == [3, 4]
+    r = pio.open(str(tmp_path / "d"), Mode.RDONLY)
+    np.testing.assert_array_equal(r.read_at_all("x"), np.arange(12.0).reshape(3, 4))
+
+
+def test_iwrite_consumed_semantics(tmp_path):
+    f = pio.open(str(tmp_path / "d"), Mode.CREATE | Mode.WRONLY)
+    req = f.iwrite_at_all("x", np.ones(4))
+    req.get()
+    with pytest.raises(errors.RequestError):
+        req.get()                        # MPI_Wait freed the request
+
+
+def test_iwrite_then_chains_into_engine(tmp_path):
+    """then() on an I/O request is deferred: the continuation runs at the
+    chain's completion and can consume the parent (paper Listing 2)."""
+
+    f = pio.open(str(tmp_path / "d"), Mode.CREATE | Mode.WRONLY)
+    chained = f.iwrite_at_all("x", np.ones(8)).then(
+        lambda req: req.get()["fragments"][0]["fragment"]
+    )
+    assert chained.get() == "x.0.npy"
+
+
+def test_when_all_joins_io_requests(tmp_path):
+    f = pio.open(str(tmp_path / "d"), Mode.CREATE | Mode.WRONLY)
+    reqs = [f.iwrite_at_all(n, np.full(4, i)) for i, n in enumerate("abc")]
+    joined = when_all(reqs)
+    records = joined.get()
+    assert [r["name"] for r in records] == list("abc")
+    for r in reqs:                       # MPI_Waitall consumed the inputs
+        assert not r.valid()
+
+
+def test_failed_iwrite_raises_err_io_never_silent(tmp_path):
+    f = pio.open(str(tmp_path / "d"), Mode.CREATE | Mode.WRONLY)
+
+    def boom(frag):
+        raise OSError(f"disk full writing {frag}")
+
+    f.write_hook = boom
+    req = f.iwrite_at_all("x", np.ones(4))
+    with pytest.raises(errors.IoError):
+        req.get()
+    # the manifest never committed: the dataset has no record of "x"
+    assert pio.open(str(tmp_path / "d"), Mode.RDONLY).names() == []
+
+
+def test_failed_join_propagates_through_when_all(tmp_path):
+    f = pio.open(str(tmp_path / "d"), Mode.CREATE | Mode.WRONLY)
+    fired = []
+
+    def boom(frag):
+        if frag.startswith("bad"):
+            fired.append(frag)
+            raise OSError("torn write")
+
+    f.write_hook = boom
+    good = f.iwrite_at_all("good", np.ones(4))
+    bad = f.iwrite_at_all("bad", np.ones(4))
+    with pytest.raises(errors.IoError):
+        when_all([good, bad]).get()
+    assert fired == ["bad.0.npy"]
+
+
+def test_iread_at_all(tmp_path):
+    f = pio.open(str(tmp_path / "d"), Mode.CREATE | Mode.RDWR)
+    f.write_at_all("x", np.arange(6).reshape(2, 3))
+    out = f.iread_at_all("x").get()
+    np.testing.assert_array_equal(np.asarray(out), np.arange(6).reshape(2, 3))
+
+
+# -- split collectives (MPI_File_write_at_all_begin / _end) ------------------
+
+
+def test_split_collective_write(tmp_path):
+    f = pio.open(str(tmp_path / "d"), Mode.CREATE | Mode.RDWR)
+    f.write_at_all_begin("x", np.arange(4.0))
+    rec = f.write_at_all_end("x")
+    assert rec["name"] == "x"
+    np.testing.assert_array_equal(np.asarray(f.read_at_all("x")), np.arange(4.0))
+
+
+def test_one_split_collective_per_handle(tmp_path):
+    f = pio.open(str(tmp_path / "d"), Mode.CREATE | Mode.WRONLY)
+    f.write_at_all_begin("x", np.ones(2))
+    with pytest.raises(errors.RequestError):
+        f.write_at_all_begin("y", np.ones(2))     # MPI: one active per handle
+    with pytest.raises(errors.RequestError):
+        f.write_at_all_end("y")                    # mismatched end
+    f.write_at_all_end("x")
+    with pytest.raises(errors.RequestError):
+        f.write_at_all_end("x")                    # end without begin
+
+
+# -- open-mode semantics (MPI_ERR_FILE_EXISTS) -------------------------------
+
+
+def test_create_excl_raises_on_existing_dataset(tmp_path):
+    """CREATE | EXCL on an existing dataset is ERR_FILE — the old elif made
+    the EXCL branch unreachable whenever CREATE was set."""
+
+    path = str(tmp_path / "d")
+    pio.open(path, Mode.CREATE | Mode.WRONLY).write_at_all("x", np.ones(2))
+    with pytest.raises(errors.FileError):
+        pio.open(path, Mode.CREATE | Mode.EXCL | Mode.WRONLY)
+    with pytest.raises(errors.FileError):
+        pio.open(path, Mode.EXCL | Mode.WRONLY)   # EXCL alone rejects too
+    # a fresh path is fine
+    pio.open(str(tmp_path / "fresh"), Mode.CREATE | Mode.EXCL | Mode.WRONLY)
+
+
+def test_write_requires_write_mode(tmp_path):
+    f = pio.open(str(tmp_path / "d"), Mode.CREATE)
+    with pytest.raises(errors.FileError):
+        f.write_at_all("x", np.ones(2))
+    with pytest.raises(errors.FileError):
+        f.iwrite_at_all("x", np.ones(2))
+
+
+# -- dtype reinterpretation rules --------------------------------------------
+
+
+def test_foreign_dtype_fragment_raises_err_io(tmp_path):
+    """A float64 fragment against a float32 manifest is a typed ERR_IO, not
+    a blind view() that corrupts or crashes with a numpy error."""
+
+    path = str(tmp_path / "d")
+    f = pio.open(path, Mode.CREATE | Mode.WRONLY, checksum=False)
+    f.write_at_all("x", np.ones(4, np.float32))
+    # overwrite the fragment with a float64 payload, manifest unchanged
+    frag = os.path.join(path, "x.0.npy")
+    np.save(open(frag, "wb"), np.ones(4, np.float64), allow_pickle=False)
+    r = pio.open(path, Mode.RDONLY, checksum=False)
+    with pytest.raises(errors.IoError, match="refusing to reinterpret"):
+        r.read_at_all("x")
+
+
+def test_integrity_checks_survive_error_checking_off(tmp_path):
+    """Data-integrity guards (dtype reinterpret, checksums) are NOT
+    interface validation: the error_checking cvar must not disable them."""
+
+    path = str(tmp_path / "d")
+    f = pio.open(path, Mode.CREATE | Mode.WRONLY, checksum=False)
+    f.write_at_all("x", np.ones(4, np.float32))
+    np.save(open(os.path.join(path, "x.0.npy"), "wb"), np.ones(4, np.float64),
+            allow_pickle=False)
+    prev = mpx.set_error_checking(False)
+    try:
+        with pytest.raises(errors.IoError, match="refusing to reinterpret"):
+            pio.open(path, Mode.RDONLY, checksum=False).read_at_all("x")
+    finally:
+        mpx.set_error_checking(prev)
+
+
+def test_bf16_fragment_roundtrip(tmp_path):
+    """bf16 fragments store as the uint16 alias and reinterpret back; parity
+    asserted in float32 (bf16 equality is mesh-sensitive elsewhere)."""
+
+    path = str(tmp_path / "d")
+    x = jnp.arange(16, dtype=jnp.bfloat16) / 7
+    f = pio.open(path, Mode.CREATE | Mode.WRONLY)
+    rec = f.write_at_all("x", x)
+    stored = np.load(os.path.join(path, rec["fragments"][0]["fragment"]))
+    assert stored.dtype == np.uint16          # the serialisation alias
+    out = pio.open(path, Mode.RDONLY).read_at_all("x")
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(
+        np.asarray(out, np.float32), np.asarray(x, np.float32)
+    )
+
+
+def test_etype_view_storage(tmp_path):
+    """set_view(etype=...) declares the storage representation explicitly;
+    a mismatched itemsize is ERR_TYPE."""
+
+    path = str(tmp_path / "d")
+    f = pio.open(path, Mode.CREATE | Mode.WRONLY)
+    f.set_view(etype=np.uint32)
+    rec = f.write_at_all("x", np.arange(4, dtype=np.float32))
+    assert rec["etype"] == "uint32"
+    stored = np.load(os.path.join(path, "x.0.npy"))
+    assert stored.dtype == np.uint32
+    r = pio.open(path, Mode.RDONLY)            # record etype is sufficient
+    np.testing.assert_array_equal(
+        np.asarray(r.read_at_all("x")), np.arange(4, dtype=np.float32)
+    )
+    with pytest.raises(errors.TypeError_):
+        f.set_view(etype=np.uint16)
+        f.write_at_all("y", np.arange(4, dtype=np.float32))
+
+
+# -- file views over C2 datatypes (MPI_File_set_view) ------------------------
+
+
+@dataclasses.dataclass
+class KVState:
+    keys: object
+    values: object
+    step: int
+
+
+def test_filetype_view_pages_roundtrip(tmp_path):
+    """An aggregate round-trips through the packed per-dtype layout
+    page-by-page — the same paging an RMA window uses for its transfers."""
+
+    state = KVState(
+        keys=jnp.arange(24, dtype=jnp.bfloat16).reshape(4, 6) / 3,
+        values=jnp.ones((4, 6), jnp.bfloat16) * 2,
+        step=7,
+    )
+    path = str(tmp_path / "d")
+    f = pio.open(path, Mode.CREATE | Mode.WRONLY)
+    f.set_view(filetype=state, num_pages=4)
+    rec = f.write_at_all("kv", state)
+    # one fragment per (dtype group, page): bf16 leaves pack together
+    groups = {e["group"] for e in rec["fragments"]}
+    assert len(rec["fragments"]) == len(groups) * 4
+    before = _pvar("io_bytes_read")
+
+    r = pio.open(path, Mode.RDONLY).set_view(filetype=state, num_pages=4)
+    out = r.read_at_all("kv")
+    assert isinstance(out, KVState)
+    np.testing.assert_array_equal(
+        np.asarray(out.keys, np.float32), np.asarray(state.keys, np.float32)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(out.values, np.float32), np.asarray(state.values, np.float32)
+    )
+    assert int(np.asarray(out.step)) == 7
+    assert _pvar("io_bytes_read") > before
+
+
+def test_view_mismatch_raises(tmp_path):
+    state = KVState(keys=jnp.ones((2, 2)), values=jnp.zeros((2, 2)), step=1)
+    path = str(tmp_path / "d")
+    f = pio.open(path, Mode.CREATE | Mode.WRONLY)
+    f.set_view(filetype=state, num_pages=2)
+    f.write_at_all("kv", state)
+
+    r = pio.open(path, Mode.RDONLY)
+    with pytest.raises(errors.IoError, match="file view"):
+        r.read_at_all("kv")                     # no view installed
+    other = KVState(keys=jnp.ones((3, 3)), values=jnp.zeros((3, 3)), step=1)
+    with pytest.raises(errors.IoError, match="view mismatch"):
+        r.set_view(filetype=other).read_at_all("kv")
+
+
+def test_window_pages_roundtrip_through_file(tmp_path):
+    """The C2 packed layout a Window holds round-trips through a file: a
+    window's aggregate, written under the window's own datatype view, reads
+    back equal to the window buffer."""
+
+    comm = mpx.world()
+
+    @dataclasses.dataclass
+    class Pair:
+        a: object
+        b: object
+
+    local = Pair(a=jnp.arange(8.0), b=jnp.arange(8, dtype=jnp.int32))
+    win = mpx.Window(comm, local)
+    path = str(tmp_path / "d")
+    f = pio.open(path, Mode.CREATE | Mode.WRONLY)
+    f.set_view(filetype=win.datatype, num_pages=2)
+    f.write_at_all("win", win.buffer)
+    out = (
+        pio.open(path, Mode.RDONLY)
+        .set_view(filetype=win.datatype, num_pages=2)
+        .read_at_all("win")
+    )
+    np.testing.assert_array_equal(np.asarray(out.a), np.asarray(local.a))
+    np.testing.assert_array_equal(np.asarray(out.b), np.asarray(local.b))
+
+
+# -- read-back verify + pvars -------------------------------------------------
+
+
+def test_readback_verify_and_manifest_commit_pvars(tmp_path):
+    before_commits = _pvar("io_manifest_commit")
+    before_written = _pvar("io_bytes_written")
+    f = pio.open(str(tmp_path / "d"), Mode.CREATE | Mode.WRONLY, verify=True)
+    f.write_at_all("x", np.ones((8, 8)))
+    assert _pvar("io_manifest_commit") == before_commits + 1
+    assert _pvar("io_bytes_written") > before_written
