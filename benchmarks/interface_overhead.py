@@ -17,6 +17,12 @@ And with the **RMA series** (MPI 4.0 chapter 12, one-sided): window
 (``fence``/``fence``) cost against a bare ``optimization_barrier`` — the
 interface tax of the epoch machinery, masking and datatype plumbing.
 
+And with the **neighborhood series** (MPI 4.0 chapter 8, virtual
+topologies): the cart ``neighbor_allgather`` against the two hand-written
+halo permutes it lowers to (interface tax ≈ 1), and the sparse
+``neighbor_alltoall`` against the dense world ``all_to_all`` one would use
+without topologies, at equal per-neighbor payload.
+
 And with the **I/O series** (MPI 4.0 chapter 14, nonblocking collective
 file I/O): checkpoint write bandwidth, the issue latency of a request-based
 async save (the synchronous part is only the device→host gather), and the
@@ -156,6 +162,47 @@ RMA_OPS = {
                        lambda x: _win(x).fence().buffer),
 }
 
+# neighborhood series (MPI 4.0 ch. 8): (a) interface tax of the cart
+# neighbor_allgather vs the two hand-written halo permutes it lowers to
+# (claim: ~1.0), and (b) the sparse neighbor_alltoall vs the dense world
+# all_to_all you would use without topologies, at equal per-neighbor
+# payload (claim: < 1 once N outgrows the degree)
+from repro.core import topology
+
+cart = topology.cart_create(comm, (N,), (True,))
+PLUS = [(i, (i + 1) % N) for i in range(N)]
+MINUS = [(i, (i - 1) % N) for i in range(N)]
+
+def bench_on(spmd, fn, x):
+    jitted = spmd(fn)
+    out = jitted(x); jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = jitted(x)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+def raw_halo(x):
+    return jnp.stack([lax.ppermute(x, name, PLUS), lax.ppermute(x, name, MINUS)])
+
+def bench_neighbor(n_elems):
+    blk = max(1, n_elems // N)
+    x_blk = jnp.ones((blk,), jnp.float32)
+    x_nb = jnp.ones((2, blk), jnp.float32)
+    x_dense = jnp.ones((N * blk,), jnp.float32)
+    return [
+        {"op": "neighbor_allgather", "series": "neighbor",
+         "raw_us": bench_on(comm.spmd, raw_halo, x_blk),
+         "iface_us": bench_on(cart.spmd,
+                              lambda x: cart.neighbor_allgather(x).get(), x_blk)},
+        {"op": "neighbor_alltoall", "series": "neighbor",
+         "raw_us": bench_on(comm.spmd,
+                            lambda x: lax.all_to_all(x, name, 0, 0, tiled=True),
+                            x_dense),
+         "iface_us": bench_on(cart.spmd,
+                              lambda x: cart.neighbor_alltoall(x).get(), x_nb)},
+    ]
+
 rows = []
 for n in msg_lens:
     for op, (raw, iface) in OPS.items():
@@ -171,6 +218,8 @@ for n in msg_lens:
             "devices": N, "msg_elems": n, "op": op, "series": "rma",
             "raw_us": bench(raw, n), "iface_us": bench(iface, n),
         })
+    for row in bench_neighbor(n):
+        rows.append({"devices": N, "msg_elems": n, **row})
 print("RESULT " + json.dumps(rows))
 """
 
@@ -325,7 +374,7 @@ def main(argv=None):
     for d in device_counts:
         for n in msg_lens:
             rows = [r for r in all_rows if r["devices"] == d
-                    and r["msg_elems"] == n and r.get("series") != "rma"]
+                    and r["msg_elems"] == n and "series" not in r]
             g_raw = geomean([r["raw_us"] for r in rows])
             g_ifc = geomean([r["iface_us"] for r in rows])
             ratio = g_ifc / g_raw
@@ -367,6 +416,25 @@ def main(argv=None):
                     f"| {d} | {n} | {r['op']} | {r['raw_us']:.1f} | "
                     f"{r['iface_us']:.1f} | {ratio:.3f} |"
                 )
+    # neighborhood series: interface tax vs the raw halo permutes, and the
+    # sparse-vs-dense claim (neighbor exchange vs world alltoall at equal
+    # per-neighbor payload)
+    nlines = ["", "| devices | msg elems | op | raw µs | neighbor µs | ratio |",
+              "|---|---|---|---|---|---|"]
+    neigh_ratios = []
+    for d in device_counts:
+        for n in msg_lens:
+            for r in all_rows:
+                if (r["devices"] != d or r["msg_elems"] != n
+                        or r.get("series") != "neighbor"):
+                    continue
+                ratio = r["iface_us"] / max(r["raw_us"], 1e-9)
+                if r["op"] == "neighbor_allgather":
+                    neigh_ratios.append(ratio)
+                nlines.append(
+                    f"| {d} | {n} | {r['op']} | {r['raw_us']:.1f} | "
+                    f"{r['iface_us']:.1f} | {ratio:.3f} |"
+                )
     # I/O series: checkpoint bandwidth + async overlap (single manifest
     # commit per save — the sync-point count is part of the claim)
     iolines = ["", "| state MB | sync save ms | MB/s | issue µs | serial ms | "
@@ -383,7 +451,7 @@ def main(argv=None):
             f"{r['serial_ms']:.1f} | {r['overlapped_ms']:.1f} | "
             f"{r['overlap_ratio']:.3f} | {r['manifest_commits_per_save']:.1f} |"
         )
-    table = "\n".join(lines + plines + rlines + iolines)
+    table = "\n".join(lines + plines + rlines + nlines + iolines)
     (OUT / "interface_overhead.md").write_text(table + "\n")
     print(table)
     print(f"worst geomean ratio: {worst:.3f} (paper claim: ~1.0, 'no recognizable disparity')")
@@ -391,6 +459,10 @@ def main(argv=None):
           "(claim: <= 1.0 — setup cost amortized by *_init + Start)")
     print(f"worst RMA/raw ratio: {worst_rma:.3f} "
           "(window epoch + masking tax over the bare collective)")
+    if neigh_ratios:
+        print(f"neighbor_allgather/raw-halo geomean ratio: "
+              f"{geomean(neigh_ratios):.3f} "
+              "(ch. 8 interface tax over hand-written halo permutes)")
     print(f"worst async/serial checkpoint ratio: {worst_overlap:.3f} "
           "(claim: < 1.0 — I/O requests overlap compute; "
           f"manifest commits per save: {worst_commits:.1f}, claim: exactly 1)")

@@ -2,52 +2,218 @@
 roofline deliverables:
 
 * ``interface_overhead`` — the paper's Fig. 1 (mpiBench op set, raw vs
-  interface, message lengths × device counts);
-* ``hlo_parity``        — compiler-level zero-overhead proof (beyond-paper);
+  interface, message lengths × device counts), plus the persistent, RMA,
+  neighborhood and I/O series;
+* ``hlo_parity``        — compiler-level zero-overhead + neighbor-sparsity
+  proof (beyond-paper);
 * ``roofline``          — §Roofline tables from the dry-run artifacts;
 * ``train_throughput``  — end-to-end smoke-scale steps/s.
 
     PYTHONPATH=src python -m benchmarks.run [--quick]
+
+**Bench trajectory**: after any run (or standalone with ``--summary``), the
+tracked series are condensed from ``artifacts/bench/*.json`` into a
+per-commit ``artifacts/bench/BENCH_summary.json``; ``--gate
+benchmarks/baseline.json`` compares it against the committed baseline and
+fails on a >25% regression of any tracked series — the CI step that keeps
+the perf trajectory honest.  Regenerate the baseline by copying a fresh
+summary over ``benchmarks/baseline.json`` when a change legitimately moves
+a series.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import math
 import sys
 import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+OUT = ROOT / "artifacts" / "bench"
+
+#: Tracked trajectory series → direction ("lower"/"higher" = which way is
+#: better).  Ratio-type series (geomeans of iface/raw) are preferred over
+#: absolute wall-clock numbers: they stay comparable across CI machines.
+TRACKED = {
+    "overhead_geomean_ratio": "lower",      # interface/raw, mpiBench set
+    "persistent_geomean_ratio": "lower",    # persistent steady / per-call
+    "rma_geomean_ratio": "lower",           # window ops / raw lowering
+    "neighbor_allgather_ratio": "lower",    # ch. 8 exchange / raw halo permutes
+    "neighbor_wire_fraction": "lower",      # neighbor vs dense wire bytes (HLO)
+    "neighbor_sparse": "higher",            # 1.0 = no dense world collective
+    "io_overlap_ratio": "lower",            # async/serial checkpoint wall-clock
+    "io_commits_per_save": "lower",         # manifest sync points (claim: 1)
+    "hlo_identical_frac": "higher",         # zero-overhead proof coverage
+}
+
+
+def _geomean(xs):
+    xs = [max(float(x), 1e-9) for x in xs]
+    return math.exp(sum(math.log(x) for x in xs) / len(xs)) if xs else None
+
+
+def summarize(out_dir: Path = OUT) -> dict:
+    """Condense the benchmark artifacts into the tracked series.  Series
+    whose source artifact is missing are omitted (the gate treats a
+    baseline series missing from the summary as a failure, so a partial CI
+    run cannot silently pass)."""
+
+    summary: dict[str, float] = {}
+
+    iface = out_dir / "interface_overhead.json"
+    if iface.exists():
+        rows = json.loads(iface.read_text())
+        plain = [r for r in rows if "series" not in r]
+        if plain:
+            summary["overhead_geomean_ratio"] = _geomean(
+                [r["iface_us"] / max(r["raw_us"], 1e-9) for r in plain]
+            )
+        pers = [r for r in rows if "persist_us" in r]
+        if pers:
+            summary["persistent_geomean_ratio"] = _geomean(
+                [r["persist_us"] / max(r["percall_us"], 1e-9) for r in pers]
+            )
+        rma = [r for r in rows if r.get("series") == "rma"]
+        if rma:
+            summary["rma_geomean_ratio"] = _geomean(
+                [r["iface_us"] / max(r["raw_us"], 1e-9) for r in rma]
+            )
+        neigh = [
+            r for r in rows
+            if r.get("series") == "neighbor" and r["op"] == "neighbor_allgather"
+        ]
+        if neigh:
+            summary["neighbor_allgather_ratio"] = _geomean(
+                [r["iface_us"] / max(r["raw_us"], 1e-9) for r in neigh]
+            )
+
+    io = out_dir / "io_overhead.json"
+    if io.exists():
+        rows = json.loads(io.read_text())
+        if rows:
+            summary["io_overlap_ratio"] = max(r["overlap_ratio"] for r in rows)
+            summary["io_commits_per_save"] = max(
+                r["manifest_commits_per_save"] for r in rows
+            )
+
+    parity = out_dir / "hlo_parity.json"
+    if parity.exists():
+        rows = json.loads(parity.read_text())
+        ident = [r for r in rows if "identical" in r]
+        if ident:
+            summary["hlo_identical_frac"] = sum(
+                1 for r in ident if r["identical"]
+            ) / len(ident)
+        neigh = [r for r in rows if "sparse" in r]
+        if neigh:
+            summary["neighbor_sparse"] = (
+                1.0 if all(r["sparse"] for r in neigh) else 0.0
+            )
+            fracs = [r["wire_fraction"] for r in neigh if r["wire_fraction"]]
+            if fracs:
+                summary["neighbor_wire_fraction"] = max(fracs)
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    (out_dir / "BENCH_summary.json").write_text(json.dumps(summary, indent=1))
+    return summary
+
+
+def gate(summary: dict, baseline_path: Path, tolerance: float = 0.25) -> int:
+    """Fail (rc 1) on a regression past tolerance of any baseline series.
+
+    Baseline entries are either a bare number (default 25% tolerance) or
+    ``{"value": v, "tolerance": t}`` for series with a different noise
+    floor — the compile-time-dominated persistent ratio gets a wide band
+    (any meaningful regression is orders of magnitude), the deterministic
+    HLO proof fractions an exact one.  "Regression" is direction-aware: for
+    a lower-is-better series the gate trips when ``value > baseline *
+    (1 + tolerance)``; for higher-is-better when ``value < baseline /
+    (1 + tolerance)``.  A tracked series present in the baseline but absent
+    from the summary also fails — a partial bench run must not read green.
+    """
+
+    baseline = json.loads(Path(baseline_path).read_text())
+    rc = 0
+    print(f"\nbench gate vs {baseline_path} (default tolerance {tolerance:.0%}):")
+    print("| series | baseline | current | direction | tolerance | verdict |")
+    print("|---|---|---|---|---|---|")
+    for name, entry in baseline.items():
+        if isinstance(entry, dict):
+            base, tol = float(entry["value"]), float(entry.get("tolerance", tolerance))
+        else:
+            base, tol = float(entry), tolerance
+        direction = TRACKED.get(name, "lower")
+        cur = summary.get(name)
+        if cur is None:
+            verdict = "FAIL (missing)"
+            rc = 1
+        elif direction == "lower":
+            ok = cur <= base * (1 + tol)
+            verdict = "ok" if ok else "FAIL"
+            rc = rc if ok else 1
+        else:
+            ok = cur >= base / (1 + tol)
+            verdict = "ok" if ok else "FAIL"
+            rc = rc if ok else 1
+        cur_s = "—" if cur is None else f"{cur:.4f}"
+        print(f"| {name} | {base:.4f} | {cur_s} | {direction} | {tol:.0%} | {verdict} |")
+    return rc
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--skip", nargs="*", default=[])
+    ap.add_argument(
+        "--summary",
+        action="store_true",
+        help="only condense existing artifacts into BENCH_summary.json "
+        "(skip running the benchmarks)",
+    )
+    ap.add_argument(
+        "--gate",
+        default=None,
+        metavar="BASELINE",
+        help="compare the summary against a committed baseline JSON; "
+        "exit 1 on >25%% regression of any tracked series",
+    )
     args = ap.parse_args(argv)
 
-    from benchmarks import hlo_parity, interface_overhead, roofline, train_throughput
-
     rc = 0
-    jobs = [
-        ("interface_overhead", lambda: interface_overhead.main(
-            ["--quick"] if args.quick else [])),
-        ("hlo_parity", lambda: hlo_parity.main()),
-        ("roofline(single-pod)", lambda: roofline.main(["--mesh", "pod_16x16"])),
-        ("roofline(multi-pod)", lambda: roofline.main(["--mesh", "multipod_2x16x16"])),
-        ("train_throughput", lambda: train_throughput.main(
-            ["--steps", "5"] if args.quick else [])),
-    ]
-    for name, fn in jobs:
-        if any(s in name for s in args.skip):
-            print(f"=== {name}: skipped")
-            continue
-        print(f"\n=== {name} ===")
-        t0 = time.time()
-        try:
-            r = fn()
-            rc = rc or (r or 0)
-        except Exception as e:  # pragma: no cover
-            print(f"{name} FAILED: {e}")
-            rc = 1
-        print(f"=== {name} done in {time.time()-t0:.0f}s")
+    if not args.summary:
+        from benchmarks import hlo_parity, interface_overhead, roofline, train_throughput
+
+        jobs = [
+            ("interface_overhead", lambda: interface_overhead.main(
+                ["--quick"] if args.quick else [])),
+            ("hlo_parity", lambda: hlo_parity.main()),
+            ("roofline(single-pod)", lambda: roofline.main(["--mesh", "pod_16x16"])),
+            ("roofline(multi-pod)", lambda: roofline.main(["--mesh", "multipod_2x16x16"])),
+            ("train_throughput", lambda: train_throughput.main(
+                ["--steps", "5"] if args.quick else [])),
+        ]
+        for name, fn in jobs:
+            if any(s in name for s in args.skip):
+                print(f"=== {name}: skipped")
+                continue
+            print(f"\n=== {name} ===")
+            t0 = time.time()
+            try:
+                r = fn()
+                rc = rc or (r or 0)
+            except Exception as e:  # pragma: no cover
+                print(f"{name} FAILED: {e}")
+                rc = 1
+            print(f"=== {name} done in {time.time()-t0:.0f}s")
+
+    summary = summarize()
+    print("\nBENCH_summary.json:")
+    for k, v in summary.items():
+        print(f"  {k}: {v:.4f}")
+    if args.gate:
+        rc = gate(summary, Path(args.gate)) or rc
     return rc
 
 

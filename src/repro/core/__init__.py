@@ -85,18 +85,28 @@ from repro.core.collectives import (  # noqa: F401
 )
 from repro.core.overlap import (  # noqa: F401
     all_gather_matmul,
+    halo_exchange,
     hierarchical_allreduce,
     matmul_reduce_scatter,
     merge_partial_attention,
     partitioned_allreduce,
     partitioned_ring_all_gather,
     partitioned_ring_reduce_scatter,
+    pipeline_spmd,
     ring_all_gather,
     ring_all_gather_bidirectional,
     ring_attention,
     ring_reduce_scatter,
 )
 from repro.core.onesided import Window, create_window  # noqa: F401
+from repro.core.topology import (  # noqa: F401
+    PROC_NULL,
+    CartComm,
+    CartShift,
+    DistGraphComm,
+    cart_create,
+    dist_graph_create_adjacent,
+)
 from repro.core import compress, io, tool  # noqa: F401
 from repro.core import _methods  # noqa: F401  (binds the method facade)
 

@@ -28,6 +28,12 @@ Lifetime semantics mirror the paper:
 
 Rank/size are *trace-level* notions inside :meth:`spmd` regions (SPMD code),
 exactly as MPI ranks are only meaningful inside the parallel program.
+
+Virtual topologies (MPI 4.0 ch. 8) live in :mod:`repro.core.topology`:
+``comm.cart_create(dims, periods)`` / ``comm.dist_graph_create_adjacent``
+derive structured communicators from this one — both routed through
+:meth:`from_group` (cart grids additionally register ``repro://cart/<dims>``
+process sets), so topology construction stays inside the Sessions model.
 """
 
 from __future__ import annotations

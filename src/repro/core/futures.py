@@ -51,6 +51,12 @@ datatype layer: ``comm.allreduce_init(example)`` AOT-lowers **one collective
 per dtype bucket** of the example aggregate, and every ``start()`` re-fires
 the compiled executables on a new aggregate of the same datatype.
 
+Neighborhood collectives (chapter 8, :mod:`repro.core.topology`) ride the
+same engine: ``neighbor_allgather``/``neighbor_alltoall(v)`` return
+:class:`TraceFuture`\\ s whose forcing points place the sparse exchanges in
+the trace, and ``neighbor_alltoall_init`` reuses
+:class:`PersistentCollective` for the ``MPI_Neighbor_alltoall_init`` form.
+
 Request-based RMA (``MPI_Rput``/``MPI_Rget``/``MPI_Raccumulate``, chapter
 12) rides the same engine: :class:`repro.core.onesided.Window` returns
 :class:`TraceFuture`\\ s from ``rput``/``rget``/``raccumulate``, so one-sided
@@ -530,6 +536,13 @@ class PersistentCollective:
     @property
     def requests(self) -> list[PersistentRequest]:
         return self._requests
+
+    @property
+    def starts(self) -> int:
+        """``MPI_Start`` events fired so far (max over the dtype-bucket
+        requests — one logical start fires every bucket once)."""
+
+        return max((r.starts for r in self._requests), default=0)
 
     def as_text(self) -> str:
         return "\n".join(r.as_text() for r in self._requests)

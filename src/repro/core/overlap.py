@@ -29,6 +29,12 @@ Contents:
   independently-ready partitions, each a lazy :class:`TraceFuture` consumed
   in ``Pready`` order with chunk-wise fused continuations — the schedule
   behind backward-overlapped gradient sync (:mod:`repro.optim.grad_sync`).
+* :func:`halo_exchange` / :func:`pipeline_spmd` — neighbor-structured
+  schedules over a :class:`~repro.core.topology.CartComm` (MPI 4.0 ch. 8):
+  halo boundary exchange as an overlappable :class:`TraceFuture`, and the
+  pipeline-parallel microbatch schedule whose stage boundaries are
+  ``cart_shift(+1)`` permutes — the production fabric of the pipeline
+  Trainer mode (:mod:`repro.runtime.trainer`).
 """
 
 from __future__ import annotations
@@ -416,6 +422,124 @@ def _partitioned(comm: Communicator, num_partitions: int, reduce_one, continuati
 
     req = PartitionedRequest(fn, num_partitions)
     return req.start()
+
+
+def halo_exchange(
+    cart,
+    x: jax.Array,
+    *,
+    dim: int = 0,
+    axis: int = 0,
+    width: int = 1,
+) -> TraceFuture:
+    """Cartesian halo exchange (the ch. 8 stencil idiom): send the ``width``
+    boundary slices of ``x`` (array dimension ``axis``) to the ∓ neighbors
+    along cart dimension ``dim``; resolves to ``(from_minus, from_plus)`` —
+    the neighbor boundary slices this rank receives (zeros beyond a
+    non-periodic edge, the :data:`~repro.core.topology.PROC_NULL`
+    convention).
+
+    Returned lazily as a :class:`TraceFuture` so the issue point precedes
+    interior compute and the forcing point sits at boundary consumption —
+    the scheduler then overlaps the two axis-local ``collective-permute``\\ s
+    with the interior work, the TPU-native ``MPI_Ineighbor_*`` + compute +
+    ``MPI_Wait`` pattern.
+    """
+
+    errors.check(
+        0 < width <= x.shape[axis],
+        errors.ErrorClass.ERR_COUNT,
+        f"halo width {width} invalid for array dim of size {x.shape[axis]}",
+    )
+
+    def impl():
+        plus = cart.cart_shift(dim, 1)
+        minus = cart.cart_shift(dim, -1)
+        hi = lax.slice_in_dim(x, x.shape[axis] - width, x.shape[axis], axis=axis)
+        lo = lax.slice_in_dim(x, 0, width, axis=axis)
+        # my high boundary travels +1 and becomes the + rank's from_minus
+        from_minus = lax.ppermute(hi, plus.axis_name, list(plus.axis_perm))
+        from_plus = lax.ppermute(lo, minus.axis_name, list(minus.axis_perm))
+        return from_minus, from_plus
+
+    return TraceFuture(impl)
+
+
+def pipeline_spmd(
+    cart,
+    *,
+    stage_dim: int,
+    num_microbatches: int,
+    inject: Callable[[int], jax.Array],
+    stage_fn: Callable[[jax.Array, int], jax.Array],
+    extract: Callable[[int, jax.Array, jax.Array], Any],
+) -> list:
+    """Pipeline-parallel microbatch schedule over a cart ``stage`` dim.
+
+    The classic pipeline loop, spelled in the ch. 8 vocabulary: at tick
+    ``t`` every stage applies its local layers to the microbatch in flight,
+    then the activation moves one stage down via the ``cart_shift(+1)``
+    boundary exchange (one axis-local ``collective-permute``; the first
+    stage's incoming edge is :data:`~repro.core.topology.PROC_NULL`, so the
+    injected microbatch overwrites zeros).  Microbatch ``m`` enters stage 0
+    at tick ``m`` and drains from stage ``S-1`` at tick ``m + S - 1`` —
+    ``M + S - 1`` ticks total, the ``S-1``-tick bubble of a forward
+    pipeline.
+
+    Scheduling honesty: XLA programs are statically scheduled, so 1F1B-style
+    forward/backward interleaving is not an imperative loop here — what this
+    schedule fixes is the *dependence frontier* (stage ``s`` at tick ``t``
+    needs stage ``s-1``'s tick-``t-1`` permute and nothing else), which is
+    exactly the freedom the XLA scheduler needs to overlap each boundary
+    permute with the next microbatch's compute; the backward program AD
+    derives from this loop has the mirrored frontier (see DESIGN.md ch. 8).
+
+    * ``inject(m)`` → the stage-0 input for microbatch ``m`` (computed on
+      every rank, selected onto stage 0 — uniform SPMD program).
+    * ``stage_fn(state, t)`` → this stage's local layers applied to the
+      in-flight activation.
+    * ``extract(m, state, is_last)`` → called once per drained microbatch
+      with ``is_last`` (a trace-level predicate for "this rank is the final
+      stage"); its results are returned in microbatch order.  Callers
+      typically mask with ``jnp.where(is_last, ...)`` and ``psum`` over the
+      stage axis.
+    """
+
+    dims = cart.dims
+    errors.check(
+        0 <= stage_dim < len(dims),
+        errors.ErrorClass.ERR_DIMS,
+        f"stage_dim {stage_dim} out of range for cart dims {dims}",
+    )
+    errors.check(
+        num_microbatches >= 1,
+        errors.ErrorClass.ERR_COUNT,
+        f"pipeline needs >= 1 microbatch, got {num_microbatches}",
+    )
+    errors.check(
+        not cart.periods[stage_dim],
+        errors.ErrorClass.ERR_TOPOLOGY,
+        "the pipeline stage dim must be non-periodic (activations drain at "
+        "the last stage; a periodic shift would wrap them into stage 0)",
+    )
+    s = dims[stage_dim]
+    axis_name = cart.axis_names[stage_dim]
+    stage = lax.axis_index(axis_name)
+    is_first = stage == 0
+    is_last = stage == s - 1
+    m = num_microbatches
+
+    state = jnp.zeros_like(inject(0))
+    outs = []
+    for t in range(m + s - 1):
+        state = jnp.where(is_first, inject(min(t, m - 1)), state)
+        state = stage_fn(state, t)
+        out_t = t - (s - 1)
+        if out_t >= 0:
+            outs.append(extract(out_t, state, is_last))
+        if t < m + s - 2:
+            state = cart.shift_exchange(state, stage_dim, 1).get()
+    return outs
 
 
 def partitioned_allreduce(

@@ -53,6 +53,13 @@ _ALIAS_SCHEME = "mpi://"
 WORLD_PSET = _SCHEME + "world"
 SELF_PSET = _SCHEME + "self"
 
+#: Topology-registered process sets (MPI 4.0 ch. 8): ``cart_create``
+#: registers each Cartesian grid's device set under this prefix
+#: (``repro://cart/<d0>x<d1>...``).  These are *user* sets — preserved
+#: across :meth:`Session.refresh`, re-registered by re-running the
+#: topology constructor after an elastic resize.
+CART_PSET_PREFIX = _SCHEME + "cart/"
+
 _BUILTIN_PREFIXES = (f"{_SCHEME}host/", f"{_SCHEME}platform/", f"{_SCHEME}slice/")
 
 

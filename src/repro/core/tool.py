@@ -131,6 +131,13 @@ def _wire_factor(kind: str, n: int) -> float:
     """Ring-algorithm bytes crossing one device's link, as a multiple of the
     payload (operand bytes for reductions, result bytes for gathers)."""
 
+    if kind in ("collective-permute", "collective-broadcast"):
+        # permutes/broadcasts move the payload once regardless of group
+        # size; they carry source-target pairs, not replica_groups, so the
+        # parsed group size (default 1) must not zero them out — ring
+        # schedules and ch. 8 neighbor exchanges are all permutes, and
+        # their wire bytes used to read as 0 here
+        return 1.0
     if n <= 1:
         return 0.0
     frac = (n - 1) / n
@@ -138,7 +145,7 @@ def _wire_factor(kind: str, n: int) -> float:
         return 2.0 * frac
     if kind in ("all-gather", "reduce-scatter", "all-to-all"):
         return frac
-    return 1.0  # permute / broadcast move the payload once
+    return 1.0
 
 
 def parse_hlo_collectives(hlo_text: str, default_group: int = 1) -> CollectiveStats:
@@ -381,6 +388,14 @@ pvar_register("persistent_start", "MPI_Start analogues fired on persistent reque
 pvar_register("partitioned_init", "partitioned requests constructed (Psend_init)")
 pvar_register("partitioned_start", "partitioned request activations (MPI_Start)")
 pvar_register("partition_ready", "partitions marked ready (MPI_Pready)")
+pvar_register("cart_create", "Cartesian topologies constructed (MPI_Cart_create)")
+pvar_register("dist_graph_create",
+              "distributed graph topologies constructed (MPI_Dist_graph_create_adjacent)")
+pvar_register("neighbor_allgather", "neighborhood allgathers issued (MPI_Neighbor_allgather)")
+pvar_register("neighbor_alltoall", "neighborhood alltoalls issued (MPI_Neighbor_alltoall)")
+pvar_register("neighbor_alltoallv", "vector neighborhood alltoalls issued (MPI_Neighbor_alltoallv)")
+pvar_register("neighbor_alltoall_init",
+              "persistent neighborhood alltoalls initialised (MPI_Neighbor_alltoall_init)")
 pvar_register("rma_fence", "window fence epochs opened/closed (MPI_Win_fence)")
 pvar_register("rma_put", "blocking window puts (MPI_Put)")
 pvar_register("rma_rput", "request-based window puts (MPI_Rput)")

@@ -1,0 +1,873 @@
+"""Virtual process topologies & neighborhood collectives (MPI 4.0 ch. 8).
+
+Chapter 8 gives MPI programs *structured* rank spaces: Cartesian grids
+(``MPI_Cart_create`` + ``cart_shift``/``cart_sub``/``cart_coords``) and
+distributed graphs (``MPI_Dist_graph_create_adjacent``), and — since MPI 3 —
+**neighborhood collectives** whose traffic follows the declared topology
+instead of the dense world: ``MPI_Neighbor_allgather`` / ``_alltoall`` /
+``_alltoallv``.  On a pod this is the natural spelling of the sparse,
+neighbor-structured traffic that dominates pipeline and expert parallelism:
+a pipeline stage talks to ``cart_shift(+1)``; an MoE rank talks to the ranks
+owning the experts its router can reach.
+
+Adaptation to the XLA substrate:
+
+* A :class:`CartComm` folds a :class:`~repro.core.session.Group` onto a
+  ``dims`` grid **through the group algebra**:  ``cart_create`` carves
+  ``group.incl(range(prod(dims)))`` out of the parent (excess ranks get no
+  membership, MPI's ``MPI_COMM_NULL`` for them), registers the grid as a
+  session process set (``repro://cart/<dims>``) and hands the group to
+  :meth:`~repro.core.communicator.Communicator.from_group` — the canonical
+  constructor stays canonical.  ``reorder=True`` is accepted but performs no
+  renumbering: under jax, logical-rank→device binding is fixed by the mesh,
+  so reorder could only relabel, never migrate data (see DESIGN.md).
+* ``cart_shift`` is host-level: it returns the full source/destination
+  tables (``PROC_NULL`` at non-periodic boundaries) *and* the trace-time
+  static permutation lists that lower to ``collective-permute`` — per-axis
+  pairs for single-dim shifts, so a shift over one cart dimension of a
+  multi-dim grid emits a subgroup permute, never a world-sized collective.
+* Neighborhood collectives return :class:`~repro.core.futures.TraceFuture`\\ s
+  and chain ``then()`` / :func:`~repro.core.futures.when_all` into the C3
+  request engine exactly like ``immediate_*`` collectives; the persistent
+  ``neighbor_alltoall_init`` AOT-compiles one executable per dtype bucket
+  (the :class:`~repro.core.futures.PersistentCollective` pattern).
+* Lowering is **sparse by construction**: a Cartesian neighborhood is
+  ``2·ndims`` axis-local permutes; a distributed graph is decomposed into
+  matchings (edge-colouring) of its edge set, one ``collective-permute``
+  per matching round.  ``benchmarks/hlo_parity.py`` checks the compiled
+  artifact contains no dense ``all-to-all``.
+
+SPMD shape rules (all divergences documented, none silent): every rank runs
+the same program, so neighbor buffers are padded to the *maximum* in/out
+degree over ranks — ``PROC_NULL`` slots and absent edges read as zeros, and
+``neighbor_alltoallv`` returns the per-rank valid counts as a trace-level
+vector next to the padded blocks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core import datatypes, errors, tool
+from repro.core.communicator import Communicator
+from repro.core.futures import (
+    PersistentCollective,
+    PersistentRequest,
+    TraceFuture,
+    argument_signature,
+)
+from repro.core.session import CART_PSET_PREFIX, Group, default_session
+
+#: ``MPI_PROC_NULL``: the non-existent neighbor beyond a non-periodic edge.
+PROC_NULL = -1
+
+
+# ---------------------------------------------------------------------------
+# host-level cart arithmetic (testable without devices)
+# ---------------------------------------------------------------------------
+
+
+def cart_coords_of(dims: Sequence[int], rank: int) -> tuple[int, ...]:
+    """``MPI_Cart_coords``: row-major coordinates of ``rank`` in ``dims``."""
+
+    n = math.prod(dims)
+    errors.check(
+        0 <= rank < n,
+        errors.ErrorClass.ERR_RANK,
+        f"rank {rank} out of range for cart grid {tuple(dims)}",
+    )
+    return tuple(int(c) for c in np.unravel_index(rank, tuple(dims)))
+
+
+def cart_rank_of(
+    dims: Sequence[int], periods: Sequence[bool], coords: Sequence[int]
+) -> int:
+    """``MPI_Cart_rank``: periodic dims wrap; out-of-range coordinates on a
+    non-periodic dim are erroneous (``ERR_RANK``, as in the standard)."""
+
+    errors.check(
+        len(coords) == len(dims),
+        errors.ErrorClass.ERR_DIMS,
+        f"{len(coords)} coordinates for a {len(dims)}-dim grid",
+    )
+    fixed = []
+    for c, d, p in zip(coords, dims, periods):
+        c = int(c)
+        if p:
+            c %= d
+        errors.check(
+            0 <= c < d,
+            errors.ErrorClass.ERR_RANK,
+            f"coordinate {c} out of range for non-periodic dim of size {d}",
+        )
+        fixed.append(c)
+    return int(np.ravel_multi_index(tuple(fixed), tuple(dims)))
+
+
+def cart_shift_tables(
+    dims: Sequence[int], periods: Sequence[bool], dim: int, disp: int = 1
+) -> tuple[tuple[int, ...], tuple[int, ...]]:
+    """``MPI_Cart_shift``: per-rank ``(sources, destinations)`` tables.
+
+    ``sources[r]`` is the rank whose data arrives at ``r`` under the shift
+    (``MPI_Cart_shift``'s ``rank_source``), ``destinations[r]`` where ``r``'s
+    data goes; :data:`PROC_NULL` beyond a non-periodic boundary.
+    """
+
+    dims = tuple(int(d) for d in dims)
+    errors.check(
+        0 <= dim < len(dims),
+        errors.ErrorClass.ERR_DIMS,
+        f"shift dimension {dim} out of range for {len(dims)}-dim grid",
+    )
+    n = math.prod(dims)
+    srcs, dsts = [], []
+    for r in range(n):
+        coords = list(cart_coords_of(dims, r))
+
+        def _neighbor(offset: int) -> int:
+            c = coords[dim] + offset
+            if periods[dim]:
+                c %= dims[dim]
+            elif not (0 <= c < dims[dim]):
+                return PROC_NULL
+            nc = list(coords)
+            nc[dim] = c
+            return int(np.ravel_multi_index(tuple(nc), dims))
+
+        dsts.append(_neighbor(disp))
+        srcs.append(_neighbor(-disp))
+    return tuple(srcs), tuple(dsts)
+
+
+@dataclasses.dataclass(frozen=True)
+class CartShift:
+    """The result of :meth:`CartComm.cart_shift`.
+
+    * ``sources`` / ``destinations`` — host tables, rank-indexed, with
+      :data:`PROC_NULL` at non-periodic boundaries (``MPI_Cart_shift``'s two
+      output ranks, for every rank at once — the SPMD program needs the full
+      pattern, not one rank's view).
+    * ``perm`` — flat-rank ``(src, dst)`` pairs for
+      :func:`repro.core.collectives.send_recv` over the whole communicator.
+    * ``axis_name`` / ``axis_perm`` — the same shift as *axis-local* pairs
+      over just the shifted mesh axis: ``lax.ppermute(x, axis_name,
+      axis_perm)`` lowers to a subgroup ``collective-permute`` (every color
+      of the other axes shifts in the same program).
+    """
+
+    dim: int
+    disp: int
+    sources: tuple[int, ...]
+    destinations: tuple[int, ...]
+    perm: tuple[tuple[int, int], ...]
+    axis_name: str
+    axis_perm: tuple[tuple[int, int], ...]
+
+
+# ---------------------------------------------------------------------------
+# graph adjacency + matching decomposition (the sparse lowering engine)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class _Edge:
+    src: int
+    dst: int
+    out_slot: int  # position in src's destination list
+    in_slot: int   # position in dst's source list
+
+
+def _matching_rounds(edges: Sequence[_Edge]) -> list[list[_Edge]]:
+    """Greedy edge-colouring: split the edge set into rounds where every
+    rank appears at most once as a source and once as a destination — the
+    legality condition of one ``collective-permute``.  Round count is
+    bounded by ~max degree (Vizing), the sparse analogue of the dense
+    collective's O(world) steps."""
+
+    rounds: list[tuple[set, set, list[_Edge]]] = []
+    for e in edges:
+        for srcs, dsts, members in rounds:
+            if e.src not in srcs and e.dst not in dsts:
+                srcs.add(e.src)
+                dsts.add(e.dst)
+                members.append(e)
+                break
+        else:
+            rounds.append(({e.src}, {e.dst}, [e]))
+    return [members for _, _, members in rounds]
+
+
+def _build_edges(
+    sources: Sequence[Sequence[int]], destinations: Sequence[Sequence[int]]
+) -> list[_Edge]:
+    """Pair every declared out-edge with its matching in-edge.  Repeated
+    edges pair by occurrence order (k-th ``s`` in ``sources[d]`` matches the
+    k-th ``d`` in ``destinations[s]``); a declaration present on one side
+    only is ``ERR_TOPOLOGY`` — both endpoints of an edge must agree, exactly
+    as ``MPI_Dist_graph_create_adjacent`` requires."""
+
+    taken: dict[tuple[int, int], int] = {}
+    edges: list[_Edge] = []
+    for s, dsts in enumerate(destinations):
+        for out_slot, d in enumerate(dsts):
+            if d == PROC_NULL:
+                continue
+            occurrence = taken.get((s, d), 0)
+            taken[(s, d)] = occurrence + 1
+            matches = [j for j, x in enumerate(sources[d]) if x == s]
+            errors.check(
+                occurrence < len(matches),
+                errors.ErrorClass.ERR_TOPOLOGY,
+                f"edge {s}->{d} declared in destinations[{s}] but rank {d} "
+                f"lists only {len(matches)} in-edges from {s}",
+            )
+            edges.append(_Edge(s, d, out_slot, matches[occurrence]))
+    # the reverse check: every declared in-edge was produced by an out-edge
+    for d, srcs in enumerate(sources):
+        for s in srcs:
+            if s == PROC_NULL:
+                continue
+            declared = sum(1 for x in destinations[s] if x == d)
+            listed = sum(1 for x in srcs if x == s)
+            errors.check(
+                declared == listed,
+                errors.ErrorClass.ERR_TOPOLOGY,
+                f"rank {d} lists {listed} in-edges from {s} but rank {s} "
+                f"declares {declared} out-edges to {d}",
+            )
+    return edges
+
+
+class _NeighborComm(Communicator):
+    """Shared engine: a communicator with a neighbor structure.
+
+    Subclasses populate ``_sources`` / ``_destinations`` (per-rank ordered
+    neighbor slot lists, :data:`PROC_NULL` allowed) and the derived matching
+    ``_rounds``; the neighborhood collectives below are generic over them.
+    """
+
+    _sources: tuple[tuple[int, ...], ...]
+    _destinations: tuple[tuple[int, ...], ...]
+    _rounds: list[list[_Edge]]
+
+    # -- degrees ------------------------------------------------------------
+
+    def indegree(self, rank: int | None = None) -> int:
+        """Neighbor slots on the receive side (``PROC_NULL`` slots count:
+        the buffer keeps their position, as in MPI cart neighborhoods)."""
+
+        if rank is None:
+            return max(len(s) for s in self._sources)
+        return len(self._sources[rank])
+
+    def outdegree(self, rank: int | None = None) -> int:
+        if rank is None:
+            return max(len(d) for d in self._destinations)
+        return len(self._destinations[rank])
+
+    # -- the exchange kernel -------------------------------------------------
+
+    def _round_tables(self):
+        n = self.size()
+        tables = []
+        for round_edges in self._rounds:
+            out_slot = np.full((n,), -1, np.int32)
+            in_slot = np.full((n,), -1, np.int32)
+            perm = []
+            for e in round_edges:
+                out_slot[e.src] = e.out_slot
+                in_slot[e.dst] = e.in_slot
+                perm.append((e.src, e.dst))
+            tables.append((out_slot, in_slot, tuple(perm)))
+        return tables
+
+    def _exchange(self, x: jax.Array, *, alltoall: bool) -> jax.Array:
+        """One neighborhood exchange: per matching round, each rank selects
+        its block (slot slice for alltoall, the whole buffer for allgather),
+        one ``collective-permute`` moves the round's edges, and receivers
+        scatter the arrival into the in-slot.  Non-participants are masked
+        by the ``-1`` table entries; ``PROC_NULL`` slots stay zero."""
+
+        x = jnp.asarray(x)
+        d_in = self.indegree()
+        if alltoall:
+            errors.check(
+                x.ndim >= 1 and x.shape[0] == self.outdegree(),
+                errors.ErrorClass.ERR_COUNT,
+                f"neighbor_alltoall buffer needs leading dim {self.outdegree()}"
+                f" (max outdegree), got {tuple(x.shape)}",
+            )
+            block_shape = x.shape[1:]
+        else:
+            block_shape = x.shape
+        out = jnp.zeros((d_in,) + tuple(block_shape), x.dtype)
+        if not self._rounds:
+            return out
+        rank = self.rank()
+        axes = self.axis_names if len(self.axis_names) > 1 else self.axis_names[0]
+        for out_slot, in_slot, perm in self._round_tables():
+            if alltoall:
+                osl = jnp.asarray(out_slot)[rank]
+                send = lax.dynamic_index_in_dim(
+                    x, jnp.maximum(osl, 0), axis=0, keepdims=False
+                )
+            else:
+                send = x
+            arrived = lax.ppermute(send, axes, list(perm))
+            isl = jnp.asarray(in_slot)[rank]
+            safe = jnp.maximum(isl, 0)
+            cur = lax.dynamic_index_in_dim(out, safe, axis=0, keepdims=False)
+            out = lax.dynamic_update_index_in_dim(
+                out, jnp.where(isl >= 0, arrived, cur), safe, axis=0
+            )
+        return out
+
+    # -- neighborhood collectives (TraceFutures, C3 engine) ------------------
+
+    def neighbor_allgather(self, value: Any) -> TraceFuture:
+        """``MPI_Neighbor_allgather``: each rank receives its in-neighbors'
+        buffers, stacked ``(max_indegree, *shape)`` in neighbor-slot order
+        (zeros at ``PROC_NULL`` / absent slots).  Lazily forced — a
+        :class:`TraceFuture` chaining into ``then()``/``when_all``."""
+
+        tool.pvar_count("neighbor_allgather")
+        return TraceFuture(lambda: self._exchange(value, alltoall=False))
+
+    def neighbor_alltoall(self, value: Any) -> TraceFuture:
+        """``MPI_Neighbor_alltoall``: block ``k`` of ``value`` (leading dim
+        = max outdegree) goes to out-neighbor ``k``; the result's slot ``j``
+        holds the block sent by in-neighbor ``j``."""
+
+        tool.pvar_count("neighbor_alltoall")
+        return TraceFuture(lambda: self._exchange(value, alltoall=True))
+
+    def neighbor_alltoallv(
+        self, value: Any, send_counts: Sequence[Sequence[int]] | Sequence[int]
+    ) -> TraceFuture:
+        """``MPI_Neighbor_alltoallv`` with trace-time static counts.
+
+        ``send_counts`` is per-rank per-out-slot (``counts[rank][slot]``), or
+        one shared per-slot row applied to every rank.  Buffers are padded
+        blocks ``(max_outdegree, max_count, ...)``; the future resolves to
+        ``(blocks, recv_counts)`` where ``blocks`` is the padded
+        ``(max_indegree, max_count, ...)`` receive buffer (entries beyond
+        the valid count zeroed) and ``recv_counts`` the per-slot valid
+        counts for *this* rank as a trace-level vector — raggedness via
+        static counts, the SPMD idiom (see ``collectives.alltoallv``).
+        """
+
+        tool.pvar_count("neighbor_alltoallv")
+        n, d_out, d_in = self.size(), self.outdegree(), self.indegree()
+        counts = np.asarray(send_counts, dtype=np.int64)
+        if counts.ndim == 1:
+            counts = np.tile(counts, (n, 1))
+        errors.check(
+            counts.shape == (n, d_out),
+            errors.ErrorClass.ERR_COUNT,
+            f"send_counts must be ({n}, {d_out}) (ranks x max outdegree), "
+            f"got {counts.shape}",
+        )
+        errors.check(
+            bool((counts >= 0).all()),
+            errors.ErrorClass.ERR_COUNT,
+            "send_counts must be non-negative",
+        )
+        cmax = int(counts.max()) if counts.size else 0
+        # receive counts: slot j of rank d gets the count its in-edge's
+        # source declared for the matching out-slot
+        recv = np.zeros((n, d_in), np.int32)
+        for round_edges in self._rounds:
+            for e in round_edges:
+                recv[e.dst, e.in_slot] = counts[e.src, e.out_slot]
+
+        def impl():
+            x = jnp.asarray(value)
+            errors.check(
+                x.ndim >= 2 and x.shape[:2] == (d_out, cmax),
+                errors.ErrorClass.ERR_TRUNCATE,
+                f"neighbor_alltoallv buffer must be padded to "
+                f"({d_out}, {cmax}, ...), got {tuple(x.shape)}",
+            )
+            blocks = self._exchange(x, alltoall=True)
+            rc = jnp.asarray(recv)[self.rank()]                  # (d_in,)
+            valid = jnp.arange(cmax)[None, :] < rc[:, None]      # (d_in, cmax)
+            mask = valid.reshape(valid.shape + (1,) * (blocks.ndim - 2))
+            return jnp.where(mask, blocks, jnp.zeros_like(blocks)), rc
+
+        return TraceFuture(impl)
+
+    # -- persistent neighborhood collectives (MPI 4.0 §6.12 pattern) ---------
+
+    def neighbor_alltoall_init(self, example: Any) -> PersistentCollective:
+        """Persistent ``neighbor_alltoall`` (``MPI_Neighbor_alltoall_init``):
+        AOT-lower one exchange per dtype bucket of ``example``'s datatype;
+        ``start(value)`` re-fires the compiled executables with zero
+        re-tracing.  Aggregate buckets are split into ``max_outdegree``
+        equal chunks (``ERR_COUNT`` if a bucket does not divide); the
+        reassembled aggregate is only returned when in/out degrees match
+        (the exchange is shape-preserving then), raw buckets otherwise.
+        """
+
+        tool.pvar_count("neighbor_alltoall_init")
+        d_out, d_in = self.outdegree(), self.indegree()
+
+        def fire(b):
+            return self.neighbor_alltoall(b).get()
+
+        if isinstance(example, jax.ShapeDtypeStruct) or isinstance(
+            example, (jax.Array, np.ndarray)
+        ):
+            aval = (
+                example
+                if isinstance(example, jax.ShapeDtypeStruct)
+                else jax.ShapeDtypeStruct(np.shape(example), example.dtype)
+            )
+            jitted = self.spmd(fire)
+            return PersistentCollective(
+                "neighbor_alltoall", None, [PersistentRequest(jitted, (aval,))]
+            )
+        dt = datatypes.datatype_of(example)
+        requests = []
+        for sds in dt.shape_dtype_structs():
+            extent = int(np.prod(sds.shape))
+            errors.check(
+                extent % d_out == 0,
+                errors.ErrorClass.ERR_COUNT,
+                f"packed bucket extent {extent} not divisible by the "
+                f"outdegree {d_out}",
+            )
+
+            def bucket_fire(b, _shape=sds.shape):
+                out = fire(b.reshape((d_out, -1) + _shape[1:]))
+                return out.reshape((-1,) + _shape[1:])
+
+            jitted = self.spmd(bucket_fire)
+            requests.append(PersistentRequest(jitted, (sds,)))
+        return PersistentCollective(
+            "neighbor_alltoall",
+            dt,
+            requests,
+            unpackable=(d_in == d_out),
+            signature=argument_signature(example),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Cartesian topology
+# ---------------------------------------------------------------------------
+
+
+class CartComm(_NeighborComm):
+    """``MPI_Cart_create`` result: a communicator whose ranks live on a
+    ``dims`` grid with per-dim periodicity.
+
+    The neighbor structure (for the neighborhood collectives) follows the
+    standard's cart convention: ``2·ndims`` slots ordered (dim 0 −, dim 0 +,
+    dim 1 −, …); ``PROC_NULL`` slots at non-periodic boundaries stay in the
+    buffer and read as zeros.  Exchanges lower to one *axis-local* permute
+    per (dim, direction) — subgroup ``collective-permute``\\ s, independent
+    of world size.
+    """
+
+    def __init__(
+        self,
+        mesh,
+        axis_names,
+        *,
+        dims: Sequence[int],
+        periods: Sequence[bool],
+        managed: bool = False,
+        tag: str = "",
+    ):
+        super().__init__(mesh, axis_names, managed=managed, tag=tag)
+        self.dims = tuple(int(d) for d in dims)
+        self.periods = tuple(bool(p) for p in periods)
+        errors.check(
+            len(self.dims) == len(self.periods) == len(self.axis_names),
+            errors.ErrorClass.ERR_DIMS,
+            f"dims {self.dims}, periods {self.periods} and axes "
+            f"{self.axis_names} must have equal length",
+        )
+        for d, a in zip(self.dims, self.axis_names):
+            errors.check(
+                mesh.shape[a] == d,
+                errors.ErrorClass.ERR_DIMS,
+                f"cart dim {d} does not match mesh axis {a!r} "
+                f"of size {mesh.shape[a]}",
+            )
+        n = self.size()
+        # per-dim shift tables are rank-independent: compute once per dim
+        shifts = [
+            cart_shift_tables(self.dims, self.periods, dim, 1)
+            for dim in range(len(self.dims))
+        ]
+        srcs, dsts = [], []
+        for r in range(n):
+            s_r, d_r = [], []
+            for sources, destinations in shifts:
+                # slot order per MPI: (dim −, dim +): the − slot receives
+                # from the lower neighbor, i.e. the +1 shift's source
+                s_r += [sources[r], destinations[r]]
+                d_r += [sources[r], destinations[r]]
+            srcs.append(tuple(s_r))
+            dsts.append(tuple(d_r))
+        self._sources = tuple(srcs)
+        self._destinations = tuple(dsts)
+        # Cart edges carry their slot pairing explicitly: the out-slot 2d
+        # (−) send lands in the receiver's + slot (2d+1) and vice versa.
+        # The generic occurrence-order pairing of _build_edges would get
+        # this wrong exactly when both slots of a dim name the same rank
+        # (size-2 or size-1 periodic dims), desynchronising the
+        # neighbor_alltoallv recv-count table from the physical exchange.
+        edges = []
+        for dim, (sources, destinations) in enumerate(shifts):
+            for r in range(n):
+                if destinations[r] != PROC_NULL:
+                    edges.append(_Edge(r, destinations[r], 2 * dim + 1, 2 * dim))
+                if sources[r] != PROC_NULL:
+                    edges.append(_Edge(r, sources[r], 2 * dim, 2 * dim + 1))
+        self._rounds = _matching_rounds(edges)
+
+    # -- cart queries -------------------------------------------------------
+
+    @property
+    def ndims(self) -> int:
+        """``MPI_Cartdim_get``."""
+
+        return len(self.dims)
+
+    def cart_coords(self, rank: int) -> tuple[int, ...]:
+        """``MPI_Cart_coords``."""
+
+        return cart_coords_of(self.dims, rank)
+
+    def cart_rank(self, coords: Sequence[int]) -> int:
+        """``MPI_Cart_rank`` (periodic dims wrap)."""
+
+        return cart_rank_of(self.dims, self.periods, coords)
+
+    def cart_shift(self, dim: int, disp: int = 1) -> CartShift:
+        """``MPI_Cart_shift``: source/destination tables plus the static
+        permutations that move data by ``disp`` along ``dim``."""
+
+        sources, destinations = cart_shift_tables(self.dims, self.periods, dim, disp)
+        perm = tuple(
+            (r, d) for r, d in enumerate(destinations) if d != PROC_NULL
+        )
+        size = self.dims[dim]
+        if self.periods[dim]:
+            axis_perm = tuple((i, (i + disp) % size) for i in range(size))
+        else:
+            axis_perm = tuple(
+                (i, i + disp) for i in range(size) if 0 <= i + disp < size
+            )
+        return CartShift(
+            dim=dim,
+            disp=disp,
+            sources=sources,
+            destinations=destinations,
+            perm=perm,
+            axis_name=self.axis_names[dim],
+            axis_perm=axis_perm,
+        )
+
+    def shift_exchange(self, value: Any, dim: int, disp: int = 1) -> TraceFuture:
+        """``cart_shift`` + sendrecv in one call: every rank's ``value``
+        moves ``disp`` steps along ``dim``; ranks whose source is
+        :data:`PROC_NULL` receive zeros.  Lowers to a single axis-local
+        ``collective-permute``; returns a :class:`TraceFuture` so the
+        exchange can be overlapped (issue, compute, ``get()``)."""
+
+        shift = self.cart_shift(dim, disp)
+        return TraceFuture(
+            lambda: lax.ppermute(
+                jnp.asarray(value), shift.axis_name, list(shift.axis_perm)
+            )
+        )
+
+    def cart_sub(self, remain_dims: Sequence[bool]) -> "CartComm":
+        """``MPI_Cart_sub``: keep the dims flagged in ``remain_dims``.  The
+        result spans the retained mesh axes; as with
+        :meth:`~repro.core.communicator.Communicator.split`, the dropped
+        axes become color axes and ``group(**coords)`` selects one
+        sub-grid's process set (derived from the parent group — the group
+        algebra keeps every construction path group-routed)."""
+
+        remain = tuple(bool(x) for x in remain_dims)
+        errors.check(
+            len(remain) == self.ndims,
+            errors.ErrorClass.ERR_DIMS,
+            f"remain_dims has {len(remain)} entries for {self.ndims} dims",
+        )
+        errors.check(
+            any(remain),
+            errors.ErrorClass.ERR_DIMS,
+            "cart_sub must retain at least one dimension",
+        )
+        keep = [i for i, k in enumerate(remain) if k]
+        return CartComm(
+            self.mesh,
+            tuple(self.axis_names[i] for i in keep),
+            dims=tuple(self.dims[i] for i in keep),
+            periods=tuple(self.periods[i] for i in keep),
+            managed=False,
+            tag=self.tag,
+        )
+
+    # -- cart-specialised neighborhood exchange ------------------------------
+
+    def _exchange(self, x: jax.Array, *, alltoall: bool) -> jax.Array:
+        """Cart override of the generic engine: one axis-local permute per
+        (dim, direction) instead of flat-rank rounds — ``2·ndims`` subgroup
+        ``collective-permute``\\ s, the canonical halo-exchange lowering."""
+
+        x = jnp.asarray(x)
+        degree = 2 * self.ndims
+        if alltoall:
+            errors.check(
+                x.ndim >= 1 and x.shape[0] == degree,
+                errors.ErrorClass.ERR_COUNT,
+                f"cart neighbor_alltoall buffer needs leading dim {degree} "
+                f"(2*ndims), got {tuple(x.shape)}",
+            )
+        blocks = []
+        for dim in range(self.ndims):
+            plus = self.cart_shift(dim, 1)
+            minus = self.cart_shift(dim, -1)
+            if alltoall:
+                # send slot 2d to the − neighbor, slot 2d+1 to the +; the
+                # arrival fills the receiver's opposite slot
+                from_minus = lax.ppermute(
+                    x[2 * dim + 1], plus.axis_name, list(plus.axis_perm)
+                )
+                from_plus = lax.ppermute(
+                    x[2 * dim], minus.axis_name, list(minus.axis_perm)
+                )
+            else:
+                from_minus = lax.ppermute(x, plus.axis_name, list(plus.axis_perm))
+                from_plus = lax.ppermute(x, minus.axis_name, list(minus.axis_perm))
+            blocks += [from_minus, from_plus]
+        return jnp.stack(blocks)
+
+    def __repr__(self):
+        return (
+            f"CartComm(dims={self.dims}, periods={self.periods}, "
+            f"axes={self.axis_names}, tag={self.tag!r})"
+        )
+
+
+# ---------------------------------------------------------------------------
+# distributed graph topology
+# ---------------------------------------------------------------------------
+
+
+class DistGraphComm(_NeighborComm):
+    """``MPI_Dist_graph_create_adjacent`` result: a communicator with an
+    explicit (possibly weighted, possibly asymmetric) neighbor graph.
+
+    The SPMD program needs the whole pattern, so adjacency is declared for
+    every rank at once (``sources[r]`` / ``destinations[r]``) instead of
+    rank-locally; both endpoints of every edge must agree, exactly as the
+    standard requires of the adjacent constructor.  In/out degrees may
+    differ per rank; buffers pad to the maxima (zeros in absent slots).
+    """
+
+    def __init__(
+        self,
+        mesh,
+        axis_names,
+        *,
+        sources: Sequence[Sequence[int]],
+        destinations: Sequence[Sequence[int]],
+        source_weights: Sequence[Sequence[float]] | None = None,
+        dest_weights: Sequence[Sequence[float]] | None = None,
+        managed: bool = False,
+        tag: str = "",
+    ):
+        super().__init__(mesh, axis_names, managed=managed, tag=tag)
+        n = self.size()
+        errors.check(
+            len(sources) == n and len(destinations) == n,
+            errors.ErrorClass.ERR_TOPOLOGY,
+            f"adjacency must cover all {n} ranks "
+            f"(got {len(sources)} source rows, {len(destinations)} destination rows)",
+        )
+        for name, rows in (("sources", sources), ("destinations", destinations)):
+            for r, row in enumerate(rows):
+                for x in row:
+                    errors.check(
+                        0 <= int(x) < n or int(x) == PROC_NULL,
+                        errors.ErrorClass.ERR_RANK,
+                        f"{name}[{r}] names rank {x}; valid: [0, {n}) or "
+                        f"PROC_NULL ({PROC_NULL}) for a placeholder slot",
+                    )
+        self._sources = tuple(tuple(int(x) for x in row) for row in sources)
+        self._destinations = tuple(tuple(int(x) for x in row) for row in destinations)
+
+        def _weights(weights, rows, kind):
+            if weights is None:
+                return tuple(tuple(1.0 for _ in row) for row in rows)
+            errors.check(
+                len(weights) == n
+                and all(len(w) == len(r) for w, r in zip(weights, rows)),
+                errors.ErrorClass.ERR_ARG,
+                f"{kind} weights must align with the {kind} lists",
+            )
+            return tuple(tuple(float(x) for x in row) for row in weights)
+
+        self.source_weights = _weights(source_weights, self._sources, "source")
+        self.dest_weights = _weights(dest_weights, self._destinations, "destination")
+        self._rounds = _matching_rounds(
+            _build_edges(self._sources, self._destinations)
+        )
+
+    def dist_graph_neighbors_count(self, rank: int) -> tuple[int, int]:
+        """``MPI_Dist_graph_neighbors_count`` → (indegree, outdegree)."""
+
+        return len(self._sources[rank]), len(self._destinations[rank])
+
+    def dist_graph_neighbors(self, rank: int):
+        """``MPI_Dist_graph_neighbors`` → (sources, source_weights,
+        destinations, dest_weights) for ``rank``."""
+
+        return (
+            self._sources[rank],
+            self.source_weights[rank],
+            self._destinations[rank],
+            self.dest_weights[rank],
+        )
+
+    def __repr__(self):
+        return (
+            f"DistGraphComm(size={self.size()}, "
+            f"max_in={self.indegree()}, max_out={self.outdegree()}, "
+            f"tag={self.tag!r})"
+        )
+
+
+# ---------------------------------------------------------------------------
+# constructors
+# ---------------------------------------------------------------------------
+
+
+def cart_create(
+    comm_or_group: Communicator | Group,
+    dims: Sequence[int],
+    periods: Sequence[bool] | None = None,
+    *,
+    reorder: bool = False,
+    axis_names: Sequence[str] | None = None,
+    session=None,
+    tag: str | None = None,
+) -> CartComm:
+    """``MPI_Cart_create``: fold a communicator's group onto a grid.
+
+    Routed through the group algebra: the leading ``prod(dims)`` members of
+    the parent group are carved out with ``incl`` (ranks beyond get no
+    membership — MPI returns ``MPI_COMM_NULL`` for them), the grid is
+    registered as the session process set ``repro://cart/<dims>``, and the
+    communicator is built by :meth:`Communicator.from_group` — the single
+    canonical constructor.
+
+    ``reorder=True`` is accepted for signature fidelity but performs no
+    renumbering: jax binds logical ranks to devices through the mesh, so a
+    reorder could only relabel ranks, never migrate their data (DESIGN.md's
+    honesty note).
+    """
+
+    tool.pvar_count("cart_create")
+    group = (
+        comm_or_group.group()
+        if isinstance(comm_or_group, Communicator)
+        else comm_or_group
+    )
+    errors.check(
+        isinstance(group, Group),
+        errors.ErrorClass.ERR_GROUP,
+        f"cart_create needs a Communicator or Group, got {type(comm_or_group).__name__}",
+    )
+    dims = tuple(int(d) for d in dims)
+    errors.check(
+        len(dims) > 0 and all(d > 0 for d in dims),
+        errors.ErrorClass.ERR_DIMS,
+        f"cart dims must be positive, got {dims}",
+    )
+    periods = (
+        tuple(bool(p) for p in periods)
+        if periods is not None
+        else (False,) * len(dims)
+    )
+    errors.check(
+        len(periods) == len(dims),
+        errors.ErrorClass.ERR_DIMS,
+        f"{len(periods)} periods for {len(dims)} dims",
+    )
+    n = math.prod(dims)
+    errors.check(
+        n <= group.size(),
+        errors.ErrorClass.ERR_DIMS,
+        f"cart grid {dims} needs {n} members, group has {group.size()}",
+    )
+    sub = group.incl(range(n))
+    dims_str = "x".join(str(d) for d in dims)
+    tag = tag if tag is not None else f"{CART_PSET_PREFIX}{dims_str}"
+    sess = session if session is not None else default_session()
+    # the default tag is keyed on dims alone: re-registering the SAME grid
+    # is idempotent (trainer re-init, elastic re-create), but a different
+    # group under the same name would silently clobber the first cart's
+    # process set — require an explicit tag for that
+    if tag in sess.psets():
+        errors.check(
+            sess.pset(tag) == tuple(sub.devices),
+            errors.ErrorClass.ERR_ARG,
+            f"process set {tag!r} already names a different device grid; "
+            f"pass an explicit tag= to register a second {dims_str} cart",
+        )
+    sess.register_pset(tag, sub)
+    if axis_names is None:
+        axis_names = tuple(f"cart{i}" for i in range(len(dims)))
+    axis_names = tuple(axis_names)
+    base = Communicator.from_group(sub, tag=tag, shape=dims, axis_names=axis_names)
+    return CartComm(
+        base.mesh, axis_names, dims=dims, periods=periods, managed=True, tag=tag
+    )
+
+
+def dist_graph_create_adjacent(
+    comm: Communicator,
+    sources: Sequence[Sequence[int]],
+    destinations: Sequence[Sequence[int]],
+    *,
+    source_weights: Sequence[Sequence[float]] | None = None,
+    dest_weights: Sequence[Sequence[float]] | None = None,
+    reorder: bool = False,
+) -> DistGraphComm:
+    """``MPI_Dist_graph_create_adjacent`` over an existing communicator's
+    mesh (``reorder=False`` semantics: ranks keep their identity; the
+    ``reorder=True`` honesty note of :func:`cart_create` applies)."""
+
+    tool.pvar_count("dist_graph_create")
+    return DistGraphComm(
+        comm.mesh,
+        comm.axis_names,
+        sources=sources,
+        destinations=destinations,
+        source_weights=source_weights,
+        dest_weights=dest_weights,
+        managed=False,
+        tag=comm.tag,
+    )
+
+
+# -- method facade (paper style: comm.cart_create(...)) -----------------------
+
+Communicator.cart_create = cart_create
+Communicator.dist_graph_create_adjacent = dist_graph_create_adjacent

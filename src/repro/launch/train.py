@@ -39,6 +39,19 @@ def main(argv=None):
         help="checkpoint writes ride the I/O request engine and overlap the "
         "next persistent step (--no-async-checkpoint joins each save)",
     )
+    ap.add_argument(
+        "--pipeline-stages",
+        type=int,
+        default=0,
+        help="fold the process set onto a (data, stage) cart topology and "
+        "pipeline the layer stack over the stage axis (0/1 = GSPMD step)",
+    )
+    ap.add_argument(
+        "--pipeline-microbatches",
+        type=int,
+        default=2,
+        help="microbatches streamed through the pipeline per step",
+    )
     ap.add_argument("--inject-failure-at", type=int, default=None)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--out", default=None, help="write metrics history JSON here")
@@ -66,6 +79,8 @@ def main(argv=None):
         checkpoint_every=args.checkpoint_every or max(1, args.steps // 2),
         async_checkpoint=args.async_checkpoint,
         log_every=args.log_every,
+        pipeline_stages=args.pipeline_stages,
+        pipeline_microbatches=args.pipeline_microbatches,
     )
     injector = (
         FaultInjector(fail_at_steps=(args.inject_failure_at,))

@@ -12,6 +12,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core import errors
 from repro.models import attention as attn
 from repro.models import common, mlp
 from repro.models.attention import KVCache, MLACache
@@ -272,6 +273,72 @@ def lm_loss(params, batch: dict, cfg, pcfg, mesh=None) -> tuple[jax.Array, dict]
         loss = loss + 1e-2 * aux["load_balance_loss"] + 1e-3 * aux["router_z_loss"]
     metrics = {"loss": loss, **{k: jnp.asarray(v) for k, v in aux.items()}}
     return loss, metrics
+
+
+# -- pipeline-parallel stage decomposition (MPI 4.0 ch. 8 fabric) -------------
+
+
+def pipeline_stage_fns(cfg, pcfg):
+    """Decompose the LM into the three pieces the pipeline schedule
+    (:func:`repro.core.overlap.pipeline_spmd`) streams microbatches through:
+    ``embed_mb`` (stage-0 injection), ``apply_units`` (each stage's local
+    slice of the scanned layer stack), ``loss_mb`` (last-stage head + CE).
+
+    Meant to run *inside* a ``shard_map`` region whose mesh carries the
+    pipeline ``stage`` axis, so the model-internal sharding constraints are
+    neutralised (``data_axes=()`` — constraints are the ambient-mesh GSPMD
+    idiom; inside shard_map the partitioning is explicit).  Requires the
+    fully-scanned layout (``first_dense_layers == 0``) — the stage split is
+    a slice of the stacked ``params['layers']`` leading dim.
+    """
+
+    errors.check(
+        cfg.first_dense_layers == 0,
+        errors.ErrorClass.ERR_TOPOLOGY,
+        "pipeline stages require a fully-scanned layer stack "
+        f"(first_dense_layers={cfg.first_dense_layers})",
+    )
+    errors.check(
+        cfg.family in ("dense", "moe"),
+        errors.ErrorClass.ERR_TOPOLOGY,
+        f"pipeline stage decomposition supports dense/moe LMs, not {cfg.family!r}",
+    )
+    local_pcfg = dataclasses.replace(pcfg, data_axes=())
+    plan = _unit_plan(cfg)
+
+    def embed_mb(params, tokens_mb):
+        """(mb, T) tokens → (mb, T, D) stage-0 activations."""
+
+        return _embed(params, tokens_mb, cfg)
+
+    def apply_units(layers_local, x):
+        """Apply this stage's local scanned units to the in-flight
+        activation (positions are full-sequence — microbatches split the
+        batch dim, never the sequence)."""
+
+        positions = jnp.arange(x.shape[1])
+
+        def unit(x, unit_params):
+            for name, kind, window in plan:
+                x, _, _ = _block_full(
+                    unit_params[name], x, cfg, local_pcfg, kind=kind,
+                    sliding_window=window, positions=positions, prefix_len=None,
+                    mesh=None, collect_cache=False,
+                )
+            return x, {}
+
+        x, _ = jax.lax.scan(_maybe_remat(unit, local_pcfg), x, layers_local)
+        return x
+
+    def loss_mb(params, x, tokens_mb):
+        """Last-stage head + token-mean CE for one microbatch."""
+
+        logits = _head(params, x, cfg, None)
+        return common.cross_entropy(
+            logits[:, :-1], tokens_mb[:, 1:], softcap_val=cfg.final_logit_softcap
+        )
+
+    return embed_mb, apply_units, loss_mb
 
 
 # -- caches -------------------------------------------------------------------

@@ -101,10 +101,19 @@ class StragglerPolicy:
 
 @dataclasses.dataclass
 class StepGuard:
-    """Times one step, applies straggler policy, surfaces failures."""
+    """Times one step, applies straggler policy, surfaces failures.
+
+    ``clock`` is the injectable time source (``time.perf_counter`` in
+    production).  Tests inject a fake clock advanced by the step function
+    itself, so straggler behaviour is asserted deterministically — no
+    wall-clock sleeps, no timing margins for a loaded CI machine to blow
+    through.  :class:`StragglerPolicy` itself is already clock-free (it
+    only ever sees durations).
+    """
 
     straggler: StragglerPolicy
     injector: FaultInjector | None = None
+    clock: Callable[[], float] = time.perf_counter
 
     def run(
         self,
@@ -132,11 +141,11 @@ class StepGuard:
         attempts = 0
         while True:
             attempts += 1
-            t0 = time.perf_counter()
+            t0 = self.clock()
             if self.injector is not None:
                 self.injector.check(step)
             out = fn()
-            dt = time.perf_counter() - t0
+            dt = self.clock() - t0
             if exempt:
                 return out, {"duration_s": dt, "attempts": attempts, "straggled": False}
             straggled = self.straggler.is_straggler(dt)

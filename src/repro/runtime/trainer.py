@@ -27,6 +27,13 @@ buffers cannot be re-dispatched, the straggler policy runs with
 (checkpoint restore), the production behaviour for donated step buffers.
 ``TrainerConfig(persistent=False)`` restores the plain-``jit`` path.
 
+**Pipeline-parallel mode** (``TrainerConfig.pipeline_stages > 1``): the
+trainer re-forms its process set as a ``(data, stage)`` Cartesian topology
+(``cart_create`` — MPI 4.0 ch. 8) and the step streams microbatches through
+the stages with :func:`repro.core.overlap.pipeline_spmd`; every stage
+boundary is one ``cart_shift(+1)`` axis-local ``collective-permute``.  The
+pipeline step rides the same persistent engine — still exactly one trace.
+
 **Async checkpointing on the same engine** (default): ``ckpt.save`` gathers
 device state synchronously (donation-safe) and runs the file writes as I/O
 requests overlapping the next persistent step; the single manifest commit
@@ -86,6 +93,12 @@ class TrainerConfig:
     # checkpoint writes ride the I/O request engine and overlap the next
     # step; False joins each save before the next step starts
     async_checkpoint: bool = True
+    # pipeline parallelism over a Cartesian 'stage' axis (MPI 4.0 ch. 8):
+    # > 1 re-forms the communicator as cart_create((data, stages)) and the
+    # step streams microbatches through cart_shift(+1) stage boundaries
+    # (repro.core.overlap.pipeline_spmd).  0/1 = the GSPMD step.
+    pipeline_stages: int = 0
+    pipeline_microbatches: int = 2
 
 
 def make_train_step(cfg: ModelConfig, pcfg: ParallelConfig, tcfg: TrainerConfig, opt: AdamW):
@@ -109,6 +122,92 @@ def make_train_step(cfg: ModelConfig, pcfg: ParallelConfig, tcfg: TrainerConfig,
     return train_step
 
 
+def _pipeline_param_specs(params, stages: int):
+    """Pipeline placement: the stacked ``layers`` leading (unit) dim is
+    sharded over the cart ``stage`` axis — each stage holds its slice of
+    the layer stack; embedding/head/norms replicate."""
+
+    for leaf in jax.tree.leaves(params["layers"]):
+        errors.check(
+            np.shape(leaf)[0] % stages == 0,
+            errors.ErrorClass.ERR_DIMS,
+            f"{np.shape(leaf)[0]} scanned units do not split over "
+            f"{stages} pipeline stages",
+        )
+    specs = jax.tree.map(lambda _: P(), params)
+    return {**specs, "layers": jax.tree.map(lambda _: P("stage"), params["layers"])}
+
+
+def make_pipeline_train_step(
+    cfg: ModelConfig, pcfg: ParallelConfig, tcfg: TrainerConfig, opt: AdamW, cart
+):
+    """Pipeline-parallel train step over a ``(data, stage)`` Cartesian
+    topology (MPI 4.0 ch. 8 as the pipeline fabric).
+
+    The loss runs under ``shard_map``: ``params['layers']`` is sharded over
+    the ``stage`` axis, the batch over ``data``, and
+    :func:`repro.core.overlap.pipeline_spmd` streams
+    ``pipeline_microbatches`` through the stages — every stage boundary is
+    one ``cart_shift(+1)`` axis-local ``collective-permute``, never a dense
+    world collective.  AD differentiates through the schedule (the permute
+    transposes to the reverse shift), so data-parallel gradient reduction
+    over ``data`` and stage-local layer gradients emerge from the shard_map
+    transpose without further plumbing.  The whole step still compiles once
+    into the persistent engine: ``trace:train_step`` stays at 1.
+    """
+
+    from repro.core import _compat
+    from repro.core import overlap as core_overlap
+    from repro.models import transformer
+
+    embed_mb, apply_units, loss_mb = transformer.pipeline_stage_fns(cfg, pcfg)
+    m = max(1, tcfg.pipeline_microbatches)
+    mesh = cart.mesh
+
+    def spmd_loss(params, batch):
+        tokens = batch["tokens"]                     # local (b_loc, T)
+        errors.check(
+            tokens.shape[0] % m == 0,
+            errors.ErrorClass.ERR_COUNT,
+            f"local batch {tokens.shape[0]} does not split into {m} microbatches",
+        )
+        mb = tokens.shape[0] // m
+        toks = tokens.reshape(m, mb, tokens.shape[1])
+        losses = core_overlap.pipeline_spmd(
+            cart,
+            stage_dim=1,
+            num_microbatches=m,
+            inject=lambda i: embed_mb(params, toks[i]),
+            stage_fn=lambda state, t: apply_units(params["layers"], state),
+            extract=lambda i, state, is_last: jnp.where(
+                is_last, loss_mb(params, state, toks[i]), 0.0
+            ),
+        )
+        loss = sum(losses) / m
+        # only the last stage contributed; the stage psum replicates it and
+        # the data psum averages the per-shard token means
+        return jax.lax.psum(loss, ("data", "stage")) / cart.dims[0]
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            pspecs = _pipeline_param_specs(p, cart.dims[1])
+            bspecs = jax.tree.map(lambda _: P("data"), batch)
+            mapped = _compat.shard_map(
+                spmd_loss, mesh=mesh, in_specs=(pspecs, bspecs), out_specs=P()
+            )
+            loss = mapped(p, batch)
+            return loss, {"loss": loss}
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.clip_norm)
+        params, opt_state = opt.update(grads, opt_state, params)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        return params, opt_state, metrics
+
+    return train_step
+
+
 class Trainer:
     def __init__(
         self,
@@ -121,11 +220,28 @@ class Trainer:
         global_batch: int = 8,
         injector: FaultInjector | None = None,
         straggler: StragglerPolicy | None = None,
+        clock: Callable[[], float] | None = None,
     ):
         self.cfg, self.pcfg, self.tcfg = cfg, pcfg, tcfg
         # Session-derived communicator is the canonical handle onto the
         # training process set; a bare Mesh is wrapped unmanaged.
         self.comm = comm if isinstance(comm, Communicator) else Communicator(comm)
+        if tcfg.pipeline_stages > 1:
+            # re-form the process set as a (data, stage) Cartesian topology:
+            # stage boundaries become cart_shift(+1) neighbor exchanges
+            from repro.core import topology
+
+            s = tcfg.pipeline_stages
+            size = self.comm.group().size()
+            errors.check(
+                size % s == 0,
+                errors.ErrorClass.ERR_DIMS,
+                f"{size} devices do not fold onto {s} pipeline stages",
+            )
+            self.comm = topology.cart_create(
+                self.comm, (size // s, s), (False, False),
+                axis_names=("data", "stage"),
+            )
         self.mesh = self.comm.mesh
         self.seq_len, self.global_batch = seq_len, global_batch
         self.bundle = model_api.build(cfg)
@@ -134,7 +250,10 @@ class Trainer:
             weight_decay=tcfg.weight_decay,
             moment_dtype=pcfg.moment_dtype,
         )
-        self.guard = StepGuard(straggler or StragglerPolicy(), injector)
+        self.guard = StepGuard(
+            straggler or StragglerPolicy(), injector,
+            clock if clock is not None else time.perf_counter,
+        )
         self.ckpt = (
             CheckpointManager(
                 tcfg.checkpoint_dir,
@@ -167,7 +286,7 @@ class Trainer:
     def init_state(self):
         with self.mesh:
             params = jax.jit(self.bundle.init)(jax.random.PRNGKey(self.tcfg.seed))
-            pspecs = rules.param_specs(params, self.mesh, self.pcfg)
+            pspecs = self._param_pspecs(params)
             params = jax.device_put(params, rules.shardings(pspecs, self.mesh))
             opt_state = jax.jit(self.opt.init)(params)
             # pin the optimiser state to its declared shardings up front: the
@@ -176,8 +295,13 @@ class Trainer:
             opt_state = jax.device_put(opt_state, oshard)
         return params, opt_state
 
+    def _param_pspecs(self, params):
+        if self.tcfg.pipeline_stages > 1:
+            return _pipeline_param_specs(params, self.tcfg.pipeline_stages)
+        return rules.param_specs(params, self.mesh, self.pcfg)
+
     def _state_shardings(self, params, opt_state):
-        pspecs = rules.param_specs(params, self.mesh, self.pcfg)
+        pspecs = self._param_pspecs(params)
         pshard = rules.shardings(pspecs, self.mesh)
         oshard = jax.tree.map(
             lambda leaf: NamedSharding(self.mesh, P()),
@@ -209,7 +333,12 @@ class Trainer:
 
     def compile(self, params, opt_state):
         batch = self.pipeline.device_batch(0, self.mesh, self.pcfg)
-        base_step = make_train_step(self.cfg, self.pcfg, self.tcfg, self.opt)
+        if self.tcfg.pipeline_stages > 1:
+            base_step = make_pipeline_train_step(
+                self.cfg, self.pcfg, self.tcfg, self.opt, self.comm
+            )
+        else:
+            base_step = make_train_step(self.cfg, self.pcfg, self.tcfg, self.opt)
 
         def step_fn(params, opt_state, batch):
             # a python side effect at trace time: the pvar counts every trace

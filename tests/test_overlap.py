@@ -116,3 +116,55 @@ CODE = textwrap.dedent("""
 def test_overlap_equivalences_8dev(subproc):
     out = subproc(CODE, n=8)
     assert "OVERLAP_OK" in out
+
+
+PIPELINE_CODE = textwrap.dedent("""
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro import core as mpx
+    from repro.core import overlap, topology
+
+    comm = mpx.world()
+    S = comm.size()
+    cart = topology.cart_create(comm, (S,), (False,))
+
+    # halo exchange == the two boundary permutes, nulls read zero
+    def halo(x):
+        lo, hi = overlap.halo_exchange(cart, x + cart.rank().astype(x.dtype),
+                                       dim=0, axis=0, width=2).get()
+        return jnp.stack([lo, hi])
+    out = np.asarray(cart.spmd(halo, out_specs=P("cart0"))(
+        jnp.zeros((4,), jnp.float32))).reshape(S, 2, 2)
+    for r in range(S):
+        exp_lo = np.full((2,), r - 1.0) if r > 0 else np.zeros(2)
+        exp_hi = np.full((2,), r + 1.0) if r < S - 1 else np.zeros(2)
+        assert np.allclose(out[r, 0], exp_lo) and np.allclose(out[r, 1], exp_hi), out[r]
+
+    # pipeline schedule: stage s multiplies by (s + 1); M microbatches of a
+    # (M, B) input must each come out scaled by (S)! / product of stages,
+    # in microbatch order — proves injection, staging and drain alignment
+    M = 3
+    factor = float(np.prod(np.arange(1, S + 1)))
+    def pipe(xs):
+        stage = jax.lax.axis_index("cart0").astype(jnp.float32)
+        outs = overlap.pipeline_spmd(
+            cart, stage_dim=0, num_microbatches=M,
+            inject=lambda i: xs[i],
+            stage_fn=lambda state, t: state * (stage + 1.0),
+            extract=lambda i, state, is_last: jnp.where(is_last, state, 0.0),
+        )
+        # only the last stage holds the drained value; psum replicates it
+        return jnp.stack([jax.lax.psum(o, "cart0") for o in outs])
+    xs = jnp.arange(1, M + 1, dtype=jnp.float32)[:, None] * jnp.ones((M, 4))
+    got = np.asarray(cart.spmd(pipe)(xs))
+    exp = np.asarray(xs) * factor
+    assert np.allclose(got, exp), (got, exp)
+
+    print("PIPELINE_OK")
+""")
+
+
+def test_pipeline_schedule_and_halo_4dev(subproc):
+    out = subproc(PIPELINE_CODE, n=4)
+    assert "PIPELINE_OK" in out

@@ -1,0 +1,385 @@
+"""Virtual process topologies & neighborhood collectives (MPI 4.0 ch. 8).
+
+Host-level cart arithmetic and graph validation run in-process; exchange
+numerics (which need >1 rank) run on 8 virtual devices via ``subproc``.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.core import errors, topology
+from repro.core.topology import PROC_NULL, cart_coords_of, cart_rank_of, cart_shift_tables
+
+
+# -- host-level cart arithmetic ----------------------------------------------
+
+
+def test_cart_coords_rank_roundtrip():
+    dims = (3, 4, 2)
+    for r in range(24):
+        coords = cart_coords_of(dims, r)
+        assert cart_rank_of(dims, (False,) * 3, coords) == r
+
+
+def test_cart_rank_periodic_wrap_and_nonperiodic_error():
+    dims, periods = (4, 3), (True, False)
+    assert cart_rank_of(dims, periods, (-1, 2)) == cart_rank_of(dims, periods, (3, 2))
+    assert cart_rank_of(dims, periods, (5, 0)) == cart_rank_of(dims, periods, (1, 0))
+    with pytest.raises(errors.RankError):
+        cart_rank_of(dims, periods, (0, 3))       # non-periodic out of range
+    with pytest.raises(errors.RankError):
+        cart_coords_of(dims, 12)
+
+
+def test_cart_shift_nonperiodic_boundary_is_proc_null():
+    # the satellite case: shift(+1) on a non-periodic dim — the last rank
+    # has no destination, the first no source
+    srcs, dsts = cart_shift_tables((4,), (False,), 0, 1)
+    assert dsts == (1, 2, 3, PROC_NULL)
+    assert srcs == (PROC_NULL, 0, 1, 2)
+    # periodic closes the ring
+    srcs, dsts = cart_shift_tables((4,), (True,), 0, 1)
+    assert dsts == (1, 2, 3, 0) and srcs == (3, 0, 1, 2)
+    # multi-dim: shifting dim 1 of (2, 3) moves within each row
+    srcs, dsts = cart_shift_tables((2, 3), (False, False), 1, 1)
+    assert dsts == (1, 2, PROC_NULL, 4, 5, PROC_NULL)
+
+
+def test_cart_create_registers_pset_and_routes_through_group():
+    from repro import core as mpx
+
+    comm = mpx.world()
+    cart = topology.cart_create(comm, (1,), (True,), tag="repro://cart/t1")
+    assert isinstance(cart, topology.CartComm)
+    assert cart.managed and cart.tag == "repro://cart/t1"
+    # the grid is a session process set now
+    sess = mpx.default_session()
+    assert sess.pset_info("repro://cart/t1")["mpi_size"] == 1
+    # group membership matches the parent group's leading prod(dims) ranks
+    assert cart.group().compare(comm.group().incl([0])).name == "IDENT"
+
+
+def test_cart_create_validation():
+    from repro import core as mpx
+
+    comm = mpx.world()
+    with pytest.raises(errors.DimsError):
+        topology.cart_create(comm, (comm.size() + 1,))
+    with pytest.raises(errors.DimsError):
+        topology.cart_create(comm, (1,), (True, False))
+
+
+def test_cart_create_same_grid_is_idempotent():
+    from repro import core as mpx
+
+    comm = mpx.world()
+    c1 = topology.cart_create(comm, (1,), tag="repro://cart/idem")
+    c2 = topology.cart_create(comm, (1,), tag="repro://cart/idem")
+    assert c1.group() == c2.group()
+
+
+def test_dist_graph_accepts_proc_null_placeholders():
+    from repro import core as mpx
+
+    comm = mpx.world()
+    # a PROC_NULL placeholder slot is part of the documented buffer
+    # contract: it keeps its position and reads zeros
+    g = topology.dist_graph_create_adjacent(
+        comm, sources=[[topology.PROC_NULL, 0]], destinations=[[0, topology.PROC_NULL]]
+    )
+    assert g.indegree(0) == 2 and g.outdegree(0) == 2
+    with pytest.raises(errors.RankError):
+        topology.dist_graph_create_adjacent(comm, [[5]], [[]])
+
+
+def test_cart_shift_axis_perm_is_subgroup_pairs():
+    from repro import core as mpx
+
+    cart = topology.cart_create(mpx.world(), (1,), (True,))
+    s = cart.cart_shift(0, 1)
+    assert s.axis_name == "cart0"
+    assert s.axis_perm == ((0, 0),)      # size-1 periodic ring = self edge
+
+
+# -- graph validation (host-level, via the edge builder) ----------------------
+
+
+def test_dist_graph_edge_consistency_required():
+    # rank 0 claims an edge to 1 that rank 1 does not list
+    with pytest.raises(errors.TopologyError):
+        topology._build_edges(sources=[[], []], destinations=[[1], []])
+    # the reverse direction: rank 1 lists an in-edge 0 never declared
+    with pytest.raises(errors.TopologyError):
+        topology._build_edges(sources=[[], [0, 0]], destinations=[[1], []])
+
+
+def test_dist_graph_repeated_edges_pair_by_occurrence():
+    edges = topology._build_edges(
+        sources=[[], [0, 0]], destinations=[[1, 1], []]
+    )
+    assert [(e.out_slot, e.in_slot) for e in edges] == [(0, 0), (1, 1)]
+
+
+def test_matching_rounds_are_legal_permutes():
+    edges = topology._build_edges(
+        sources=[[2], [0], [0, 1]], destinations=[[1, 2], [2], [0]]
+    )
+    rounds = topology._matching_rounds(edges)
+    for members in rounds:
+        srcs = [e.src for e in members]
+        dsts = [e.dst for e in members]
+        assert len(set(srcs)) == len(srcs) and len(set(dsts)) == len(dsts)
+    assert sum(len(m) for m in rounds) == len(edges)
+
+
+# -- exchange numerics & group algebra (8 virtual devices) --------------------
+
+
+def test_cart_exchange_numerics_and_cart_sub(subproc):
+    code = """
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro import core as mpx
+from repro.core import topology
+
+comm = mpx.world()
+assert comm.size() == 8
+
+# null neighbors read zero at the non-periodic boundary
+cart = topology.cart_create(comm, (8,), (False,))
+def ag(x):
+    return cart.neighbor_allgather(x + 1.0 + cart.rank().astype(x.dtype)).get()
+out = np.asarray(cart.spmd(ag, out_specs=P("cart0"))(jnp.zeros((), jnp.float32)))
+out = out.reshape(8, 2)
+exp = np.array([[r if r > 0 else 0, r + 2 if r < 7 else 0] for r in range(8)], float)
+assert np.allclose(out, exp), (out, exp)
+
+# cart_sub group algebra vs Group.incl: (2, 4) grid, keep dim 1
+cart2 = topology.cart_create(comm, (2, 4), (False, True), tag="repro://cart/2x4t")
+sub = cart2.cart_sub([False, True])
+assert sub.dims == (4,) and sub.periods == (True,)
+g_row1 = sub.group(cart0=1)
+expect = cart2.group().incl([4, 5, 6, 7])
+assert g_row1.compare(expect).name == "IDENT", (g_row1.devices, expect.devices)
+# and the retained-dim shift still works on the sub communicator
+s = sub.cart_shift(0, 1)
+assert s.axis_perm == ((0, 1), (1, 2), (2, 3), (3, 0))
+
+# the default dims-keyed tag must not clobber a different group's grid
+cart_a = topology.cart_create(comm.group().incl([0, 1]), (2,))
+try:
+    topology.cart_create(comm.group().incl([2, 3]), (2,))
+    raise SystemExit("expected ERR_ARG on cart pset clobber")
+except Exception as e:
+    assert "ARG" in type(e).__name__.upper() or "ERR_ARG" in str(e), e
+topology.cart_create(comm.group().incl([2, 3]), (2,), tag="repro://cart/2b")
+
+# shift_exchange TraceFuture chains then() into the request engine
+def chain(x):
+    fut = cart.shift_exchange(x + cart.rank().astype(x.dtype), 0, 1)
+    return fut.then(lambda f: f.get() * 2.0).get()[None]
+out = np.asarray(cart.spmd(chain, out_specs=P("cart0"))(jnp.zeros((), jnp.float32)))
+exp = np.array([0.0] + [2.0 * r for r in range(7)])   # rank 0 boundary = zeros
+assert np.allclose(out, exp), out
+print("TOPOLOGY_CART_OK")
+"""
+    assert "TOPOLOGY_CART_OK" in subproc(code, n=8)
+
+
+def test_dist_graph_asymmetric_degrees_and_alltoallv_vs_dense(subproc):
+    code = """
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro import core as mpx
+from repro.core import topology
+
+comm = mpx.world()
+N = comm.size()
+
+# asymmetric in/out degrees: a fan-in star (everyone -> rank 0) plus a
+# chain edge 0 -> 1
+srcs = [[1, 2, 3, 4, 5, 6, 7], [0], [], [], [], [], [], []]
+dsts = [[1], [0], [0], [0], [0], [0], [0], [0]]
+g = topology.dist_graph_create_adjacent(comm, srcs, dsts)
+assert g.indegree(0) == 7 and g.outdegree(0) == 1
+assert g.dist_graph_neighbors_count(3) == (0, 1)
+assert g.indegree() == 7 and g.outdegree() == 1    # padded SPMD maxima
+
+def star(x):
+    r = g.rank().astype(jnp.float32)
+    return g.neighbor_alltoall((x + 1.0 + r)[None]).get()
+out = np.asarray(g.spmd(star, out_specs=P("world"))(jnp.zeros((), jnp.float32)))
+out = out.reshape(N, 7)
+assert np.allclose(out[0], [2, 3, 4, 5, 6, 7, 8]), out[0]   # rank 0 hears all
+assert np.allclose(out[1][0], 1.0)                           # rank 1 hears 0
+assert np.allclose(out[2:], 0.0)                             # others: nothing
+
+# neighbor_alltoallv numerics vs a dense alltoall reference on the full
+# graph (every rank neighbors every rank, in rank order)
+full = [list(range(N)) for _ in range(N)]
+gf = topology.dist_graph_create_adjacent(comm, full, full)
+C, D = 3, 2
+counts = [[C] * N] * N
+def nv(v):
+    blocks, rc = gf.neighbor_alltoallv(v.reshape(N, C, D), counts).get()
+    return blocks
+def dense(v):
+    return jax.lax.all_to_all(v, "world", 0, 0, tiled=True)
+x = jnp.arange(N * N * C * D, dtype=jnp.float32).reshape(N * N * C, D)
+got = np.asarray(gf.spmd(nv, in_specs=P("world"), out_specs=P("world"))(x))
+ref = np.asarray(comm.spmd(dense, in_specs=P("world"), out_specs=P("world"))(x))
+assert np.allclose(got.reshape(ref.shape), ref), (got, ref)
+print("TOPOLOGY_GRAPH_OK")
+"""
+    assert "TOPOLOGY_GRAPH_OK" in subproc(code, n=8)
+
+
+def test_size2_periodic_cart_alltoallv_counts(subproc):
+    """Regression: on a size-2 (or size-1) periodic dim both neighbor slots
+    name the same rank; the recv-count table must follow the cart slot
+    pairing (− send lands in the + slot), not occurrence order — the bug
+    returned padding as valid data and masked real rows."""
+
+    code = """
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro import core as mpx
+from repro.core import topology
+
+comm = mpx.Communicator.create((2,), ("r",))
+cart = topology.cart_create(comm, (2,), (True,))
+
+def nv(x):
+    r = cart.rank().astype(jnp.float32)
+    blocks = (jnp.arange(6, dtype=jnp.float32).reshape(2, 3) + 1.0 + 10.0 * r)
+    out, rc = cart.neighbor_alltoallv(blocks[..., None], [3, 1]).get()
+    return out[..., 0], rc
+out, rc = cart.spmd(nv, out_specs=(P("cart0"), P("cart0")))(jnp.zeros((), jnp.float32))
+out = np.asarray(out).reshape(2, 2, 3)
+rc = np.asarray(rc).reshape(2, 2)
+# my − slot (0) receives the peer's + slot (1) block, valid count 1;
+# my + slot (1) receives the peer's − slot (0) block, valid count 3
+assert np.array_equal(rc, [[1, 3], [1, 3]]), rc
+assert np.allclose(out[0, 0], [14, 0, 0]), out[0]   # rank1 slot-1 row, count 1
+assert np.allclose(out[0, 1], [11, 12, 13]), out[0]  # rank1 slot-0 rows, count 3
+assert np.allclose(out[1, 0], [4, 0, 0]), out[1]
+assert np.allclose(out[1, 1], [1, 2, 3]), out[1]
+
+# size-1 periodic self-ring: both slots are self edges
+cart1 = topology.cart_create(comm.group().incl([0]), (1,), (True,),
+                             tag="repro://cart/selfring")
+def nv1(x):
+    blocks = jnp.arange(4, dtype=jnp.float32).reshape(2, 2) + 1.0
+    out, rc = cart1.neighbor_alltoallv(blocks[..., None], [2, 1]).get()
+    return out[..., 0], rc
+out1, rc1 = cart1.spmd(nv1)(jnp.zeros((), jnp.float32))
+assert np.array_equal(np.asarray(rc1), [1, 2]), rc1
+assert np.allclose(np.asarray(out1), [[3, 0], [1, 2]]), out1
+print("CART_SIZE2_OK")
+"""
+    assert "CART_SIZE2_OK" in subproc(code, n=2)
+
+
+def test_persistent_neighbor_alltoall_and_moe_dispatch(subproc):
+    code = """
+import numpy as np
+import jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro import core as mpx
+from repro.core import topology, tool
+from repro.models import mlp
+from repro.configs.base import ModelConfig
+
+comm = mpx.world()
+N = comm.size()
+cart = topology.cart_create(comm, (N,), (True,))
+
+# persistent neighborhood collective: AOT once, MPI_Start re-fires
+req = cart.neighbor_alltoall_init(jax.ShapeDtypeStruct((2, 8), jnp.float32))
+before = tool.pvar_read().get("persistent_init", 0)
+for i in range(3):
+    out = req.start(jnp.full((2, 8), float(i))).get()
+assert req.starts == 3
+assert tool.pvar_read().get("persistent_init", 0) == before  # no re-init
+assert tool.pvar_read().get("neighbor_alltoall_init", 0) >= 1
+
+# MoE expert dispatch over the router's expert-map graph (full graph ==
+# exact dense top-k mixture; ample capacity => no drops)
+cfg = ModelConfig(name="t", family="moe", num_layers=2, d_model=16, num_heads=2,
+                  num_kv_heads=2, head_dim=8, d_ff=32, vocab_size=64,
+                  num_experts=2 * N, moe_top_k=2, moe_d_ff=24)
+p = mlp.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
+srcs, dsts = mlp.expert_dispatch_graph(N, 2 * N)
+g = topology.dist_graph_create_adjacent(comm, srcs, dsts)
+T = 4 * N
+xt = jax.random.normal(jax.random.PRNGKey(2), (T, 16))
+
+def run(xl, router, wg, wu, wd):
+    y, aux = mlp.moe_neighbor(
+        {"router": router, "w_gate": wg, "w_up": wu, "w_down": wd}, xl, cfg, g)
+    return y, aux["dropped_fraction"]
+y, dropped = g.spmd(
+    run,
+    in_specs=(P("world"), P(), P("world"), P("world"), P("world")),
+    out_specs=(P("world"), P()),
+)(xt, p["router"], p["w_gate"], p["w_up"], p["w_down"])
+assert float(dropped) == 0.0
+
+logits = np.asarray(xt.astype(jnp.float32) @ p["router"])
+pr = np.asarray(jax.nn.softmax(jnp.asarray(logits), axis=-1))
+topk = np.argsort(-pr, axis=-1)[:, :2]
+gates = np.take_along_axis(pr, topk, axis=-1)
+gates = gates / gates.sum(-1, keepdims=True)
+act = lambda v: np.asarray(jax.nn.silu(jnp.asarray(v)))
+y_exp = np.zeros((T, 16))
+for i in range(T):
+    for j in range(2):
+        e = topk[i, j]
+        v = np.asarray(xt[i])
+        h = act(v @ np.asarray(p["w_gate"][e])) * (v @ np.asarray(p["w_up"][e]))
+        y_exp[i] += gates[i, j] * (h @ np.asarray(p["w_down"][e]))
+err = np.abs(np.asarray(y) - y_exp).max()
+assert err < 1e-4, err
+
+# device-limited routing (radius 1) stays sparse: no all-to-all in the HLO
+srcs1, dsts1 = mlp.expert_dispatch_graph(N, 2 * N, radius=1)
+g1 = topology.dist_graph_create_adjacent(comm, srcs1, dsts1)
+def run1(xl, router, wg, wu, wd):
+    y, _ = mlp.moe_neighbor(
+        {"router": router, "w_gate": wg, "w_up": wu, "w_down": wd}, xl, cfg, g1)
+    return y
+from repro.core.hloanalysis import analyze_hlo
+c = jax.jit(g1.spmd(run1, in_specs=(P("world"), P(), P("world"), P("world"),
+                                    P("world")), out_specs=P("world"),
+                    jit=False)).lower(
+    jax.ShapeDtypeStruct((T, 16), jnp.float32),
+    *(jax.ShapeDtypeStruct(np.shape(v), jnp.float32)
+      for v in (p["router"], p["w_gate"], p["w_up"], p["w_down"]))).compile()
+stats = analyze_hlo(c.as_text()).collectives
+assert "all-to-all" not in stats.count, stats.count
+assert stats.count.get("collective-permute", 0) > 0
+
+# top-k wider than the graph's reach is a setup error, not silent corruption
+cfg1 = ModelConfig(name="t1", family="moe", num_layers=2, d_model=16,
+                   num_heads=2, num_kv_heads=2, head_dim=8, d_ff=32,
+                   vocab_size=64, num_experts=N, moe_top_k=2, moe_d_ff=24)
+p1 = mlp.init_moe(jax.random.PRNGKey(0), cfg1, jnp.float32)
+s0, d0 = mlp.expert_dispatch_graph(N, N, radius=0)    # self-only: 1 expert
+g0 = topology.dist_graph_create_adjacent(comm, s0, d0)
+try:
+    g0.spmd(lambda xl, r_, wg, wu, wd: mlp.moe_neighbor(
+        {"router": r_, "w_gate": wg, "w_up": wu, "w_down": wd},
+        xl, cfg1, g0)[0],
+        in_specs=(P("world"), P(), P("world"), P("world"), P("world")),
+        out_specs=P("world"))(
+        xt, p1["router"], p1["w_gate"], p1["w_up"], p1["w_down"])
+    raise SystemExit("expected ERR_TOPOLOGY for top-k > reachable experts")
+except Exception as e:
+    assert "TOPOLOGY" in str(e).upper(), e
+print("TOPOLOGY_MOE_OK")
+"""
+    assert "TOPOLOGY_MOE_OK" in subproc(code, n=4)
