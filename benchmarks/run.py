@@ -46,6 +46,9 @@ TRACKED = {
     "io_overlap_ratio": "lower",            # async/serial checkpoint wall-clock
     "io_commits_per_save": "lower",         # manifest sync points (claim: 1)
     "hlo_identical_frac": "higher",         # zero-overhead proof coverage
+    "serving_overhead_ratio": "lower",      # engine.step / raw decode loop body
+    "serving_tokens_ratio": "higher",       # continuous / fixed tokens-per-s
+    "serving_ttft_p99_ratio": "lower",      # continuous / fixed p99 TTFT
 }
 
 
@@ -88,6 +91,17 @@ def summarize(out_dir: Path = OUT) -> dict:
             summary["neighbor_allgather_ratio"] = _geomean(
                 [r["iface_us"] / max(r["raw_us"], 1e-9) for r in neigh]
             )
+        serving = [r for r in rows if r.get("series") == "serving"]
+        if serving:
+            summary["serving_overhead_ratio"] = _geomean(
+                [r["iface_us"] / max(r["raw_us"], 1e-9) for r in serving]
+            )
+
+    sb = out_dir / "serving_bench.json"
+    if sb.exists():
+        r = json.loads(sb.read_text())
+        summary["serving_tokens_ratio"] = float(r["tokens_ratio"])
+        summary["serving_ttft_p99_ratio"] = float(r["ttft_p99_ratio"])
 
     io = out_dir / "io_overhead.json"
     if io.exists():
@@ -136,6 +150,18 @@ def gate(summary: dict, baseline_path: Path, tolerance: float = 0.25) -> int:
 
     baseline = json.loads(Path(baseline_path).read_text())
     rc = 0
+    # a tracked series present in the summary but absent from the baseline
+    # would never gate at all (the loop below iterates the baseline) — warn
+    # loudly instead of staying silently unguarded
+    unguarded = sorted(
+        name for name in summary if name in TRACKED and name not in baseline
+    )
+    for name in unguarded:
+        print(
+            f"WARNING: tracked series {name!r} has no entry in "
+            f"{baseline_path} and is NOT gated — reseed the baseline "
+            f"(python -m benchmarks.run --summary --reseed) to guard it."
+        )
     print(f"\nbench gate vs {baseline_path} (default tolerance {tolerance:.0%}):")
     print("| series | baseline | current | direction | tolerance | verdict |")
     print("|---|---|---|---|---|---|")
@@ -162,6 +188,28 @@ def gate(summary: dict, baseline_path: Path, tolerance: float = 0.25) -> int:
     return rc
 
 
+def reseed(summary: dict, baseline_path: Path) -> None:
+    """Rewrite the committed baseline from the current summary: every
+    tracked series present in the summary gets its measured value, keeping
+    an existing ``{"value", "tolerance"}`` entry's tolerance (the per-series
+    noise floor is curated, the value is measured).  Series in the baseline
+    but missing from this summary are kept untouched — reseeding after a
+    partial run must not drop guards."""
+
+    path = Path(baseline_path)
+    baseline = json.loads(path.read_text()) if path.exists() else {}
+    for name, value in summary.items():
+        if name not in TRACKED:
+            continue
+        old = baseline.get(name)
+        if isinstance(old, dict):
+            baseline[name] = {**old, "value": round(float(value), 4)}
+        else:
+            baseline[name] = round(float(value), 4)
+    path.write_text(json.dumps(baseline, indent=1, sort_keys=True) + "\n")
+    print(f"reseeded {path} from current summary ({len(summary)} series)")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -179,14 +227,32 @@ def main(argv=None):
         help="compare the summary against a committed baseline JSON; "
         "exit 1 on >25%% regression of any tracked series",
     )
+    ap.add_argument(
+        "--reseed",
+        nargs="?",
+        const=str(ROOT / "benchmarks" / "baseline.json"),
+        default=None,
+        metavar="BASELINE",
+        help="rewrite the baseline's values from the current summary "
+        "(tolerances of existing entries are kept); defaults to "
+        "benchmarks/baseline.json",
+    )
     args = ap.parse_args(argv)
 
     rc = 0
     if not args.summary:
-        from benchmarks import hlo_parity, interface_overhead, roofline, train_throughput
+        from benchmarks import (
+            hlo_parity,
+            interface_overhead,
+            roofline,
+            serving_bench,
+            train_throughput,
+        )
 
         jobs = [
             ("interface_overhead", lambda: interface_overhead.main(
+                ["--quick"] if args.quick else [])),
+            ("serving_bench", lambda: serving_bench.main(
                 ["--quick"] if args.quick else [])),
             ("hlo_parity", lambda: hlo_parity.main()),
             ("roofline(single-pod)", lambda: roofline.main(["--mesh", "pod_16x16"])),
@@ -212,6 +278,8 @@ def main(argv=None):
     print("\nBENCH_summary.json:")
     for k, v in summary.items():
         print(f"  {k}: {v:.4f}")
+    if args.reseed:
+        reseed(summary, Path(args.reseed))
     if args.gate:
         rc = gate(summary, Path(args.gate)) or rc
     return rc

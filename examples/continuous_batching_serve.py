@@ -1,0 +1,74 @@
+"""Continuous-batching serving on the RMA paged-KV engine: ragged requests
+join the running decode iteration as slots free up, grow their KV block by
+block out of a budgeted pool (preempting the newest row under pressure),
+and retire at their own generation budget — then every output is checked
+token-for-token against the fixed-batch Server oracle.
+
+    PYTHONPATH=src python examples/continuous_batching_serve.py
+"""
+
+import argparse
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.launch.mesh import make_host_communicator
+from repro.runtime.engine import Engine, EngineConfig
+from repro.runtime.server import Request, Server, ServerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--pool-blocks", type=int, default=None,
+                    help="live KV block budget (small values force preemption)")
+    args = ap.parse_args()
+
+    # float32 keeps the oracle comparison exact: near-tied argmaxes under
+    # bf16 rounding can flip between batch shapes
+    cfg = ModelConfig(
+        name="demo", family="dense", num_layers=2, d_model=64, num_heads=4,
+        num_kv_heads=2, head_dim=16, d_ff=128, vocab_size=256, dtype="float32",
+    )
+    scfg = ServerConfig(max_batch=4, max_new_tokens=8, temperature=0.0)
+    server = Server(cfg, ParallelConfig(), scfg, make_host_communicator())
+
+    bucket = 8
+    rng = np.random.default_rng(0)
+    prompts = [
+        rng.integers(1, cfg.vocab_size,
+                     (int(rng.integers(2, bucket + 1)),), dtype=np.int32)
+        for _ in range(args.requests)
+    ]
+    budgets = [int(rng.integers(2, scfg.max_new_tokens + 1)) for _ in prompts]
+
+    eng = Engine(server, EngineConfig(
+        prompt_bucket=bucket, block_tokens=4, pool_blocks=args.pool_blocks))
+    handles = [eng.submit(p, max_new=b) for p, b in zip(prompts, budgets)]
+    eng.run()
+    stats = eng.stats()
+    print(f"{stats['finished']} requests in {stats['steps']} decode steps "
+          f"({stats['generated_tokens']} tokens, "
+          f"{stats['preemptions']} preemptions)")
+    for h in handles:
+        print(f"  request {h.rid}: prompt {len(h.tokens):>2} tokens -> "
+              f"{h.generated}")
+
+    # parity: the fixed-batch Server on bucket-left-padded prompts generates
+    # the same tokens — continuous batching changed the schedule, not the math
+    for start in range(0, len(prompts), scfg.max_batch):
+        group = prompts[start:start + scfg.max_batch]
+        reqs = [Request(tokens=np.concatenate(
+            [np.zeros((bucket - len(p),), np.int32), p])) for p in group]
+        tokens, _ = server.generate(reqs)
+        for j in range(len(group)):
+            h = handles[start + j]
+            expect = np.asarray(tokens[j])[: len(h.generated)]
+            assert np.array_equal(np.asarray(h.generated), expect), (
+                f"request {h.rid} diverged from the fixed-batch oracle"
+            )
+    print("parity: every request matches the fixed-batch oracle token-for-token")
+
+
+if __name__ == "__main__":
+    main()

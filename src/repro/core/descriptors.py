@@ -132,12 +132,21 @@ class WindowSpec:
         when program order already pins the schedule (cheaper epochs).
     num_pages: default page count for paged transfers (``put``/``rput`` with
         ``page=(i, n)``); the paged-KV-block granularity.
+    dynamic: ``MPI_Win_create_dynamic`` analogue.  The window starts with
+        *no* pages attached; memory must be registered page-by-page with
+        :meth:`~repro.core.onesided.Window.attach` before a ``put`` may
+        target it (``ERR_RMA_RANGE`` otherwise, the dynamic-window
+        out-of-range class).  ``attach``/``detach`` double as the
+        sub-allocation free-list a paged KV block pool rides
+        (:mod:`repro.runtime.kvpool`).  Dynamic windows are addressed at
+        page granularity: full-window puts require every page attached.
     """
 
     accumulate_op: ReduceOp = ReduceOp.SUM
     no_locks: bool = True
     fence_barrier: bool = True
     num_pages: int = 1
+    dynamic: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

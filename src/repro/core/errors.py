@@ -37,10 +37,13 @@ class ErrorClass(enum.IntEnum):
     ERR_TRUNCATE = 15
     ERR_IN_STATUS = 18
     ERR_FILE = 30
+    ERR_NO_MEM = 34
     ERR_NOT_SAME = 35
     ERR_IO = 39
     ERR_WIN = 45
     ERR_UNSUPPORTED_OPERATION = 52
+    ERR_RMA_RANGE = 55
+    ERR_RMA_ATTACH = 56
     ERR_SESSION = 78
     ERR_OTHER = 16
 
@@ -117,8 +120,20 @@ class IoError(Error):
     klass = ErrorClass.ERR_IO
 
 
+class NoMemError(Error):
+    klass = ErrorClass.ERR_NO_MEM
+
+
 class WinError(Error):
     klass = ErrorClass.ERR_WIN
+
+
+class RmaRangeError(Error):
+    klass = ErrorClass.ERR_RMA_RANGE
+
+
+class RmaAttachError(Error):
+    klass = ErrorClass.ERR_RMA_ATTACH
 
 
 class UnsupportedError(Error):
@@ -148,8 +163,11 @@ arg = ErrorClass.ERR_ARG
 pending = ErrorClass.ERR_PENDING
 truncate = ErrorClass.ERR_TRUNCATE
 file = ErrorClass.ERR_FILE
+no_mem = ErrorClass.ERR_NO_MEM
 io = ErrorClass.ERR_IO
 win = ErrorClass.ERR_WIN
+rma_range = ErrorClass.ERR_RMA_RANGE
+rma_attach = ErrorClass.ERR_RMA_ATTACH
 group = ErrorClass.ERR_GROUP
 session = ErrorClass.ERR_SESSION
 other = ErrorClass.ERR_OTHER
@@ -171,7 +189,10 @@ _CLASS_TO_EXC: dict[ErrorClass, Any] = {
     ErrorClass.ERR_TRUNCATE: TruncateError,
     ErrorClass.ERR_FILE: FileError,
     ErrorClass.ERR_IO: IoError,
+    ErrorClass.ERR_NO_MEM: NoMemError,
     ErrorClass.ERR_WIN: WinError,
+    ErrorClass.ERR_RMA_RANGE: RmaRangeError,
+    ErrorClass.ERR_RMA_ATTACH: RmaAttachError,
     ErrorClass.ERR_UNSUPPORTED_OPERATION: UnsupportedError,
     ErrorClass.ERR_GROUP: GroupError,
     ErrorClass.ERR_SESSION: SessionError,

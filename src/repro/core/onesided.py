@@ -86,6 +86,16 @@ class Window:
         # per-epoch write ledger: target rank -> page specs written (None =
         # the whole window); overlapping writes in one epoch are a data race
         self._writes: dict[int, list[tuple[int, int] | None]] = {}
+        # dynamic windows (MPI_Win_create_dynamic): pages start detached and
+        # must be registered with attach() before a put may target them; the
+        # attached set doubles as the sub-allocation free-list
+        self._attached: set[int] | None = set() if self.spec.dynamic else None
+        if self.spec.dynamic:
+            errors.check(
+                self.spec.num_pages >= 1,
+                errors.ErrorClass.ERR_COUNT,
+                f"a dynamic window needs num_pages >= 1, got {self.spec.num_pages}",
+            )
 
     # -- introspection ------------------------------------------------------
 
@@ -111,6 +121,122 @@ class Window:
             return self._datatype.extent
         b = self._buffers[0]
         return int(b.size) * jnp.dtype(b.dtype).itemsize
+
+    # -- dynamic-window sub-allocation (MPI_Win_attach / MPI_Win_detach) ----
+
+    def _check_dynamic(self, what: str) -> None:
+        errors.check(
+            self._attached is not None,
+            errors.ErrorClass.ERR_RMA_ATTACH,
+            f"{what} requires a dynamic window (WindowSpec(dynamic=True))",
+        )
+
+    def _check_page_ids(self, pages: Sequence[int]) -> list[int]:
+        ids = [int(p) for p in pages]
+        for p in ids:
+            errors.check(
+                0 <= p < self.spec.num_pages,
+                errors.ErrorClass.ERR_RMA_RANGE,
+                f"page {p} out of range for a window of {self.spec.num_pages} pages",
+            )
+        return ids
+
+    def attach(self, pages: Sequence[int]) -> "Window":
+        """``MPI_Win_attach``: register pages of the packed extent with the
+        dynamic window, making them legal ``put`` targets.  Re-attaching an
+        attached page is erroneous (``ERR_RMA_ATTACH``, as in the
+        standard)."""
+
+        self._check_dynamic("attach")
+        ids = self._check_page_ids(pages)
+        for p in ids:
+            errors.check(
+                p not in self._attached,
+                errors.ErrorClass.ERR_RMA_ATTACH,
+                f"page {p} is already attached",
+            )
+        self._attached.update(ids)
+        tool.pvar_add("rma_attach", len(ids))
+        return self
+
+    def detach(self, pages: Sequence[int]) -> "Window":
+        """``MPI_Win_detach``: deregister pages; subsequent puts to them
+        raise ``ERR_RMA_RANGE``."""
+
+        self._check_dynamic("detach")
+        ids = self._check_page_ids(pages)
+        for p in ids:
+            errors.check(
+                p in self._attached,
+                errors.ErrorClass.ERR_RMA_ATTACH,
+                f"page {p} is not attached",
+            )
+        self._attached.difference_update(ids)
+        tool.pvar_add("rma_detach", len(ids))
+        return self
+
+    @property
+    def attached_pages(self) -> frozenset[int]:
+        """The currently attached page set (empty for static windows)."""
+
+        return frozenset(self._attached or ())
+
+    def free_pages(self) -> int:
+        """Number of detached (allocatable) pages of a dynamic window."""
+
+        self._check_dynamic("free_pages")
+        return self.spec.num_pages - len(self._attached)
+
+    def page_alloc(self, count: int) -> list[int]:
+        """Sub-allocation hook: attach the ``count`` lowest detached pages
+        and return their ids — the free-list pop a paged KV block pool rides
+        (:mod:`repro.runtime.kvpool`).  ``ERR_NO_MEM`` when the window has
+        fewer detached pages than requested."""
+
+        self._check_dynamic("page_alloc")
+        free = sorted(set(range(self.spec.num_pages)) - self._attached)
+        errors.check(
+            count <= len(free),
+            errors.ErrorClass.ERR_NO_MEM,
+            f"window has {len(free)} free pages, {count} requested",
+        )
+        ids = free[:count]
+        self.attach(ids)
+        return ids
+
+    def page_free(self, pages: Sequence[int]) -> "Window":
+        """Sub-allocation hook: return pages to the free-list (detach)."""
+
+        return self.detach(pages)
+
+    def _check_attached(self, page: tuple[int, int] | None) -> None:
+        """Dynamic windows only accept writes to attached memory, at the
+        attach granularity (``spec.num_pages``)."""
+
+        if self._attached is None:
+            return
+        if page is None:
+            errors.check(
+                len(self._attached) == self.spec.num_pages,
+                errors.ErrorClass.ERR_RMA_RANGE,
+                f"full-window put on a dynamic window with only "
+                f"{len(self._attached)}/{self.spec.num_pages} pages attached",
+            )
+            return
+        index, num_pages = page
+        errors.check(
+            num_pages == self.spec.num_pages,
+            errors.ErrorClass.ERR_RMA_RANGE,
+            f"dynamic windows are addressed at attach granularity: page "
+            f"counts must equal spec.num_pages ({self.spec.num_pages}), "
+            f"got {num_pages}",
+        )
+        errors.check(
+            index in self._attached,
+            errors.ErrorClass.ERR_RMA_RANGE,
+            f"page {index} is not attached (attached: "
+            f"{sorted(self._attached)})",
+        )
 
     # -- epochs -------------------------------------------------------------
 
@@ -302,6 +428,7 @@ class Window:
         self._check_epoch()
         self._validate_perm(perm, writes=True)
         page = self._resolve_page(page)
+        self._check_attached(page)
         self._note_writes(perm, page)
         tool.pvar_count("rma_put")
         self._apply_put(value, perm, page)
@@ -321,6 +448,7 @@ class Window:
         self._check_epoch()
         self._validate_perm(perm, writes=True)
         page = self._resolve_page(page)
+        self._check_attached(page)
         self._note_writes(perm, page)
         tool.pvar_count("rma_rput")
         fut = TraceFuture(lambda: self._apply_put(value, perm, page))

@@ -867,6 +867,107 @@ def dist_graph_create_adjacent(
     )
 
 
+# ---------------------------------------------------------------------------
+# serving fan-out graphs (heterogeneous prefill:decode, e.g. 2:6 / 3:5)
+# ---------------------------------------------------------------------------
+
+
+def serving_fanout_adjacency(
+    num_prefill: int, num_decode: int
+) -> tuple[list[list[int]], list[list[int]]]:
+    """Adjacency of a ``P:D`` serving fan-out over a bridge ordered
+    prefill-then-decode: ranks ``0..P-1`` are prefill workers, ``P..P+D-1``
+    decode workers; decode rank ``P+j`` receives its KV from prefill rank
+    ``j % P`` (round-robin), so the decode fleet is partitioned into ``P``
+    disjoint fan-out sets.  Returns ``(sources, destinations)`` in the
+    all-ranks-at-once form :class:`DistGraphComm` requires.  This is the
+    heterogeneous-ratio shape (2:6, 3:5, ...) an axis split cannot express —
+    the graph, not a grid, is the topology."""
+
+    p, d = int(num_prefill), int(num_decode)
+    errors.check(
+        p >= 1 and d >= 1,
+        errors.ErrorClass.ERR_DIMS,
+        f"serving fan-out needs at least one prefill and one decode rank, "
+        f"got {p}:{d}",
+    )
+    errors.check(
+        d >= p,
+        errors.ErrorClass.ERR_DIMS,
+        f"serving fan-out {p}:{d} leaves {p - d} prefill ranks with no "
+        "decode targets; use num_decode >= num_prefill",
+    )
+    sources: list[list[int]] = []
+    destinations: list[list[int]] = []
+    for i in range(p):
+        sources.append([])
+        destinations.append([p + j for j in range(d) if j % p == i])
+    for j in range(d):
+        sources.append([j % p])
+        destinations.append([])
+    return sources, destinations
+
+
+def fanout_routes(
+    sources: Sequence[Sequence[int]], destinations: Sequence[Sequence[int]]
+) -> list[tuple[int, int]]:
+    """The KV routing pairs of a fan-out adjacency: every declared edge as
+    an origin→target ``(src, dst)`` pair, in target order.  Each decode
+    target is written by exactly one origin, so the per-epoch
+    duplicate-target check holds by construction; but an origin may feed
+    several targets, which a single ``send_recv`` cannot carry — split the
+    routes into per-``rput`` permutations with :func:`fanout_rounds`."""
+
+    edges = [
+        (r, int(dst))
+        for r, row in enumerate(destinations)
+        for dst in row
+        if int(dst) != PROC_NULL
+    ]
+    for dst, row in enumerate(sources):
+        for src in row:
+            if int(src) != PROC_NULL and (int(src), dst) not in edges:
+                edges.append((int(src), dst))
+    return sorted(set(edges), key=lambda e: (e[1], e[0]))
+
+
+def fanout_rounds(
+    routes: Sequence[tuple[int, int]],
+) -> list[list[tuple[int, int]]]:
+    """Split fan-out routes into ``send_recv``-legal rounds: within a round
+    every origin sends to at most one target and every target is written by
+    at most one origin, so each round is directly usable as the ``perm`` of
+    a window :meth:`~repro.core.onesided.Window.rput`.  Greedy first-fit
+    preserves the target order of :func:`fanout_routes`; a ``P:D`` fan-out
+    yields ``ceil(D / P)`` rounds."""
+
+    rounds: list[list[tuple[int, int]]] = []
+    for src, dst in routes:
+        for rnd in rounds:
+            if all(s != src and d != dst for s, d in rnd):
+                rnd.append((int(src), int(dst)))
+                break
+        else:
+            rounds.append([(int(src), int(dst))])
+    return rounds
+
+
+def serving_fanout_graph(
+    comm: Communicator, num_prefill: int, num_decode: int
+) -> DistGraphComm:
+    """``MPI_Dist_graph_create_adjacent`` over a serving bridge with the
+    ``P:D`` fan-out adjacency (:func:`serving_fanout_adjacency`)."""
+
+    errors.check(
+        num_prefill + num_decode == comm.size(),
+        errors.ErrorClass.ERR_TOPOLOGY,
+        f"fan-out {num_prefill}:{num_decode} needs a bridge of "
+        f"{num_prefill + num_decode} ranks, communicator has {comm.size()}",
+    )
+    sources, destinations = serving_fanout_adjacency(num_prefill, num_decode)
+    return dist_graph_create_adjacent(comm, sources, destinations)
+
+
 # -- method facade (paper style: comm.cart_create(...)) -----------------------
 
 Communicator.cart_create = cart_create

@@ -7,6 +7,10 @@
 worker groups (``<pset>/prefill`` / ``<pset>/decode``): prefill ranks
 compute the KV cache and stream it into the decode ranks' RMA window
 (``--kv-pages`` pages per handoff); decode rides its persistent request.
+``--fanout P:D`` makes that split heterogeneous (2:6, 3:5, ...) with the
+KV routed along the dist-graph fan-out adjacency.  ``--continuous-batching``
+serves through the paged-KV engine instead of one fixed batch: requests are
+admitted into the running decode iteration and retire at their stop token.
 """
 
 from __future__ import annotations
@@ -38,10 +42,28 @@ def main(argv=None):
     )
     ap.add_argument("--prefill-fraction", type=float, default=0.5)
     ap.add_argument("--kv-pages", type=int, default=4)
+    ap.add_argument(
+        "--fanout",
+        default=None,
+        metavar="P:D",
+        help="heterogeneous prefill:decode worker split (e.g. 2:6, 3:5); "
+        "implies --disaggregate and replaces --prefill-fraction",
+    )
+    ap.add_argument(
+        "--continuous-batching",
+        action="store_true",
+        help="serve through the continuous-batching engine (paged KV block "
+        "pool, in-flight admission) instead of one fixed batch",
+    )
     args = ap.parse_args(argv)
+    if args.fanout is not None:
+        args.disaggregate = True
     if args.disaggregate and args.mesh != "auto":
         ap.error("--mesh has no effect with --disaggregate (group layouts "
-                 "come from --prefill-fraction); drop one of the two")
+                 "come from --prefill-fraction/--fanout); drop one of the two")
+    if args.continuous_batching and args.disaggregate:
+        ap.error("--continuous-batching schedules a single-group Server; "
+                 "it does not compose with --disaggregate/--fanout yet")
 
     from repro.configs import base
     from repro.launch.mesh import make_host_communicator
@@ -77,20 +99,36 @@ def main(argv=None):
             )
         reqs.append(Request(tokens=toks, extra=extra))
 
-    scfg = ServerConfig(max_batch=args.requests,
+    scfg = ServerConfig(max_batch=min(args.requests, 4) if args.continuous_batching
+                        else args.requests,
                         max_new_tokens=args.new_tokens,
                         temperature=args.temperature)
     if args.disaggregate:
+        fanout = None
+        if args.fanout is not None:
+            p, d = (int(t) for t in args.fanout.split(":"))
+            fanout = (p, d)
         server = DisaggregatedServer(
             cfg, pcfg, scfg,
             pset=args.pset,
             prefill_fraction=args.prefill_fraction,
             kv_pages=args.kv_pages,
+            fanout=fanout,
         )
     else:
         server = Server(cfg, pcfg, scfg, comm)
-    tokens, stats = server.generate(reqs)
-    print("generated shape:", tokens.shape)
+
+    if args.continuous_batching:
+        from repro.runtime.engine import Engine, EngineConfig
+
+        eng = Engine(server, EngineConfig(prompt_bucket=args.prompt_len))
+        handles = [eng.submit(r) for r in reqs]
+        eng.run()
+        stats = eng.stats()
+        print("generated lengths:", [len(h.generated) for h in handles])
+    else:
+        tokens, stats = server.generate(reqs)
+        print("generated shape:", tokens.shape)
     print(json.dumps({k: round(v, 4) if isinstance(v, float) else v for k, v in stats.items()},
                      indent=1))
     return 0

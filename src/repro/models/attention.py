@@ -81,6 +81,16 @@ def _dequantize_kv(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
     return (q.astype(jnp.float32) * scale).astype(dtype)
 
 
+def _row_update(layer: jax.Array, new: jax.Array, write_pos: jax.Array) -> jax.Array:
+    """Per-row cache write: ``layer`` (B, S, ...), ``new`` (B, T, ...),
+    ``write_pos`` (B,) — each batch row writes at its own position (the
+    continuous-batching slot table, where rows decode at ragged depths)."""
+
+    return jax.vmap(
+        lambda l, n, w: jax.lax.dynamic_update_slice_in_dim(l, n, w, axis=0)
+    )(layer, new.astype(layer.dtype), write_pos)
+
+
 def cache_layer_update(
     k_layer: jax.Array,
     v_layer: jax.Array,
@@ -92,17 +102,32 @@ def cache_layer_update(
     *,
     ring: bool,
 ) -> tuple[jax.Array, jax.Array, jax.Array | None, jax.Array | None]:
-    """Write k_new/v_new (B, T, Hk, Dh) at ``pos`` (ring: pos % capacity)."""
+    """Write k_new/v_new (B, T, Hk, Dh) at ``pos`` (ring: pos % capacity).
+
+    ``pos`` is the shared scalar in the fixed-batch serving path, or a
+    per-row ``(B,)`` vector when rows live at different depths (the
+    continuous-batching engine); vector positions write through a vmapped
+    per-row update."""
 
     capacity = k_layer.shape[1]
     write_pos = (pos % capacity) if ring else pos
+    per_row = jnp.ndim(pos) == 1
     if k_layer.dtype == jnp.int8:
         kq, ks = _quantize_kv(k_new)
         vq, vs = _quantize_kv(v_new)
-        k_layer = jax.lax.dynamic_update_slice_in_dim(k_layer, kq, write_pos, axis=1)
-        v_layer = jax.lax.dynamic_update_slice_in_dim(v_layer, vq, write_pos, axis=1)
-        k_scale_l = jax.lax.dynamic_update_slice_in_dim(k_scale_l, ks, write_pos, axis=1)
-        v_scale_l = jax.lax.dynamic_update_slice_in_dim(v_scale_l, vs, write_pos, axis=1)
+        if per_row:
+            k_layer = _row_update(k_layer, kq, write_pos)
+            v_layer = _row_update(v_layer, vq, write_pos)
+            k_scale_l = _row_update(k_scale_l, ks, write_pos)
+            v_scale_l = _row_update(v_scale_l, vs, write_pos)
+        else:
+            k_layer = jax.lax.dynamic_update_slice_in_dim(k_layer, kq, write_pos, axis=1)
+            v_layer = jax.lax.dynamic_update_slice_in_dim(v_layer, vq, write_pos, axis=1)
+            k_scale_l = jax.lax.dynamic_update_slice_in_dim(k_scale_l, ks, write_pos, axis=1)
+            v_scale_l = jax.lax.dynamic_update_slice_in_dim(v_scale_l, vs, write_pos, axis=1)
+    elif per_row:
+        k_layer = _row_update(k_layer, k_new, write_pos)
+        v_layer = _row_update(v_layer, v_new, write_pos)
     else:
         k_layer = jax.lax.dynamic_update_slice_in_dim(
             k_layer, k_new.astype(k_layer.dtype), write_pos, axis=1
@@ -259,7 +284,7 @@ def attention_decode(
     v_layer,
     k_scale_l,
     v_scale_l,
-    pos: jax.Array,          # () int32 tokens already cached
+    pos: jax.Array,          # () int32 tokens already cached — or (B,) per-row
     cfg,
     pcfg,
     *,
@@ -267,27 +292,35 @@ def attention_decode(
     mesh=None,
 ):
     """Single-token attention against a cached layer.  Returns
-    (y (B,1,D), updated cache slices)."""
+    (y (B,1,D), updated cache slices).  Scalar ``pos`` is the fixed-batch
+    path (all rows at one depth); a ``(B,)`` vector gives each row its own
+    depth — the per-slot position of the continuous-batching engine — with
+    a per-row validity mask replacing the shared one."""
 
     dtype = x1.dtype
-    q, k_new, v_new = _project_qkv(p, x1, cfg, pos[None])
+    per_row = jnp.ndim(pos) == 1
+    positions = pos[:, None] if per_row else pos[None]
+    q, k_new, v_new = _project_qkv(p, x1, cfg, positions)
     ring = sliding_window is not None and k_layer.shape[1] == sliding_window
     k_layer, v_layer, k_scale_l, v_scale_l = cache_layer_update(
         k_layer, v_layer, k_scale_l, v_scale_l, k_new, v_new, pos, ring=ring
     )
     capacity = k_layer.shape[1]
 
+    # pos broadcasts against the slot index: () keeps the shared (capacity,)
+    # mask, (B, 1) makes it per-row (B, capacity)
+    pos_b = pos[:, None] if per_row else pos
     if ring:
         # slot i holds global position p_i = pos - ((pos - i) mod capacity)
         slots = jnp.arange(capacity)
-        slot_pos = pos - ((pos - slots) % capacity)
-        valid = slot_pos >= jnp.maximum(0, pos - capacity + 1)
-        valid = jnp.logical_and(valid, slot_pos <= pos)
+        slot_pos = pos_b - ((pos_b - slots) % capacity)
+        valid = slot_pos >= jnp.maximum(0, pos_b - capacity + 1)
+        valid = jnp.logical_and(valid, slot_pos <= pos_b)
     else:
         slot_pos = jnp.arange(capacity)
-        valid = slot_pos <= pos
+        valid = slot_pos <= pos_b
     if sliding_window is not None:
-        valid = jnp.logical_and(valid, pos - slot_pos < sliding_window)
+        valid = jnp.logical_and(valid, pos_b - slot_pos < sliding_window)
 
     if (
         pcfg.seq_shard_cache
@@ -313,7 +346,9 @@ def _decode_attend(q, kc, vc, valid, cfg):
     s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kc.astype(jnp.float32))
     s = s * _scale(cfg)
     s = common.softcap(s, cfg.attn_logit_softcap)
-    s = jnp.where(valid[None, None, None, :], s, fa_ref.NEG_INF)
+    # valid is (capacity,) shared across the batch, or (B, capacity) per-row
+    mask = valid[None, None, None, :] if valid.ndim == 1 else valid[:, None, None, :]
+    s = jnp.where(mask, s, fa_ref.NEG_INF)
     pattn = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bhqk,bkhd->bqhd", pattn, vc.astype(jnp.float32)).astype(q.dtype)
 
@@ -332,7 +367,7 @@ def _flash_decode_sharded(q, k_layer, v_layer, k_scale_l, v_scale_l, valid, cfg,
     q_spec = P(b_axes, None, None, None)
     kv_spec = P(b_axes, axis, None, None)
     sc_spec = None if k_scale_l is None else P(b_axes, axis, None, None)
-    valid_spec = P(axis)
+    valid_spec = P(axis) if valid.ndim == 1 else P(b_axes, axis)
 
     def body(ql, kl, vl, ksl, vsl, validl):
         kc, vc = cache_layer_read(kl, vl, ksl, vsl, dtype)
@@ -343,7 +378,11 @@ def _flash_decode_sharded(q, k_layer, v_layer, k_scale_l, v_scale_l, valid, cfg,
         s = jnp.einsum("bqhd,bkhd->bhqk", ql.astype(jnp.float32), kc.astype(jnp.float32))
         s = s * _scale(cfg)
         s = common.softcap(s, cfg.attn_logit_softcap)
-        s = jnp.where(validl[None, None, None, :], s, fa_ref.NEG_INF)
+        maskl = (
+            validl[None, None, None, :] if validl.ndim == 1
+            else validl[:, None, None, :]
+        )
+        s = jnp.where(maskl, s, fa_ref.NEG_INF)
         m = jnp.max(s, axis=-1)
         p_ = jnp.exp(s - m[..., None])
         l = jnp.sum(p_, axis=-1)
@@ -460,15 +499,22 @@ def mla_attention_decode(p, x1, ckv_layer, krope_layer, pos, cfg, pcfg, *, mesh=
     """Absorbed decode: attend in the compressed latent space — the W^UK
     absorption that makes the MLA cache pay off (no per-step expansion)."""
 
-    q_nope, q_rope, ckv_new, krope_new = _mla_latents(p, x1, cfg, pos[None])
-    ckv_layer = jax.lax.dynamic_update_slice_in_dim(
-        ckv_layer, ckv_new.astype(ckv_layer.dtype), pos, axis=1
-    )
-    krope_layer = jax.lax.dynamic_update_slice_in_dim(
-        krope_layer, krope_new.astype(krope_layer.dtype), pos, axis=1
-    )
+    per_row = jnp.ndim(pos) == 1
+    positions = pos[:, None] if per_row else pos[None]
+    q_nope, q_rope, ckv_new, krope_new = _mla_latents(p, x1, cfg, positions)
+    if per_row:
+        ckv_layer = _row_update(ckv_layer, ckv_new, pos)
+        krope_layer = _row_update(krope_layer, krope_new, pos)
+    else:
+        ckv_layer = jax.lax.dynamic_update_slice_in_dim(
+            ckv_layer, ckv_new.astype(ckv_layer.dtype), pos, axis=1
+        )
+        krope_layer = jax.lax.dynamic_update_slice_in_dim(
+            krope_layer, krope_new.astype(krope_layer.dtype), pos, axis=1
+        )
     capacity = ckv_layer.shape[1]
-    valid = jnp.arange(capacity) <= pos
+    pos_b = pos[:, None] if per_row else pos
+    valid = jnp.arange(capacity) <= pos_b
 
     # absorb: q_latent = q_nope @ W^UK  → (B, 1, H, kv_lora)
     q_latent = jnp.einsum("bshn,khn->bshk", q_nope, p["wk_b"])
@@ -479,7 +525,8 @@ def mla_attention_decode(p, x1, ckv_layer, krope_layer, pos, cfg, pcfg, *, mesh=
         "bshr,btr->bhst", q_rope.astype(jnp.float32), krope_layer.astype(jnp.float32)
     )
     s = s * _mla_scale(cfg)
-    s = jnp.where(valid[None, None, None, :], s, fa_ref.NEG_INF)
+    mask = valid[None, None, None, :] if valid.ndim == 1 else valid[:, None, None, :]
+    s = jnp.where(mask, s, fa_ref.NEG_INF)
     pattn = jax.nn.softmax(s, axis=-1)
     o_latent = jnp.einsum("bhst,btk->bshk", pattn, ckv_layer.astype(jnp.float32))
     out = jnp.einsum("bshk,khv->bshv", o_latent.astype(x1.dtype), p["wv_b"])

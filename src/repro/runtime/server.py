@@ -35,7 +35,7 @@ from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ParallelConfig
-from repro.core import collectives, errors, futures, onesided, tool
+from repro.core import collectives, errors, futures, onesided, tool, topology
 from repro.core.communicator import Communicator
 from repro.core.futures import PersistentRequest, argument_signature
 from repro.core.session import Session, default_session
@@ -49,12 +49,28 @@ class ServerConfig:
     max_new_tokens: int = 16
     temperature: float = 0.0  # 0 = greedy
     seed: int = 0
+    # generation stops for a row once it emits this token; ``None`` decodes
+    # the full ``max_new_tokens`` budget for every row
+    stop_token: int | None = None
 
 
 @dataclasses.dataclass
 class Request:
     tokens: np.ndarray             # (prompt_len,) int32
     extra: dict = dataclasses.field(default_factory=dict)
+
+
+def generation_lengths(tokens: np.ndarray, stop_token: int | None) -> np.ndarray:
+    """Per-request generated length: tokens up to and including the first
+    stop token; the full row when it never stops (or no stop is configured).
+    Tokens a row emits *after* its stop are padding, not throughput — the
+    old ``tokens.size`` accounting billed them as served work."""
+
+    b, n = tokens.shape
+    if stop_token is None:
+        return np.full((b,), n, np.int64)
+    hit = tokens == stop_token
+    return np.where(hit.any(axis=1), hit.argmax(axis=1) + 1, n).astype(np.int64)
 
 
 class Server:
@@ -84,15 +100,18 @@ class Server:
 
     # -- persistent step construction -------------------------------------------
 
-    def _prefill_request(self, batch) -> PersistentRequest:
-        key = argument_signature(batch)
+    def _prefill_request(self, batch, extra_capacity: int | None = None) -> PersistentRequest:
+        # the decode headroom is part of the bucket key: the engine re-prefills
+        # resumed requests with a *shrunken* extra so cache capacity stays at
+        # the fixed prompt_bucket + max_new invariant
+        extra = self.scfg.max_new_tokens if extra_capacity is None else int(extra_capacity)
+        key = (argument_signature(batch), extra)
         req = self._prefill_reqs.get(key)
         if req is None:
             def prefill_step(p, b):
                 tool.pvar_count("trace:prefill_step")
                 return self.bundle.prefill(
-                    p, b, self.pcfg, None,
-                    extra_capacity=self.scfg.max_new_tokens,
+                    p, b, self.pcfg, None, extra_capacity=extra,
                 )
 
             req = PersistentRequest(jax.jit(prefill_step), (self.params, batch))
@@ -193,10 +212,13 @@ class Server:
             outs = self._decode_loop(cache, tok, key)
             t_decode = time.perf_counter() - t1
         tokens = np.stack([np.asarray(t) for t in outs], axis=1)
+        gen_lens = generation_lengths(tokens, self.scfg.stop_token)
         stats = {
             "prefill_s": t_prefill,
             "decode_s": t_decode,
-            "tokens_per_s": tokens.size / max(t_decode, 1e-9),
+            "gen_lens": gen_lens.tolist(),
+            "generated_tokens": int(gen_lens.sum()),
+            "tokens_per_s": int(gen_lens.sum()) / max(t_decode, 1e-9),
             "batch": len(requests),
         }
         return tokens, stats
@@ -248,20 +270,34 @@ class DisaggregatedServer:
         pset: str = "repro://world",
         prefill_fraction: float = 0.5,
         kv_pages: int = 4,
+        fanout: tuple[int, int] | None = None,
     ):
         sess = session if session is not None else default_session()
         g = sess.group(pset)
         n = g.size()
-        errors.check(
-            0.0 < prefill_fraction < 1.0,
-            errors.ErrorClass.ERR_ARG,
-            f"prefill_fraction must be in (0, 1), got {prefill_fraction}",
-        )
-        if n > 1:
-            k = min(n - 1, max(1, round(n * prefill_fraction)))
-            prefill_g, decode_g = g.incl(range(k)), g.excl(range(k))
+        if fanout is not None:
+            # explicit heterogeneous P:D split (2:6, 3:5, ...) — the KV
+            # routing follows the dist-graph adjacency rather than the
+            # paired i -> k+i bridge permutation
+            pf, df = int(fanout[0]), int(fanout[1])
+            errors.check(
+                pf + df == n and n > 1,
+                errors.ErrorClass.ERR_TOPOLOGY,
+                f"fan-out {pf}:{df} needs a {pf + df}-rank process set, "
+                f"pset {pset!r} has {n}",
+            )
+            k, prefill_g, decode_g = pf, g.incl(range(pf)), g.excl(range(pf))
         else:
-            k, prefill_g, decode_g = 1, g, g  # degenerate single-device set
+            errors.check(
+                0.0 < prefill_fraction < 1.0,
+                errors.ErrorClass.ERR_ARG,
+                f"prefill_fraction must be in (0, 1), got {prefill_fraction}",
+            )
+            if n > 1:
+                k = min(n - 1, max(1, round(n * prefill_fraction)))
+                prefill_g, decode_g = g.incl(range(k)), g.excl(range(k))
+            else:
+                k, prefill_g, decode_g = 1, g, g  # degenerate single-device set
         sess.register_pset(f"{pset}/prefill", prefill_g)
         sess.register_pset(f"{pset}/decode", decode_g)
         self.prefill = Server(
@@ -284,13 +320,24 @@ class DisaggregatedServer:
         # bridge ranks: prefill devices first, then decode's (group union
         # order); pair prefill i -> decode i (distinct targets: ERR_RANK
         # guards duplicates)
-        pairs = min(prefill_g.size(), decode_g.size())
-        if n > 1:
-            self._perm = [(i, k + i) for i in range(pairs)]
-            self._decode_root = k
+        if fanout is not None:
+            # the routing IS the graph: every dist-graph edge becomes a
+            # window rput pair, so decode rank P+j pulls from prefill j % P
+            self.graph = topology.serving_fanout_graph(self.bridge, pf, df)
+            self._perm = topology.fanout_routes(
+                *topology.serving_fanout_adjacency(pf, df)
+            )
+            self._decode_root = pf
         else:
-            self._perm = [(0, 0)]
-            self._decode_root = 0
+            self.graph = None
+            pairs = min(prefill_g.size(), decode_g.size())
+            if n > 1:
+                self._perm = [(i, k + i) for i in range(pairs)]
+                self._decode_root = k
+            else:
+                self._perm = [(0, 0)]
+                self._decode_root = 0
+        self.fanout = fanout
         self.kv_pages = int(kv_pages)
         self.scfg = scfg
         self._transfer_reqs: dict[tuple, PersistentRequest] = {}
@@ -301,8 +348,12 @@ class DisaggregatedServer:
         key = argument_signature(staged_cache)
         req = self._transfer_reqs.get(key)
         if req is None:
-            bridge, perm = self.bridge, self._perm
-            pages, root = self.kv_pages, self._decode_root
+            bridge, pages, root = self.bridge, self.kv_pages, self._decode_root
+            # a heterogeneous fan-out gives one prefill origin several decode
+            # targets; send_recv carries at most one target per origin, so
+            # each page goes out as one rput per round (targets are disjoint
+            # across rounds — decode ranks have exactly one source)
+            rounds = topology.fanout_rounds(self._perm)
 
             def move(cache):
                 tool.pvar_count("trace:kv_transfer")
@@ -310,16 +361,19 @@ class DisaggregatedServer:
                     bridge, jax.tree_util.tree_map(jnp.zeros_like, cache)
                 )
                 win.fence()
-                futs = [win.rput(cache, perm, page=(0, pages))]
+
+                def page_puts(p):
+                    return futures.when_all(
+                        [win.rput(cache, rnd, page=(p, pages)) for rnd in rounds]
+                    )
+
+                futs = [page_puts(0)]
                 for p in range(1, pages):
                     # each page's request chains onto its predecessor: the
                     # continuation completes the previous transfer, then
-                    # issues (and completes) the next page's rput
+                    # issues (and completes) the next page's rputs
                     futs.append(futs[-1].then(
-                        lambda f, _p=p: (
-                            f.get(),
-                            win.rput(cache, perm, page=(_p, pages)).get(),
-                        )[1]
+                        lambda f, _p=p: (f.get(), page_puts(_p).get())[1]
                     ))
                 futures.when_all(futs).get()   # MPI_Waitall before the close
                 win.fence()                    # epoch close completes the epoch
@@ -384,10 +438,13 @@ class DisaggregatedServer:
             outs = self.decode._decode_loop(cache, tok, key)
         t_decode = time.perf_counter() - t1
         tokens = np.stack([np.asarray(t) for t in outs], axis=1)
+        gen_lens = generation_lengths(tokens, self.scfg.stop_token)
         stats = {
             "prefill_s": t_prefill,
             "decode_s": t_decode,
-            "tokens_per_s": tokens.size / max(t_decode, 1e-9),
+            "gen_lens": gen_lens.tolist(),
+            "generated_tokens": int(gen_lens.sum()),
+            "tokens_per_s": int(gen_lens.sum()) / max(t_decode, 1e-9),
             "batch": len(requests),
             "prefill_devices": self.prefill.comm.size(),
             "decode_devices": self.decode.comm.size(),

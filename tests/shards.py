@@ -37,6 +37,7 @@ SHARDS = {
         "tests/test_distributed_paths.py",
         "tests/test_dryrun_integration.py",
         "tests/test_elastic_multidevice.py",
+        "tests/test_engine.py",
         "tests/test_kernels.py",
         "tests/test_models.py",
         "tests/test_server.py",

@@ -1,0 +1,343 @@
+"""Continuous-batching engine: parity against the fixed-batch Server
+oracle, paged-pool accounting, preemption/resume, fan-out topologies, and
+the serving stats/bench-gate fixes that rode along (single-device)."""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.core import errors, onesided
+from repro.core.descriptors import WindowSpec
+from repro.core import topology
+from repro.launch.mesh import make_host_communicator
+from repro.runtime.engine import Engine, EngineConfig, make_engine
+from repro.runtime.kvpool import KVBlockPool
+from repro.runtime.server import (
+    Request,
+    Server,
+    ServerConfig,
+    generation_lengths,
+)
+
+ROOT = Path(__file__).resolve().parents[1]
+
+BUCKET = 8
+
+
+def _tiny_cfg():
+    # float32: the parity tests compare argmax chains token-for-token, and
+    # bf16 rounding flips near-tied argmaxes between batch shapes
+    return ModelConfig(
+        name="tiny", family="dense", num_layers=2, d_model=32, num_heads=2,
+        num_kv_heads=1, head_dim=16, d_ff=64, vocab_size=64, dtype="float32",
+    )
+
+
+def _server(max_batch=4, max_new=6, **kw):
+    return Server(
+        _tiny_cfg(), ParallelConfig(),
+        ServerConfig(max_batch=max_batch, max_new_tokens=max_new,
+                     temperature=0.0, **kw),
+        make_host_communicator(),
+    )
+
+
+def _prompts(n, seed=0, vocab=64):
+    rng = np.random.default_rng(seed)
+    return [
+        rng.integers(1, vocab, size=(int(rng.integers(2, BUCKET + 1)),),
+                     dtype=np.int32)
+        for _ in range(n)
+    ]
+
+
+def _oracle(server, prompts):
+    """The fixed-batch Server on bucket-left-padded prompts is the engine's
+    parity oracle: same content at the same cache positions."""
+
+    outs = {}
+    mb = server.scfg.max_batch
+    for i in range(0, len(prompts), mb):
+        group = prompts[i:i + mb]
+        reqs = [
+            Request(tokens=np.concatenate(
+                [np.zeros((BUCKET - len(p),), np.int32), p]))
+            for p in group
+        ]
+        tokens, _ = server.generate(reqs)
+        for j, _p in enumerate(group):
+            outs[i + j] = np.asarray(tokens[j])
+    return outs
+
+
+# -- token-for-token parity ---------------------------------------------------
+
+
+def test_ragged_admission_parity_with_fixed_batch_oracle():
+    """6 ragged requests over 4 slots: the last two are admitted mid-flight
+    into a running decode iteration, each request retires at its own budget
+    — and every token matches the fixed-batch oracle."""
+
+    srv = _server(max_batch=4, max_new=6)
+    prompts = _prompts(6, seed=3)
+    budgets = [6, 3, 5, 2, 4, 6]
+    oracle = _oracle(srv, prompts)
+
+    eng = Engine(srv, EngineConfig(prompt_bucket=BUCKET, block_tokens=4))
+    handles = [eng.submit(p, max_new=b) for p, b in zip(prompts, budgets)]
+    eng.run()
+
+    assert all(h.state == "finished" for h in handles)
+    for i, h in enumerate(handles):
+        assert len(h.generated) == budgets[i]
+        np.testing.assert_array_equal(
+            np.asarray(h.generated), oracle[i][: budgets[i]],
+            err_msg=f"request {i} diverged from the fixed-batch oracle",
+        )
+    # the fifth/sixth request could only start after a retirement: admission
+    # happened mid-flight, not as one big batch
+    assert eng.stats()["steps"] < sum(budgets)
+
+
+def test_preemption_resume_parity_under_memory_pressure():
+    """A pool budget too small for four full-depth rows forces evictions;
+    preempted requests resume by re-prefilling prompt + generated prefix and
+    still match the oracle token-for-token."""
+
+    srv = _server(max_batch=4, max_new=6)
+    prompts = _prompts(6, seed=11)
+    oracle = _oracle(srv, prompts)
+
+    ecfg = EngineConfig(prompt_bucket=BUCKET, block_tokens=2, pool_blocks=20)
+    eng = Engine(srv, ecfg)
+    handles = [eng.submit(p) for p in prompts]
+    eng.run()
+
+    assert eng.stats()["preemptions"] > 0, (
+        "budget of 20 x 2-token blocks must not fit 4 rows of depth 14"
+    )
+    assert any(h.preemptions > 0 for h in handles)
+    for i, h in enumerate(handles):
+        np.testing.assert_array_equal(
+            np.asarray(h.generated), oracle[i],
+            err_msg=f"request {i} diverged after preemption/resume",
+        )
+    assert eng.pool.live_blocks == 0
+
+
+def test_block_tables_reused_after_retirement():
+    """Slot block ids are slot-affine, so the next occupant of a retired
+    slot reuses the freed ids verbatim."""
+
+    srv = _server(max_batch=2, max_new=3)
+    eng = Engine(srv, EngineConfig(prompt_bucket=BUCKET, block_tokens=4))
+    first = [eng.submit(p, max_new=2) for p in _prompts(2, seed=1)]
+    eng.run()
+    tables = {h.slot for h in first}  # slots are cleared on retire
+    assert tables == {None}
+    first_ids = [sorted(h.block_ids) for h in first]
+
+    second = [eng.submit(p, max_new=2) for p in _prompts(2, seed=2)]
+    eng.run()
+    second_ids = [sorted(h.block_ids) for h in second]
+    assert sorted(map(tuple, first_ids)) == sorted(map(tuple, second_ids))
+
+
+# -- submission / config validation -------------------------------------------
+
+
+def test_submit_validation():
+    srv = _server(max_batch=2, max_new=4)
+    eng = make_engine(srv, EngineConfig(prompt_bucket=4))
+    with pytest.raises(errors.TruncateError):
+        eng.submit(np.ones((5,), np.int32))          # prompt > bucket
+    with pytest.raises(errors.ArgError):
+        eng.submit(np.ones((3,), np.int32), max_new=9)   # budget > ceiling
+    with pytest.raises(errors.UnsupportedError):
+        eng.submit(Request(tokens=np.ones((3,), np.int32),
+                           extra={"image_embeds": np.ones((2, 8))}))
+
+
+def test_engine_rejects_ring_buffer_caches():
+    cfg = ModelConfig(
+        name="tiny-sw", family="dense", num_layers=2, d_model=32, num_heads=2,
+        num_kv_heads=1, head_dim=16, d_ff=64, vocab_size=64, dtype="float32",
+        sliding_window=4,
+    )
+    srv = Server(cfg, ParallelConfig(),
+                 ServerConfig(max_batch=2, max_new_tokens=3, temperature=0.0),
+                 make_host_communicator())
+    with pytest.raises(errors.UnsupportedError):
+        Engine(srv, EngineConfig())
+
+
+# -- KVBlockPool accounting ---------------------------------------------------
+
+
+def test_pool_budget_and_range_errors():
+    pool = KVBlockPool(num_slots=2, slot_capacity=8, block_tokens=4,
+                       budget_blocks=3)
+    assert pool.blocks_per_slot == 2 and pool.total_blocks == 4
+    assert pool.ensure(0, 8) == [0, 1]
+    assert pool.ensure(1, 4) == [2]
+    with pytest.raises(errors.NoMemError):
+        pool.ensure(1, 8)                    # budget exhausted
+    with pytest.raises(errors.RmaRangeError):
+        pool.ensure(0, 9)                    # beyond slot capacity
+    with pytest.raises(errors.ArgError):
+        pool.ensure(2, 4)                    # slot out of range
+    assert pool.release(0) == [0, 1]
+    assert pool.ensure(1, 8) == [3]          # freed budget absorbed the growth
+    assert pool.free_blocks == 1
+    with pytest.raises(errors.NoMemError):
+        KVBlockPool(num_slots=2, slot_capacity=8, block_tokens=4,
+                    budget_blocks=1)         # can't fit even one full slot
+
+
+def test_pool_mirrors_dynamic_window_attach_state():
+    comm = make_host_communicator()
+    pool = KVBlockPool(num_slots=2, slot_capacity=8, block_tokens=4)
+    win = onesided.Window(
+        comm, np.zeros((8, 4), np.float32),
+        WindowSpec(dynamic=True, num_pages=pool.total_blocks),
+    )
+    pool.ensure(0, 8)                        # live before binding
+    pool.bind_window(win)
+    assert win.attached_pages == {0, 1}
+    pool.ensure(1, 5)
+    assert win.attached_pages == {0, 1, 2, 3}
+    pool.release(0)
+    assert win.attached_pages == {2, 3}
+
+    static = onesided.Window(comm, np.zeros((8, 4), np.float32))
+    with pytest.raises(errors.WinError):
+        pool.bind_window(static)
+    mismatched = onesided.Window(
+        comm, np.zeros((8, 4), np.float32), WindowSpec(dynamic=True, num_pages=3)
+    )
+    with pytest.raises(errors.RmaRangeError):
+        pool.bind_window(mismatched)
+
+
+# -- heterogeneous fan-out topology -------------------------------------------
+
+
+def test_serving_fanout_adjacency_and_routes():
+    # 2 prefill : 6 decode — decode rank 2+j pulls from prefill j % 2
+    sources, destinations = topology.serving_fanout_adjacency(2, 6)
+    assert destinations[:2] == [[2, 4, 6], [3, 5, 7]]   # prefill fan-outs
+    assert sources[:2] == [[], []]
+    assert sources[2:] == [[0], [1], [0], [1], [0], [1]]
+    assert destinations[2:] == [[]] * 6
+    perm = topology.fanout_routes(sources, destinations)
+    assert perm == [(0, 2), (1, 3), (0, 4), (1, 5), (0, 6), (1, 7)]
+    # send_recv carries one target per origin, so the routes split into
+    # ceil(D/P) rounds with unique origins (and disjoint targets) each
+    rounds = topology.fanout_rounds(perm)
+    assert rounds == [[(0, 2), (1, 3)], [(0, 4), (1, 5)], [(0, 6), (1, 7)]]
+    srcs35, dsts35 = topology.serving_fanout_adjacency(3, 5)
+    rounds35 = topology.fanout_rounds(topology.fanout_routes(srcs35, dsts35))
+    assert len(rounds35) == 2
+    for rnd in rounds35:
+        assert len({s for s, _ in rnd}) == len(rnd)   # unique origins
+    assert sorted(d for rnd in rounds35 for _, d in rnd) == [3, 4, 5, 6, 7]
+    # a one-to-one bridge permutation is already legal: a single round
+    assert topology.fanout_rounds([(0, 2), (1, 3)]) == [[(0, 2), (1, 3)]]
+    with pytest.raises(errors.DimsError):
+        topology.serving_fanout_adjacency(3, 2)   # more prefill than decode
+    with pytest.raises(errors.DimsError):
+        topology.serving_fanout_adjacency(0, 4)
+
+
+# -- Server.generate stats fix ------------------------------------------------
+
+
+def test_generation_lengths_counts_up_to_stop():
+    toks = np.array([
+        [5, 9, 2, 7],     # stops at token 2 (index 2) -> length 3
+        [5, 9, 4, 7],     # never stops -> full row
+        [2, 2, 2, 2],     # stops immediately -> length 1
+    ], np.int32)
+    assert generation_lengths(toks, 2).tolist() == [3, 4, 1]
+    assert generation_lengths(toks, None).tolist() == [4, 4, 4]
+
+
+def test_generate_stats_report_real_lengths():
+    srv = _server(max_batch=2, max_new=4)
+    toks, stats = srv.generate([Request(tokens=p) for p in _prompts(2, seed=5)])
+    assert stats["gen_lens"] == [4, 4]            # no stop token configured
+    assert stats["generated_tokens"] == 8
+    assert stats["tokens_per_s"] == pytest.approx(
+        8 / stats["decode_s"], rel=1e-6
+    )
+    # with a stop token, rows must not be billed past their stop
+    stop = int(np.asarray(toks)[0, 1])
+    srv2 = _server(max_batch=2, max_new=4, stop_token=stop)
+    _toks2, stats2 = srv2.generate(
+        [Request(tokens=p) for p in _prompts(2, seed=5)]
+    )
+    lens = stats2["gen_lens"]
+    assert stats2["generated_tokens"] == sum(lens)
+    assert min(lens) <= 2 and all(1 <= n <= 4 for n in lens)
+
+
+# -- bench trajectory gate: unguarded warning + reseed ------------------------
+
+
+@pytest.fixture()
+def bench_run():
+    sys.path.insert(0, str(ROOT))   # benchmarks/ is a namespace package
+    from benchmarks import run as bench_run
+
+    yield bench_run
+    sys.path.remove(str(ROOT))
+
+
+def test_gate_warns_on_unguarded_tracked_series(bench_run, tmp_path, capsys):
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text(json.dumps({"overhead_geomean_ratio": 1.0}))
+    summary = {
+        "overhead_geomean_ratio": 1.0,
+        "serving_tokens_ratio": 1.4,     # tracked, but nobody seeded it
+        "not_tracked_at_all": 9.9,       # untracked extras stay silent
+    }
+    rc = bench_run.gate(summary, baseline)
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "WARNING" in out and "serving_tokens_ratio" in out
+    assert "not_tracked_at_all" not in out
+
+
+def test_gate_fails_on_missing_summary_series(bench_run, tmp_path):
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text(json.dumps(
+        {"serving_ttft_p99_ratio": {"value": 0.5, "tolerance": 0.2}}
+    ))
+    assert bench_run.gate({}, baseline) == 1                   # missing fails
+    assert bench_run.gate({"serving_ttft_p99_ratio": 0.55}, baseline) == 0
+    assert bench_run.gate({"serving_ttft_p99_ratio": 0.61}, baseline) == 1
+
+
+def test_reseed_updates_values_keeps_tolerances(bench_run, tmp_path):
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text(json.dumps({
+        "serving_overhead_ratio": {"value": 1.0, "tolerance": 0.1},
+        "io_overlap_ratio": 0.97,
+    }))
+    summary = {
+        "serving_overhead_ratio": 1.0444,
+        "serving_tokens_ratio": 1.37,
+        "untracked_junk": 5.0,
+    }
+    bench_run.reseed(summary, baseline)
+    new = json.loads(baseline.read_text())
+    assert new["serving_overhead_ratio"] == {"value": 1.0444, "tolerance": 0.1}
+    assert new["serving_tokens_ratio"] == 1.37           # new entry, bare value
+    assert new["io_overlap_ratio"] == 0.97               # untouched by this run
+    assert "untracked_junk" not in new
