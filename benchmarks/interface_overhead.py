@@ -224,6 +224,116 @@ print("RESULT " + json.dumps(rows))
 """
 
 
+# ring-attention series: the fused path (cart ring + TraceFuture/when_all
+# rotate-while-compute + custom_vjp, kernels/ring_attention/ops.py) against
+# the raw hand-written schedule — bare lax.ppermute and the same online-block
+# update, no futures, no cart, no VJP boundary.  Both are trace-time
+# abstractions over the same dataflow, so the claim is the zero-overhead one:
+# tax ~ 1.0 (gated at <= 1.05 in baseline.json).
+RING_CHILD = r"""
+import gc, json, sys, time
+import jax, jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+from repro import core as mpx
+from repro.core import _compat, topology
+from repro.kernels.ring_attention import kernel as rk
+from repro.kernels.ring_attention import ops as ring_ops
+
+reps = int(sys.argv[1])
+comm = mpx.world()
+N = comm.size()
+cart = topology.cart_create(comm, (N,), (True,), tag="repro://cart/ring-bench")
+name = cart.axis_names[0]
+mesh = cart.mesh
+B, S, H, D = 1, 128 * N, 4, 64
+shard = S // N
+scale = D ** -0.5
+spec = P(None, name, None, None)
+perm = [(i, (i + 1) % N) for i in range(N)]
+
+def fused(q, k, v):
+    return ring_ops.ring_attention(cart, q, k, v, causal=True, impl="ref")
+
+def raw(q, k, v):
+    qt = q.transpose(0, 2, 1, 3)
+    kv = jnp.stack([k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)])
+    idx = lax.axis_index(name)
+    m = jnp.full((B, H, shard, 1), rk.NEG_INF, jnp.float32)
+    l = jnp.zeros((B, H, shard, 1), jnp.float32)
+    acc = jnp.zeros((B, H, shard, D), jnp.float32)
+    for step in range(N):
+        src = jnp.mod(idx - step, N)
+        m, l, acc = rk.ring_step_ref(
+            qt, kv[0], kv[1], m, l, acc,
+            q_offset=(idx * shard).astype(jnp.int32),
+            k_offset=(src * shard).astype(jnp.int32),
+            kv_len=jnp.int32(shard), scale=scale, causal=True,
+        )
+        if step < N - 1:
+            kv = lax.ppermute(kv, name, perm)
+    return (acc / jnp.maximum(l, 1e-30)).transpose(0, 2, 1, 3).astype(q.dtype)
+
+ks = jax.random.split(jax.random.PRNGKey(0), 3)
+q = jax.random.normal(ks[0], (B, S, H, D))
+k = jax.random.normal(ks[1], (B, S, H, D))
+v = jax.random.normal(ks[2], (B, S, H, D))
+
+def jit_of(fn):
+    return jax.jit(_compat.shard_map(
+        fn, mesh=mesh, in_specs=(spec, spec, spec), out_specs=spec))
+
+with mesh:
+    j_fused, j_raw = jit_of(fused), jit_of(raw)
+    import numpy as np
+    np.testing.assert_allclose(                     # same math before timing
+        np.asarray(j_fused(q, k, v)), np.asarray(j_raw(q, k, v)),
+        atol=1e-5, rtol=1e-5)
+    # interleaved chunks so machine drift hits both sides alike; median ratio
+    chunk, nchunks = max(3, reps // 5), 5
+    gc.collect(); gc.disable()
+    try:
+        ftimes, rtimes = [], []
+        for _ in range(nchunks):
+            t0 = time.perf_counter()
+            for _ in range(chunk):
+                out = j_fused(q, k, v)
+            jax.block_until_ready(out)
+            ftimes.append((time.perf_counter() - t0) / chunk * 1e6)
+            t0 = time.perf_counter()
+            for _ in range(chunk):
+                out = j_raw(q, k, v)
+            jax.block_until_ready(out)
+            rtimes.append((time.perf_counter() - t0) / chunk * 1e6)
+    finally:
+        gc.enable()
+ratios = sorted(f / r for f, r in zip(ftimes, rtimes))
+tax = ratios[len(ratios) // 2]
+raw_us = sorted(rtimes)[len(rtimes) // 2]
+rows = [{"devices": N, "msg_elems": S, "op": "ring_attention",
+         "series": "ring", "raw_us": raw_us, "iface_us": raw_us * tax}]
+print("RESULT " + json.dumps(rows))
+"""
+
+
+def ring_series(reps: int) -> list[dict]:
+    env = {
+        **os.environ,
+        "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+        "PYTHONPATH": str(ROOT / "src"),
+    }
+    proc = subprocess.run(
+        [sys.executable, "-c", RING_CHILD, str(reps)],
+        capture_output=True, text=True, env=env, timeout=1800, cwd=str(ROOT),
+    )
+    if proc.returncode != 0:
+        raise RuntimeError(proc.stderr[-3000:])
+    for line in proc.stdout.splitlines():
+        if line.startswith("RESULT "):
+            return json.loads(line[len("RESULT "):])
+    raise RuntimeError("no RESULT line")
+
+
 def run(devices: int, msg_lens: list[int], reps: int) -> list[dict]:
     env = {
         **os.environ,
@@ -472,6 +582,8 @@ def main(argv=None):
         for line in proc.stdout.splitlines() if line.startswith("RESULT ")
     )
     all_rows += serving_rows
+    ring_rows = ring_series(args.reps)
+    all_rows += ring_rows
 
     OUT.mkdir(parents=True, exist_ok=True)
     (OUT / "interface_overhead.json").write_text(json.dumps(all_rows, indent=1))
@@ -571,7 +683,19 @@ def main(argv=None):
         serving_ratio = max(serving_ratio, ratio)
         slines.append(f"| {r['op']} | {r['raw_us']:.1f} | {r['iface_us']:.1f} | "
                       f"{ratio:.3f} |")
-    table = "\n".join(lines + plines + rlines + nlines + iolines + slines)
+    # ring-attention series: the fused futures-scheduled ring vs the raw
+    # hand-written ppermute schedule (same math, same collectives)
+    glines = ["", "| devices | seq | raw ring µs | fused ring µs | ring tax |",
+              "|---|---|---|---|---|"]
+    ring_tax = 0.0
+    for r in ring_rows:
+        ratio = r["iface_us"] / max(r["raw_us"], 1e-9)
+        ring_tax = max(ring_tax, ratio)
+        glines.append(
+            f"| {r['devices']} | {r['msg_elems']} | {r['raw_us']:.1f} | "
+            f"{r['iface_us']:.1f} | {ratio:.3f} |"
+        )
+    table = "\n".join(lines + plines + rlines + nlines + iolines + slines + glines)
     (OUT / "interface_overhead.md").write_text(table + "\n")
     print(table)
     print(f"worst geomean ratio: {worst:.3f} (paper claim: ~1.0, 'no recognizable disparity')")
@@ -588,7 +712,11 @@ def main(argv=None):
           f"manifest commits per save: {worst_commits:.1f}, claim: exactly 1)")
     print(f"continuous-batching scheduler tax: {serving_ratio:.3f} "
           "(claim: <= 1.10 — engine.step() over the raw decode loop body)")
-    ok = worst_persist <= 1.0 and worst_commits == 1.0 and serving_ratio <= 1.10
+    print(f"ring attention tax: {ring_tax:.3f} "
+          "(claim: <= 1.05 — fused futures-scheduled ring over the raw "
+          "hand-written ppermute schedule)")
+    ok = (worst_persist <= 1.0 and worst_commits == 1.0
+          and serving_ratio <= 1.10 and ring_tax <= 1.05)
     return 0 if ok else 1
 
 

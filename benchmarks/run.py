@@ -49,6 +49,8 @@ TRACKED = {
     "serving_overhead_ratio": "lower",      # engine.step / raw decode loop body
     "serving_tokens_ratio": "higher",       # continuous / fixed tokens-per-s
     "serving_ttft_p99_ratio": "lower",      # continuous / fixed p99 TTFT
+    "ring_attention_tax": "lower",          # fused ring / raw ppermute schedule
+    "ring_steps_per_s": "higher",           # long-context ring train steps/s
 }
 
 
@@ -96,6 +98,11 @@ def summarize(out_dir: Path = OUT) -> dict:
             summary["serving_overhead_ratio"] = _geomean(
                 [r["iface_us"] / max(r["raw_us"], 1e-9) for r in serving]
             )
+        ring = [r for r in rows if r.get("series") == "ring"]
+        if ring:
+            summary["ring_attention_tax"] = _geomean(
+                [r["iface_us"] / max(r["raw_us"], 1e-9) for r in ring]
+            )
 
     sb = out_dir / "serving_bench.json"
     if sb.exists():
@@ -111,6 +118,12 @@ def summarize(out_dir: Path = OUT) -> dict:
             summary["io_commits_per_save"] = max(
                 r["manifest_commits_per_save"] for r in rows
             )
+
+    ring_tp = out_dir / "train_throughput_ring.json"
+    if ring_tp.exists():
+        rows = [r for r in json.loads(ring_tp.read_text()) if r.get("ring", 0) > 1]
+        if rows:
+            summary["ring_steps_per_s"] = max(r["steps_per_s"] for r in rows)
 
     parity = out_dir / "hlo_parity.json"
     if parity.exists():
@@ -210,6 +223,40 @@ def reseed(summary: dict, baseline_path: Path) -> None:
     print(f"reseeded {path} from current summary ({len(summary)} series)")
 
 
+def record(summary: dict, history_dir: Path | None = None) -> Path:
+    """Append one dated summary row to the committed bench history
+    (``benchmarks/history/history.jsonl``, one JSON object per line) — the
+    trajectory of the tracked series across PRs, durable where
+    ``artifacts/`` is not.  Rows carry the date and short commit so a plot
+    over the file is a perf timeline of the repo."""
+
+    import datetime
+    import subprocess
+
+    history_dir = history_dir or ROOT / "benchmarks" / "history"
+    history_dir.mkdir(parents=True, exist_ok=True)
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, cwd=str(ROOT), timeout=30,
+        ).stdout.strip() or None
+    except Exception:
+        commit = None
+    row = {
+        "date": datetime.date.today().isoformat(),
+        "commit": commit,
+        "series": {
+            k: round(float(v), 4) for k, v in sorted(summary.items())
+            if k in TRACKED
+        },
+    }
+    path = history_dir / "history.jsonl"
+    with path.open("a") as f:
+        f.write(json.dumps(row, sort_keys=True) + "\n")
+    print(f"recorded bench summary row to {path} ({row['date']}, {commit})")
+    return path
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
@@ -226,6 +273,12 @@ def main(argv=None):
         metavar="BASELINE",
         help="compare the summary against a committed baseline JSON; "
         "exit 1 on >25%% regression of any tracked series",
+    )
+    ap.add_argument(
+        "--record",
+        action="store_true",
+        help="append a dated row of the tracked series to "
+        "benchmarks/history/history.jsonl (the committed perf trajectory)",
     )
     ap.add_argument(
         "--reseed",
@@ -259,6 +312,11 @@ def main(argv=None):
             ("roofline(multi-pod)", lambda: roofline.main(["--mesh", "multipod_2x16x16"])),
             ("train_throughput", lambda: train_throughput.main(
                 ["--steps", "5"] if args.quick else [])),
+            # long-context ring mode: sequence sharded over a (2, 4) cart
+            # ring — a global length one device's dense path would not train
+            ("train_throughput(ring)", lambda: train_throughput.main(
+                ["--ring", "4", "--steps", "2", "--seq", "512"] if args.quick
+                else ["--ring", "4", "--steps", "3", "--seq", "1024"])),
         ]
         for name, fn in jobs:
             if any(s in name for s in args.skip):
@@ -278,6 +336,8 @@ def main(argv=None):
     print("\nBENCH_summary.json:")
     for k, v in summary.items():
         print(f"  {k}: {v:.4f}")
+    if args.record:
+        record(summary)
     if args.reseed:
         reseed(summary, Path(args.reseed))
     if args.gate:

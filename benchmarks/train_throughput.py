@@ -26,12 +26,16 @@ from repro.runtime.trainer import Trainer, TrainerConfig
 
 arch, steps, batch, seq = sys.argv[1], int(sys.argv[2]), int(sys.argv[3]), int(sys.argv[4])
 persistent = sys.argv[5] == "persistent"
+ring = int(sys.argv[6]) if len(sys.argv) > 6 else 0
 cfg = base.get_smoke_config(arch)
 pcfg = base.get_parallel(arch)
 mesh = make_host_mesh()
 t = Trainer(cfg, pcfg,
-            TrainerConfig(steps=steps, log_every=steps, persistent=persistent),
+            TrainerConfig(steps=steps, log_every=steps, persistent=persistent,
+                          ring_attention=ring),
             mesh, seq_len=seq, global_batch=batch)
+mesh = t.mesh    # ring/pipeline modes re-form the communicator (and mesh)
+pcfg = t.pcfg
 params, opt_state = t.init_state()
 step_fn = t.compile(params, opt_state)
 b = t.pipeline.device_batch(0, mesh, pcfg)
@@ -46,8 +50,10 @@ dt = time.perf_counter() - t0
 print("RESULT " + json.dumps({
     "arch": arch, "steps": steps, "s_per_step": dt / steps,
     "tokens_per_s": batch * seq * steps / dt,
+    "steps_per_s": steps / dt,
     "final_loss": float(m["loss"]),
-    "mode": "persistent" if persistent else "per-call",
+    "seq": seq, "ring": ring,
+    "mode": "ring" if ring > 1 else ("persistent" if persistent else "per-call"),
 }))
 """
 
@@ -60,7 +66,16 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--per-call", dest="per_call", action="store_true",
                     help="plain-jit step instead of the persistent engine")
+    ap.add_argument("--ring", type=int, default=0,
+                    help="ring-attention mode: fold the devices onto a "
+                    "(data, ring) cart of this ring size and shard the "
+                    "sequence — run at --seq lengths one device's KV budget "
+                    "cannot hold (reports ring_steps_per_s)")
     args = ap.parse_args(argv)
+    if args.ring > 1:
+        # the long-context configuration: sequence sharded over the ring,
+        # dense family only (the ring path lives in the attention layers)
+        args.archs = [a for a in args.archs if a == "gemma2_9b"] or ["gemma2_9b"]
 
     env = {
         **os.environ,
@@ -71,7 +86,8 @@ def main(argv=None):
     for arch in args.archs:
         proc = subprocess.run(
             [sys.executable, "-c", CHILD, arch, str(args.steps), str(args.batch),
-             str(args.seq), "per-call" if args.per_call else "persistent"],
+             str(args.seq), "per-call" if args.per_call else "persistent",
+             str(args.ring)],
             capture_output=True, text=True, env=env, timeout=1800, cwd=str(ROOT),
         )
         if proc.returncode != 0:
@@ -84,7 +100,8 @@ def main(argv=None):
                 print(f"{arch}: {r['s_per_step']*1e3:.1f} ms/step, "
                       f"{r['tokens_per_s']:.0f} tok/s (smoke scale, 8 virtual devs)")
     OUT.mkdir(parents=True, exist_ok=True)
-    (OUT / "train_throughput.json").write_text(json.dumps(rows, indent=1))
+    name = "train_throughput_ring.json" if args.ring > 1 else "train_throughput.json"
+    (OUT / name).write_text(json.dumps(rows, indent=1))
     return 0
 
 

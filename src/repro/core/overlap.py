@@ -21,6 +21,11 @@ Contents:
   all-gather back — the cross-pod gradient reduction.
 * :func:`merge_partial_attention` — flash-decoding combine for
   sequence-sharded KV caches.
+* :func:`ring_rotate_compute` — the double-buffered rotate-while-compute
+  schedule (generalizing :func:`halo_exchange`): step ``i+1``'s rotation is
+  issued as a :class:`TraceFuture` before step ``i``'s compute and joined
+  with ``when_all`` — the engine under ring attention
+  (:mod:`repro.kernels.ring_attention`).
 * :func:`ring_attention` — sequence-parallel attention for training: KV
   blocks circulate the ring; online-softmax state makes every step O(local).
 * :func:`partitioned_allreduce` / :func:`partitioned_ring_reduce_scatter` /
@@ -50,7 +55,7 @@ from jax import lax
 from repro.core import compress, errors
 from repro.core.communicator import Communicator
 from repro.core.descriptors import Compression
-from repro.core.futures import PartitionedRequest, TraceFuture
+from repro.core.futures import PartitionedRequest, TraceFuture, when_all
 
 
 def _ring_perm(n: int, offset: int = 1) -> list[tuple[int, int]]:
@@ -291,6 +296,40 @@ def merge_partial_attention(
     return num / jnp.maximum(den, 1e-30)
 
 
+def ring_rotate_compute(rotate, buf, steps: int, step_fn, carry):
+    """Double-buffered rotate-while-compute: the generic schedule behind
+    ring attention, generalizing :func:`halo_exchange` from one boundary
+    exchange to a full rotation.
+
+    ``rotate(buf)`` returns the *in-flight* next buffer as a lazy
+    :class:`TraceFuture` (e.g. ``cart.shift_exchange(buf, dim, 1)``);
+    ``step_fn(carry, buf, step)`` folds the current buffer into the carry.
+    Each round issues the rotation of step ``i+1`` *before* step ``i``'s
+    compute and joins the two with :func:`~repro.core.futures.when_all` —
+    the ``MPI_Isend`` / compute / ``MPI_Waitall`` triangle.  The dependence
+    frontier this fixes (permute ``i+1`` needs only buffer ``i``, never
+    carry ``i``) is exactly the freedom the XLA scheduler needs to overlap
+    each permute's DMA with the current step's compute.  The last step
+    rotates nothing: ``steps`` buffers cost ``steps - 1`` exchanges.
+    """
+
+    errors.check(
+        steps >= 1,
+        errors.ErrorClass.ERR_COUNT,
+        f"ring schedule needs >= 1 step, got {steps}",
+    )
+    for step in range(steps):
+        if step < steps - 1:
+            in_flight = rotate(buf)
+            compute = TraceFuture(
+                lambda c=carry, b=buf, s=step: step_fn(c, b, s)
+            )
+            carry, buf = when_all([compute, in_flight]).get()
+        else:
+            carry = step_fn(carry, buf, step)
+    return carry
+
+
 def _online_block(q, k, v, m, l, acc, *, bias=None, scale):
     """One online-softmax accumulation step (fp32 state)."""
 
@@ -339,18 +378,24 @@ def ring_attention(
     acc = jnp.zeros((b, sq, h, d), jnp.float32)
 
     q_pos = idx * sq + jnp.arange(sq)
-    k_cur, v_cur = k, v
-    for step in range(n):
+
+    def rotate(kv):
+        # one permute per step: K and V travel as a single stacked buffer
+        return TraceFuture(lambda: lax.ppermute(kv, name, _ring_perm(n)))
+
+    def step_fn(carry, kv, step):
+        m, l, acc = carry
         src = (idx - step) % n
         k_pos = src * sk + jnp.arange(sk)
         bias = None
         if causal:
             mask = q_pos[:, None] >= k_pos[None, :]
             bias = jnp.where(mask, 0.0, -jnp.inf)[None, None]  # (1,1,sq,sk)
-        m, l, acc = _online_block(q, k_cur, v_cur, m, l, acc, bias=bias, scale=scale)
-        if step != n - 1:
-            k_cur = lax.ppermute(k_cur, name, _ring_perm(n))
-            v_cur = lax.ppermute(v_cur, name, _ring_perm(n))
+        return _online_block(q, kv[0], kv[1], m, l, acc, bias=bias, scale=scale)
+
+    m, l, acc = ring_rotate_compute(
+        rotate, jnp.stack([k, v]), n, step_fn, (m, l, acc)
+    )
     norm = jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]  # (b,sq,h,1)
     return (acc / norm).astype(q.dtype)
 

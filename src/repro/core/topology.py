@@ -246,6 +246,30 @@ def _build_edges(
     return edges
 
 
+def cart_edges(
+    dims: Sequence[int], periods: Sequence[bool]
+) -> list[_Edge]:
+    """The Cartesian neighbor edge set with its slot pairing made explicit:
+    the out-slot ``2d`` (−) send lands in the receiver's + slot (``2d+1``)
+    and vice versa.  The generic occurrence-order pairing of
+    :func:`_build_edges` would get this wrong exactly when both slots of a
+    dim name the same rank (size-2 or size-1 periodic dims),
+    desynchronising the neighbor_alltoallv recv-count table from the
+    physical exchange."""
+
+    dims = tuple(int(d) for d in dims)
+    n = math.prod(dims)
+    edges: list[_Edge] = []
+    for dim in range(len(dims)):
+        sources, destinations = cart_shift_tables(dims, periods, dim, 1)
+        for r in range(n):
+            if destinations[r] != PROC_NULL:
+                edges.append(_Edge(r, destinations[r], 2 * dim + 1, 2 * dim))
+            if sources[r] != PROC_NULL:
+                edges.append(_Edge(r, sources[r], 2 * dim, 2 * dim + 1))
+    return edges
+
+
 class _NeighborComm(Communicator):
     """Shared engine: a communicator with a neighbor structure.
 
@@ -521,20 +545,7 @@ class CartComm(_NeighborComm):
             dsts.append(tuple(d_r))
         self._sources = tuple(srcs)
         self._destinations = tuple(dsts)
-        # Cart edges carry their slot pairing explicitly: the out-slot 2d
-        # (−) send lands in the receiver's + slot (2d+1) and vice versa.
-        # The generic occurrence-order pairing of _build_edges would get
-        # this wrong exactly when both slots of a dim name the same rank
-        # (size-2 or size-1 periodic dims), desynchronising the
-        # neighbor_alltoallv recv-count table from the physical exchange.
-        edges = []
-        for dim, (sources, destinations) in enumerate(shifts):
-            for r in range(n):
-                if destinations[r] != PROC_NULL:
-                    edges.append(_Edge(r, destinations[r], 2 * dim + 1, 2 * dim))
-                if sources[r] != PROC_NULL:
-                    edges.append(_Edge(r, sources[r], 2 * dim, 2 * dim + 1))
-        self._rounds = _matching_rounds(edges)
+        self._rounds = _matching_rounds(cart_edges(self.dims, self.periods))
 
     # -- cart queries -------------------------------------------------------
 

@@ -51,6 +51,7 @@ def _fwd_kernel(
     block_q: int,
     block_k: int,
     num_k_blocks: int,
+    kv_len: int | None,
 ):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
@@ -64,10 +65,14 @@ def _fwd_kernel(
     q_start = qi * block_q
     k_start = ki * block_k
 
-    # causal skip: tile strictly above the diagonal contributes nothing
+    # causal skip: tile strictly above the diagonal contributes nothing;
+    # with a ragged K length the padded tail tiles are skipped the same way
     needed = True
     if causal:
         needed = k_start <= q_start + block_q - 1
+    if kv_len is not None:
+        tail_ok = k_start < kv_len
+        needed = tail_ok if needed is True else jnp.logical_and(needed, tail_ok)
 
     @pl.when(needed)
     def _body():
@@ -88,6 +93,10 @@ def _fwd_kernel(
             mask = jnp.logical_and(mask, q_pos - k_pos < sliding_window)
         if prefix_len is not None:
             mask = jnp.logical_or(mask, k_pos < prefix_len)
+        if kv_len is not None:
+            # ragged tail: padded K columns are masked out of the online
+            # softmax (applied last so prefix_len cannot re-admit them)
+            mask = jnp.logical_and(mask, k_pos < kv_len)
         s = jnp.where(mask, s, NEG_INF)
 
         m_prev = m_scratch[...]                         # (block_q, 1)
@@ -139,8 +148,19 @@ def flash_attention_fwd(
         scale = 1.0 / math.sqrt(d)
     block_q = min(block_q, sq)
     block_k = min(block_k, sk)
-    assert sq % block_q == 0 and sk % block_k == 0, (sq, block_q, sk, block_k)
-    nq, nk = sq // block_q, sk // block_k
+    # ragged sequence lengths: pad up to block multiples.  Padded Q rows are
+    # sliced off the output; padded K columns are masked out of the online
+    # softmax inside the kernel (kv_len), never averaged in.
+    pad_q = (-sq) % block_q
+    pad_k = (-sk) % block_k
+    kv_len = sk if pad_k else None
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    sqp, skp = sq + pad_q, sk + pad_k
+    nq, nk = sqp // block_q, skp // block_k
 
     # layout: (b, h, s, d) blocks — heads are a pure grid dimension
     qt = q.transpose(0, 2, 1, 3)
@@ -157,6 +177,7 @@ def flash_attention_fwd(
         block_q=block_q,
         block_k=block_k,
         num_k_blocks=nk,
+        kv_len=kv_len,
     )
     out = pl.pallas_call(
         kernel,
@@ -171,7 +192,7 @@ def flash_attention_fwd(
             ),
         ],
         out_specs=pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, h, sq, d), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, h, sqp, d), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, 1), jnp.float32),
@@ -179,4 +200,5 @@ def flash_attention_fwd(
         ],
         interpret=interpret,
     )(qt, kt, vt)
-    return out.transpose(0, 2, 1, 3)
+    out = out.transpose(0, 2, 1, 3)
+    return out[:, :sq] if pad_q else out

@@ -1,0 +1,240 @@
+"""Ring attention over a 1-D periodic :class:`~repro.core.topology.CartComm`.
+
+The fusion of two existing layers: the flash-attention Pallas kernel (blockwise
+online softmax) and the ch. 8 cart/halo fabric (``cart_shift(+1)`` lowering to
+an axis-local ``collective-permute``).  Called per-shard inside ``shard_map``:
+every rank holds its Q shard for the whole schedule while the stacked KV
+buffer rotates around the ring — ``n`` steps, ``n - 1`` collective-permutes,
+each issued as a :class:`~repro.core.futures.TraceFuture` *before* the step it
+overlaps with and joined via ``when_all``
+(:func:`repro.core.overlap.ring_rotate_compute`).  Per-step wire volume is the
+local KV shard: ``1/n`` of the global KV, the ring-attention wire contract
+``benchmarks/hlo_parity.py`` proves on the compiled artifact.
+
+Uneven global lengths: the caller pads the global sequence to ``n × shard``
+(padding at the tail, so shard ``r`` owns global rows ``[r·shard, (r+1)·shard)``
+and only trailing shards hold padding); ``global_len`` sizes the per-source
+valid-row table that masks padded columns out of the online softmax inside the
+kernel.  Padded Q rows produce the reference oracle's uniform-softmax value and
+are sliced off by the caller.
+
+Gradients: ``custom_vjp`` with backward recompute through the differentiable
+jnp ring (same schedule, ``impl='ref'``) — the recompute-backward convention of
+``flash_attention/ops.py``, with the ring loop itself as the VJP boundary so
+no per-step O(S²) residuals survive the forward pass.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import errors, overlap
+from repro.core.futures import TraceFuture
+from repro.kernels.ring_attention import kernel as _kernel
+
+NEG_INF = _kernel.NEG_INF
+
+
+@dataclasses.dataclass(frozen=True)
+class RingSpec:
+    """Static (hashable) description of one ring-attention schedule — the
+    ``nondiff`` payload of the custom-VJP boundary.  ``axis_name`` and
+    ``axis_perm`` come from ``cart.cart_shift(dim, +1)``; ``shard`` is the
+    per-rank sequence length *before* block padding; ``global_len`` the
+    unpadded global sequence length."""
+
+    axis_name: str
+    axis_perm: tuple[tuple[int, int], ...]
+    n: int
+    shard: int
+    global_len: int
+    causal: bool
+    scale: float
+    impl: str
+    block_q: int
+    block_k: int
+
+    def kv_lens(self) -> tuple[int, ...]:
+        """Valid KV rows per source shard (the ragged tail lives on the
+        trailing shards)."""
+
+        return tuple(
+            max(0, min(self.shard, self.global_len - r * self.shard))
+            for r in range(self.n)
+        )
+
+
+def _pad_seq(x: jax.Array, block: int, axis: int) -> jax.Array:
+    pad = (-x.shape[axis]) % block
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _forward(q, k, v, spec: RingSpec):
+    """The fused ring loop (per-shard, inside ``shard_map``).
+
+    q: (b, sq, h, d); k/v: (b, sk, hk, d) — the local shards.  Returns the
+    local output shard (b, sq, h, d) in q's dtype.
+    """
+
+    b, sq, h, d = q.shape
+    sk, hk = k.shape[1], k.shape[2]
+    # a ring of one has zero permutes and needs no bound axis (usable
+    # outside shard_map); larger rings read their coordinate off the axis
+    idx = lax.axis_index(spec.axis_name) if spec.n > 1 else jnp.int32(0)
+
+    # head-major layout once, outside the loop; block padding once (the
+    # kv_len table masks padded K columns, padded Q rows are sliced off)
+    block_q = min(spec.block_q, sq)
+    block_k = min(spec.block_k, sk)
+    qt = _pad_seq(q.transpose(0, 2, 1, 3), block_q, 2)          # (b, h, sqp, d)
+    kt = _pad_seq(k.transpose(0, 2, 1, 3), block_k, 2)          # (b, hk, skp, d)
+    vt = _pad_seq(v.transpose(0, 2, 1, 3), block_k, 2)
+    sqp = qt.shape[2]
+
+    m = jnp.full((b, h, sqp, 1), NEG_INF, jnp.float32)
+    l = jnp.zeros((b, h, sqp, 1), jnp.float32)
+    acc = jnp.zeros((b, h, sqp, d), jnp.float32)
+
+    # per-source valid-row table; when every shard is full (the common even
+    # case) kv_len is a CONSTANT and XLA folds the tail mask away entirely —
+    # the fused path must not pay a masking tax the hand-written schedule
+    # would not
+    lens = spec.kv_lens()
+    even = all(n_valid == spec.shard for n_valid in lens)
+    lens_arr = None if even else jnp.asarray(lens, jnp.int32)
+    q_off = (idx * spec.shard).astype(jnp.int32)
+
+    def rotate(kv):
+        # the cart_shift(+1) permute of the *stacked* KV buffer: one
+        # collective-permute per ring step, issued before the step's compute
+        return TraceFuture(
+            lambda: lax.ppermute(kv, spec.axis_name, list(spec.axis_perm))
+        )
+
+    def step_fn(carry, kv, step):
+        m, l, acc = carry
+        src = jnp.mod(idx - step, spec.n)
+        k_off = (src * spec.shard).astype(jnp.int32)
+        kv_len = jnp.int32(spec.shard) if even else lens_arr[src]
+        if spec.impl in ("pallas", "pallas_tpu"):
+            return _kernel.ring_step_fwd(
+                qt, kv[0], kv[1], m, l, acc,
+                q_offset=q_off, k_offset=k_off, kv_len=kv_len,
+                scale=spec.scale, causal=spec.causal,
+                block_q=block_q, block_k=block_k,
+                interpret=(spec.impl == "pallas"),
+            )
+        return _kernel.ring_step_ref(
+            qt, kv[0], kv[1], m, l, acc,
+            q_offset=q_off, k_offset=k_off, kv_len=kv_len,
+            scale=spec.scale, causal=spec.causal,
+        )
+
+    m, l, acc = overlap.ring_rotate_compute(
+        rotate, jnp.stack([kt, vt]), spec.n, step_fn, (m, l, acc)
+    )
+    out = acc / jnp.maximum(l, 1e-30)                           # (b, h, sqp, d)
+    out = out.transpose(0, 2, 1, 3).astype(q.dtype)
+    return out[:, :sq] if sqp != sq else out
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _ring(q, k, v, spec):
+    return _forward(q, k, v, spec)
+
+
+def _fwd(q, k, v, spec):
+    return _forward(q, k, v, spec), (q, k, v)
+
+
+def _bwd(spec, res, g):
+    q, k, v = res
+    ref_spec = dataclasses.replace(spec, impl="ref")
+
+    def recompute(q, k, v):
+        return _forward(q, k, v, ref_spec)
+
+    _, vjp = jax.vjp(recompute, q, k, v)
+    return vjp(g)
+
+
+_ring.defvjp(_fwd, _bwd)
+
+
+def ring_attention(
+    cart,
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    dim: int = 0,
+    causal: bool = True,
+    scale: float | None = None,
+    global_len: int | None = None,
+    impl: str = "pallas",
+    block_q: int = _kernel.DEFAULT_BLOCK_Q,
+    block_k: int = _kernel.DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """Blockwise ring attention over cart dimension ``dim`` (periodic).
+
+    Per-shard entry point (call inside ``shard_map`` over the ring axis):
+    ``q`` (b, sq, h, d), ``k``/``v`` (b, sk, hk, d) are this rank's shards of
+    a sequence padded to ``n × shard``; ``global_len`` (default ``n × sq``)
+    is the unpadded length.  ``impl``: 'ref' (jnp online blocks, the XLA
+    path), 'pallas' (interpret-mode kernel, CPU validation), 'pallas_tpu'.
+    Exact (fp32 state) vs the dense flash reference; differentiable, with
+    backward recompute through the jnp ring.
+    """
+
+    errors.check(
+        0 <= dim < len(cart.dims),
+        errors.ErrorClass.ERR_DIMS,
+        f"ring dim {dim} out of range for cart dims {cart.dims}",
+    )
+    errors.check(
+        cart.periods[dim],
+        errors.ErrorClass.ERR_TOPOLOGY,
+        "ring attention needs a periodic ring dimension (the KV rotation "
+        "must wrap; create the cart with periods=True on the ring dim)",
+    )
+    errors.check(
+        q.shape[1] == k.shape[1],
+        errors.ErrorClass.ERR_COUNT,
+        f"ring attention shards Q and KV identically, got q seq {q.shape[1]} "
+        f"vs kv seq {k.shape[1]}",
+    )
+    n = cart.dims[dim]
+    shard = q.shape[1]
+    if global_len is None:
+        global_len = n * shard
+    errors.check(
+        0 < global_len <= n * shard,
+        errors.ErrorClass.ERR_COUNT,
+        f"global_len {global_len} inconsistent with {n} shards of {shard}",
+    )
+    if scale is None:
+        scale = 1.0 / math.sqrt(q.shape[-1])
+    shift = cart.cart_shift(dim, 1)
+    spec = RingSpec(
+        axis_name=shift.axis_name,
+        axis_perm=tuple(shift.axis_perm),
+        n=n,
+        shard=shard,
+        global_len=int(global_len),
+        causal=bool(causal),
+        scale=float(scale),
+        impl=impl,
+        block_q=int(block_q),
+        block_k=int(block_k),
+    )
+    return _ring(q, k, v, spec)

@@ -52,6 +52,14 @@ def main(argv=None):
         default=2,
         help="microbatches streamed through the pipeline per step",
     )
+    ap.add_argument(
+        "--ring-attention",
+        type=int,
+        default=0,
+        help="fold the process set onto a (data, ring) cart topology with a "
+        "periodic ring of this size; attention shards the sequence over the "
+        "ring and rotates KV via cart_shift(+1) permutes (0/1 = dense attn)",
+    )
     ap.add_argument("--inject-failure-at", type=int, default=None)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--out", default=None, help="write metrics history JSON here")
@@ -81,6 +89,7 @@ def main(argv=None):
         log_every=args.log_every,
         pipeline_stages=args.pipeline_stages,
         pipeline_microbatches=args.pipeline_microbatches,
+        ring_attention=args.ring_attention,
     )
     injector = (
         FaultInjector(fail_at_steps=(args.inject_failure_at,))

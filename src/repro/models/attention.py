@@ -222,22 +222,43 @@ def attention_full(
     return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
 
 
-def _ring_attention_sharded(q, k, v, pcfg, mesh, *, scale):
-    """Training-time sequence parallelism: shard the sequence over the model
-    axis and run the ppermute ring (overlap module)."""
+def _ring_attention_sharded(q, k, v, pcfg, mesh, *, scale, causal=True):
+    """Sequence parallelism for training and long prefill: shard the
+    sequence over the model axis, fold it onto a 1-D periodic cart ring and
+    run the fused blockwise ring kernel (``kernels/ring_attention``) — the
+    stacked KV buffer rotates via ``cart_shift(+1)`` collective-permutes
+    hidden behind each step's compute.  Global lengths that do not divide
+    the ring are padded here (the kernel masks the tail) and sliced back."""
 
     from jax.sharding import PartitionSpec as P
 
+    from repro.core import topology
+    from repro.kernels.ring_attention import ops as ring_ops
+
     axis = pcfg.model_axis
-    comm = Communicator(mesh, (axis,))
+    n = mesh.shape[axis]
+    cart = topology.CartComm(
+        mesh, (axis,), dims=(n,), periods=(True,), managed=False, tag="ring-attn"
+    )
+    s = q.shape[1]
+    pad = (-s) % n
+    if pad:
+        widths = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = jnp.pad(q, widths), jnp.pad(k, widths), jnp.pad(v, widths)
     spec = P(pcfg.data_axes, axis, None, None)
+    impl = {"chunked": "ref"}.get(
+        getattr(pcfg, "attn_impl", "ref"), getattr(pcfg, "attn_impl", "ref")
+    )
 
     def body(ql, kl, vl):
-        return overlap.ring_attention(comm, ql, kl, vl, causal=True, scale=scale)
+        return ring_ops.ring_attention(
+            cart, ql, kl, vl, causal=causal, scale=scale, global_len=s, impl=impl
+        )
 
-    return _compat.shard_map(
+    out = _compat.shard_map(
         body, mesh=mesh, in_specs=(spec, spec, spec), out_specs=spec
     )(q, k, v)
+    return out[:, :s] if pad else out
 
 
 # ---------------------------------------------------------------------------
@@ -252,18 +273,24 @@ def attention_prefill(
     (B, S_cache, Hk, Dh) — S_cache is min(S, window) for windowed layers."""
 
     q, k, v = _project_qkv(p, x, cfg, positions)
-    out = fa_ops.flash_attention(
-        q,
-        k,
-        v,
-        causal=True,
-        sliding_window=sliding_window,
-        prefix_len=prefix_len,
-        logit_softcap=cfg.attn_logit_softcap,
-        scale=_scale(cfg),
-        impl=getattr(pcfg, "attn_impl", "ref"),
-        q_block_axis=pcfg.model_axis if pcfg.attn_plan == "sp" else None,
-    )
+    if pcfg.ring_attention and mesh is not None and not cfg.attn_logit_softcap and \
+            sliding_window is None and prefix_len is None:
+        # long-prompt prefill: the ring kernel admits prompts whose KV does
+        # not fit one device — same sharded-sequence path as training
+        out = _ring_attention_sharded(q, k, v, pcfg, mesh, scale=_scale(cfg))
+    else:
+        out = fa_ops.flash_attention(
+            q,
+            k,
+            v,
+            causal=True,
+            sliding_window=sliding_window,
+            prefix_len=prefix_len,
+            logit_softcap=cfg.attn_logit_softcap,
+            scale=_scale(cfg),
+            impl=getattr(pcfg, "attn_impl", "ref"),
+            q_block_axis=pcfg.model_axis if pcfg.attn_plan == "sp" else None,
+        )
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
     if sliding_window is not None and k.shape[1] > sliding_window:
         # ring-buffer layout: slot i holds the latest token with pos%win == i

@@ -110,8 +110,12 @@ class Server:
         if req is None:
             def prefill_step(p, b):
                 tool.pvar_count("trace:prefill_step")
+                # ring attention shards the prompt sequence over the model
+                # axis (long prompts whose KV exceeds one device's budget);
+                # the prefill needs the mesh to fold the cart ring onto
+                mesh = self.mesh if self.pcfg.ring_attention else None
                 return self.bundle.prefill(
-                    p, b, self.pcfg, None, extra_capacity=extra,
+                    p, b, self.pcfg, mesh, extra_capacity=extra,
                 )
 
             req = PersistentRequest(jax.jit(prefill_step), (self.params, batch))

@@ -99,17 +99,30 @@ class TrainerConfig:
     # (repro.core.overlap.pipeline_spmd).  0/1 = the GSPMD step.
     pipeline_stages: int = 0
     pipeline_microbatches: int = 2
+    # ring attention (kernels/ring_attention): > 1 re-forms the communicator
+    # as cart_create((data, ring)) with a *periodic* ring dim folded onto the
+    # model axis; attention shards the sequence over the ring and rotates KV
+    # shards via cart_shift(+1) permutes hidden behind blockwise compute —
+    # sequences larger than one device's KV budget become admissible.
+    ring_attention: int = 0
 
 
-def make_train_step(cfg: ModelConfig, pcfg: ParallelConfig, tcfg: TrainerConfig, opt: AdamW):
+def make_train_step(
+    cfg: ModelConfig,
+    pcfg: ParallelConfig,
+    tcfg: TrainerConfig,
+    opt: AdamW,
+    mesh: Mesh | None = None,
+):
     """Build the pure train-step function (params, opt_state, batch) ->
-    (params, opt_state, metrics)."""
+    (params, opt_state, metrics).  ``mesh`` is forwarded to the model loss
+    for the explicitly sharded attention paths (ring attention)."""
 
     bundle = model_api.build(cfg)
 
     def train_step(params, opt_state, batch):
         def loss_fn(p):
-            loss, metrics = bundle.loss(p, batch, pcfg, None)
+            loss, metrics = bundle.loss(p, batch, pcfg, mesh)
             return loss, metrics
 
         (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
@@ -226,6 +239,12 @@ class Trainer:
         # Session-derived communicator is the canonical handle onto the
         # training process set; a bare Mesh is wrapped unmanaged.
         self.comm = comm if isinstance(comm, Communicator) else Communicator(comm)
+        errors.check(
+            not (tcfg.pipeline_stages > 1 and tcfg.ring_attention > 1),
+            errors.ErrorClass.ERR_TOPOLOGY,
+            "pipeline_stages and ring_attention both re-form the communicator; "
+            "pick one per trainer",
+        )
         if tcfg.pipeline_stages > 1:
             # re-form the process set as a (data, stage) Cartesian topology:
             # stage boundaries become cart_shift(+1) neighbor exchanges
@@ -242,6 +261,25 @@ class Trainer:
                 self.comm, (size // s, s), (False, False),
                 axis_names=("data", "stage"),
             )
+        elif tcfg.ring_attention > 1:
+            # re-form the process set as a (data, ring) Cartesian topology
+            # with a *periodic* ring dim folded onto the model axis: the
+            # attention layers shard the sequence over the ring and rotate
+            # KV shards via cart_shift(+1) collective-permutes
+            from repro.core import topology
+
+            r = tcfg.ring_attention
+            size = self.comm.group().size()
+            errors.check(
+                size % r == 0,
+                errors.ErrorClass.ERR_DIMS,
+                f"{size} devices do not fold onto a ring of {r}",
+            )
+            self.comm = topology.cart_create(
+                self.comm, (size // r, r), (False, True),
+                axis_names=("data", "model"),
+            )
+            self.pcfg = pcfg = dataclasses.replace(pcfg, ring_attention=True)
         self.mesh = self.comm.mesh
         self.seq_len, self.global_batch = seq_len, global_batch
         self.bundle = model_api.build(cfg)
@@ -338,7 +376,10 @@ class Trainer:
                 self.cfg, self.pcfg, self.tcfg, self.opt, self.comm
             )
         else:
-            base_step = make_train_step(self.cfg, self.pcfg, self.tcfg, self.opt)
+            base_step = make_train_step(
+                self.cfg, self.pcfg, self.tcfg, self.opt,
+                mesh=self.mesh if self.pcfg.ring_attention else None,
+            )
 
         def step_fn(params, opt_state, batch):
             # a python side effect at trace time: the pvar counts every trace

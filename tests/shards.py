@@ -1,10 +1,11 @@
 """Tier-1 CI shard definitions.
 
 The CI matrix splits tier-1 into a core shard (the repro.core interface
-layers, fast and mostly in-process) and a runtime shard (trainer/server
-integration, models, dry-run — the subprocess-heavy half), so the two run
-in parallel legs.  ``--check`` verifies the shards partition the real test
-file set, so a new test file cannot silently fall out of CI.
+layers, fast and mostly in-process), a kernels shard (Pallas kernels and
+their oracles — interpret-mode compute-heavy) and a runtime shard
+(trainer/server integration, models, dry-run — the subprocess-heavy half),
+so the legs run in parallel.  ``--check`` verifies the shards partition the
+real test file set, so a new test file cannot silently fall out of CI.
 
     python tests/shards.py core          # print the shard's files
     python tests/shards.py --check      # verify coverage & disjointness
@@ -31,6 +32,10 @@ SHARDS = {
         "tests/test_sharding_rules.py",
         "tests/test_topology.py",
     ],
+    "kernels": [
+        "tests/test_kernels.py",
+        "tests/test_ring_attention.py",
+    ],
     "runtime": [
         "tests/test_checkpoint.py",
         "tests/test_data_pipeline.py",
@@ -38,7 +43,6 @@ SHARDS = {
         "tests/test_dryrun_integration.py",
         "tests/test_elastic_multidevice.py",
         "tests/test_engine.py",
-        "tests/test_kernels.py",
         "tests/test_models.py",
         "tests/test_server.py",
         "tests/test_trainer.py",

@@ -62,6 +62,49 @@ def test_flash_attention_features(feature):
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
 
 
+@pytest.mark.parametrize("sq,sk,causal", [
+    (100, 100, True),       # below one block: block shrinks, no padding
+    (600, 600, True),       # above the default block: padded ragged tail
+    (600, 600, False),
+    (37, 81, False),        # cross lengths, both ragged
+    (130, 50, False),
+])
+def test_flash_attention_ragged_lengths(sq, sk, causal):
+    """Sequence lengths that do not divide the block size: the padded tail
+    must be masked out of the online softmax, not averaged in."""
+
+    from repro.kernels.flash_attention import kernel as fk
+
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (1, sq, 4, 16))
+    k = jax.random.normal(ks[1], (1, sk, 2, 16))
+    v = jax.random.normal(ks[2], (1, sk, 2, 16))
+    out = fk.flash_attention_fwd(q, k, v, causal=causal, block_q=128, block_k=128)
+    ref = fa.flash_attention(q, k, v, causal=causal, impl="ref")
+    assert out.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("feature", ["window", "prefix", "softcap"])
+def test_flash_attention_ragged_features(feature):
+    """Ragged tails compose with the masking features: the kv_len mask is
+    applied last, so window/prefix logic cannot re-admit padded columns."""
+
+    from repro.kernels.flash_attention import kernel as fk
+
+    S = 330
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (1, S, 4, 16))
+    k = jax.random.normal(ks[1], (1, S, 2, 16))
+    v = jax.random.normal(ks[2], (1, S, 2, 16))
+    kw = {"window": dict(sliding_window=100),
+          "prefix": dict(prefix_len=40),
+          "softcap": dict(logit_softcap=30.0)}[feature]
+    out = fk.flash_attention_fwd(q, k, v, causal=True, block_q=128, block_k=128, **kw)
+    ref = fa.flash_attention(q, k, v, causal=True, impl="ref", **kw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
 def test_flash_attention_grads_match_reference():
     q, k, v = _qkv(jax.random.PRNGKey(3), 1, 128, 2, 2, 16, jnp.float32)
 
