@@ -28,7 +28,7 @@ CHILD = r"""
 import json
 import jax, jax.numpy as jnp
 from repro import core as mpx
-from repro.core.hloanalysis import analyze_hlo
+from repro.analysis import hlo as hlo_passes
 
 comm = mpx.world()
 N = comm.size()
@@ -52,36 +52,33 @@ PAIRS = {
 # ops that also have a persistent (MPI_*_init) constructor
 PERSISTENT_OPS = {"allreduce", "allgather", "reduce_scatter", "alltoall"}
 
-def _coll_stats(hlo_text):
-    a = analyze_hlo(hlo_text)
-    return {
-        "counts": dict(a.collectives.count),
-        "operand_bytes": a.collectives.total_operand_bytes,
-        "wire_bytes": a.collectives.total_wire_bytes,
-    }
-
 rows = []
 for op, (raw, iface) in PAIRS.items():
     x = jax.ShapeDtypeStruct((8 * N, 64), jnp.float32)
-    stats = {}
-    for kind, fn in (("raw", raw), ("iface", iface)):
-        c = jax.jit(comm.spmd(fn, jit=False)).lower(x).compile()
-        stats[kind] = _coll_stats(c.as_text())
-    row = {"op": op, **stats, "identical": stats["raw"] == stats["iface"]}
+    compiled = {
+        kind: jax.jit(comm.spmd(fn, jit=False)).lower(x).compile()
+        for kind, fn in (("raw", raw), ("iface", iface))
+    }
+    stats = {k: hlo_passes.stats_dict(c) for k, c in compiled.items()}
+    row = {
+        "op": op, **stats,
+        "identical": hlo_passes.identical_lowering(
+            compiled["raw"], compiled["iface"]).ok,
+    }
     if op in PERSISTENT_OPS:
         # steady-state HLO of the persistent path: the executable MPI_Start
         # re-fires must equal the per-call path's
         req = getattr(comm, op + "_init")(x)
-        stats["persistent"] = _coll_stats(req.as_text())
-        row["persistent"] = stats["persistent"]
-        row["persistent_identical"] = stats["persistent"] == stats["iface"]
+        row["persistent"] = hlo_passes.stats_dict(req)
+        row["persistent_identical"] = hlo_passes.identical_lowering(
+            req, compiled["iface"]).ok
     rows.append(row)
 
-# neighborhood collectives (MPI 4.0 ch. 8): the SPARSITY proof.  On a ring
-# cart topology the neighbor exchange must lower to axis-local
-# collective-permutes whose wire bytes scale with the DEGREE (2), never to a
-# dense world all-to-all scaling with N — the compiled artifact is the
-# evidence, same as the zero-overhead claim above.
+# neighborhood collectives (MPI 4.0 ch. 8): the SPARSITY proof —
+# repro.analysis.hlo.neighbor_sparsity: axis-local collective-permutes whose
+# wire bytes scale with the DEGREE (2), never a dense world all-to-all
+# scaling with N.  The compiled artifact is the evidence, same as the
+# zero-overhead claim above.
 from repro.core import topology
 
 cart = topology.cart_create(comm, (N,), (True,))
@@ -103,31 +100,22 @@ for op, fn, shape, dense_shape in (
 ):
     c = jax.jit(cart.spmd(fn, jit=False)).lower(
         jax.ShapeDtypeStruct(shape, jnp.float32)).compile()
-    nstats = _coll_stats(c.as_text())
     dense = jax.jit(comm.spmd(
         lambda x: lax.all_to_all(x, name, 0, 0, tiled=True), jit=False)).lower(
         jax.ShapeDtypeStruct(dense_shape, jnp.float32)).compile()
-    dstats = _coll_stats(dense.as_text())
-    sparse = (
-        nstats["counts"].get("all-to-all", 0) == 0
-        and nstats["counts"].get("all-reduce", 0) == 0
-        and nstats["counts"].get("collective-permute", 0) > 0
-    )
+    verdict = hlo_passes.neighbor_sparsity(c, dense)
     rows.append({
         "op": op,
-        "neighbor": nstats,
-        "dense": dstats,
-        "sparse": sparse,
-        "wire_fraction": (
-            nstats["wire_bytes"] / dstats["wire_bytes"]
-            if dstats["wire_bytes"] else None
-        ),
+        "neighbor": hlo_passes.stats_dict(c),
+        "dense": hlo_passes.stats_dict(dense),
+        "sparse": verdict.detail["sparse"],
+        "wire_fraction": verdict.detail["fraction"],
     })
-# ring attention (kernels/ring_attention): the SCHEDULE proof.  N ring steps
-# over the periodic cart must compile to exactly N−1 collective-permutes of
-# the stacked local KV shard — 1/N of the global KV on the wire per step —
-# and ZERO all-gathers: the compiled artifact shows the global KV is never
-# materialised on any device.
+# ring attention (kernels/ring_attention): the SCHEDULE proof —
+# repro.analysis.hlo.ring_schedule: N ring steps over the periodic cart
+# compile to exactly N−1 collective-permutes of the stacked local KV shard —
+# 1/N of the global KV on the wire per step — and ZERO all-gathers: the
+# compiled artifact shows the global KV is never materialised on any device.
 from jax.sharding import PartitionSpec as P
 from repro.core import _compat
 from repro.kernels.ring_attention import ops as ring_ops
@@ -148,26 +136,16 @@ with rc.mesh:
     c = jax.jit(_compat.shard_map(
         _ring_fn, mesh=rc.mesh, in_specs=(rspec, rspec, rspec), out_specs=rspec
     )).lower(qs, kvs, kvs).compile()
-rstats = _coll_stats(c.as_text())
-permutes = rstats["counts"].get("collective-permute", 0)
-allgathers = rstats["counts"].get("all-gather", 0)
 kv_bytes = 2 * B * S * Hk * D * 4          # global K+V, fp32
-per_step_fraction = (
-    rstats["wire_bytes"] / max(permutes, 1) / kv_bytes if kv_bytes else None
-)
+verdict = hlo_passes.ring_schedule(c, N, shard_bytes=kv_bytes)
 rows.append({
     "op": "ring_attention",
-    "ring": rstats,
-    "permutes": permutes,
-    "expected_permutes": N - 1,
-    "kv_allgathers": allgathers,
-    "per_step_wire_fraction": per_step_fraction,
-    "schedule_ok": (
-        permutes == N - 1
-        and allgathers == 0
-        and per_step_fraction is not None
-        and abs(per_step_fraction - 1.0 / N) < 1e-9
-    ),
+    "ring": hlo_passes.stats_dict(c),
+    "permutes": verdict.detail["permutes"],
+    "expected_permutes": verdict.detail["expected_permutes"],
+    "kv_allgathers": verdict.detail["kv_allgathers"],
+    "per_step_wire_fraction": verdict.detail["per_step_wire_fraction"],
+    "schedule_ok": verdict.ok,
 })
 print("RESULT " + json.dumps(rows))
 """

@@ -240,8 +240,8 @@ def record(summary: dict, history_dir: Path | None = None) -> Path:
             ["git", "rev-parse", "--short", "HEAD"],
             capture_output=True, text=True, cwd=str(ROOT), timeout=30,
         ).stdout.strip() or None
-    except Exception:
-        commit = None
+    except (OSError, subprocess.SubprocessError):
+        commit = None    # no git binary / not a checkout / timeout
     row = {
         "date": datetime.date.today().isoformat(),
         "commit": commit,
@@ -327,7 +327,7 @@ def main(argv=None):
             try:
                 r = fn()
                 rc = rc or (r or 0)
-            except Exception as e:  # pragma: no cover
+            except Exception as e:  # pragma: no cover  # lint: allow-broad-except — reported, fails the run
                 print(f"{name} FAILED: {e}")
                 rc = 1
             print(f"=== {name} done in {time.time()-t0:.0f}s")

@@ -8,6 +8,7 @@ checkpointing, straggler guard).
 On CPU this is slow at the full 100M scale; ``--small`` selects a ~14M
 variant that finishes a few hundred steps in minutes.
 """
+# lint-args: --small --steps 60
 
 import argparse
 import json

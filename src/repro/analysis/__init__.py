@@ -1,0 +1,23 @@
+"""Communication-correctness analysis for the interface (the MUST /
+MPI-Checker role): a trace-time event-graph lint plus reusable HLO schedule
+passes, both surfaced through ``python -m repro.analysis.lint``.
+
+* :mod:`repro.analysis.events` — the recording ledger (guarded by the
+  ``analysis_recording`` cvar, off by default).
+* :mod:`repro.analysis.checkers` — event-graph checkers: collective
+  order/signature matching, deadlock detection on the point-to-point
+  matching graph, future/request lifecycle, RMA epoch discipline,
+  I/O joins.  Findings carry typed :class:`~repro.core.errors.ErrorClass`.
+* :mod:`repro.analysis.hlo` — predicate passes over compiled modules
+  (no-collective, permute counts, wire fractions, ring schedules).
+* :mod:`repro.analysis.static` — source meta-checks (swallowed failures,
+  unregistered pvars).
+
+Only the ledger is imported eagerly (it is import-light by design); the
+checker/HLO layers import on demand so the core interface does not pay for
+them.
+"""
+
+from repro.analysis import events
+
+__all__ = ["events"]

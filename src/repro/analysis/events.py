@@ -1,0 +1,317 @@
+"""Trace-time event ledger — layer 1 of the communication-correctness
+analyzer (the MUST / MPI-Checker role for this interface).
+
+MUST observes an MPI program by interposing on the profiling interface and
+recording one event per communication call per rank; checkers then walk the
+event graph for defects the type system cannot rule out (mismatched
+collective order, wait-for cycles, leaked requests).  The adaptation here:
+the single-controller SPMD program *traces* its communication — so the
+natural interposition point is trace time, and one recorded event describes
+the operation for every rank at once (the SPMD program IS the per-rank
+program).  Hand-built rank-level schedules (``send_recv`` perms,
+``cart_shift`` tables, fan-out rounds) carry genuine per-rank structure, and
+the ledger also accepts explicitly per-rank events (``rank=``) for
+multi-controller traces and seeded-defect tests.
+
+Recording is **off by default** and toggled by the ``analysis_recording``
+control variable (:mod:`repro.core.tool`), the MPI_T cvar idiom the
+``error_checking`` macro analogue already uses.  The interface layers guard
+every hook on the module-level :data:`RECORDING` bool, so the disabled cost
+is one attribute read — measured ≤ 1% on the persistent-series hot path
+(``benchmarks/interface_overhead.py``).
+
+This module is import-light on purpose (no repro.core imports): the core
+layers import it at module scope without cycles.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+from typing import Any, Iterable, Sequence
+
+#: Hot-path guard.  The interface layers read this module attribute directly
+#: (``if events.RECORDING: events.record(...)``); everything else — ledger
+#: allocation, locking, metadata extraction — happens only when it is True.
+RECORDING = False
+
+_LOCK = threading.Lock()
+_TOKENS = itertools.count(1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Event:
+    """One recorded communication/lifecycle event.
+
+    ``ranks`` is the rank set the event applies to (``None`` = every rank of
+    the communicator is implied, the SPMD default); ``data`` holds
+    kind-specific fields (perms, dtype buckets, epoch ids, tokens).
+    """
+
+    seq: int
+    kind: str
+    comm: str = ""
+    op: str = ""
+    ranks: tuple[int, ...] | None = None
+    data: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+class Ledger:
+    """Append-only event log plus the live-object tables the lifecycle
+    checkers need (outstanding trace futures, window epochs)."""
+
+    def __init__(self) -> None:
+        self.events: list[Event] = []
+        self._seq = itertools.count()
+
+    def append(self, kind: str, **kw: Any) -> Event:
+        data = kw.pop("data", None) or {}
+        ev = Event(seq=next(self._seq), kind=kind, data=data, **kw)
+        with _LOCK:
+            self.events.append(ev)
+        return ev
+
+    def of_kind(self, *kinds: str) -> list[Event]:
+        return [e for e in self.events if e.kind in kinds]
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+
+_LEDGER = Ledger()
+
+
+def ledger() -> Ledger:
+    return _LEDGER
+
+
+def reset() -> Ledger:
+    """Drop all recorded events (new empty ledger); returns it."""
+
+    global _LEDGER
+    _LEDGER = Ledger()
+    return _LEDGER
+
+
+def set_recording(enabled: bool) -> bool:
+    """Toggle event recording; returns the previous value.  Normally driven
+    by the ``analysis_recording`` cvar, not called directly."""
+
+    global RECORDING
+    prev = RECORDING
+    RECORDING = bool(enabled)
+    return prev
+
+
+def next_token() -> int:
+    """A process-unique id for tracked objects (futures, requests, windows).
+    Monotonic — never reused, unlike ``id()``."""
+
+    return next(_TOKENS)
+
+
+# ---------------------------------------------------------------------------
+# typed record helpers (all no-ops unless RECORDING; callers still guard on
+# the bool to keep the disabled path to one attribute read)
+# ---------------------------------------------------------------------------
+
+
+def _comm_size(comm: Any) -> int:
+    size = getattr(comm, "size", None)
+    return int(size()) if callable(size) else 0
+
+
+def comm_id(comm: Any) -> str:
+    """A stable per-communicator key: tag + axis names + size.  Distinct
+    communicator objects over the same axes compare equal on purpose — a
+    ``dup()`` is ``MPI_IDENT`` and shares the match order."""
+
+    if isinstance(comm, str):
+        return comm
+    tag = getattr(comm, "tag", "") or ""
+    axes = ",".join(getattr(comm, "axis_names", ()) or ())
+    return f"{tag}|{axes}|{_comm_size(comm)}"
+
+
+def dtype_bucket(value: Any) -> tuple[str, ...]:
+    """The dtype-bucket signature of an operand aggregate: the sorted tuple
+    of leaf dtype names — the C2 datatype key a collective is matched on."""
+
+    import jax
+
+    names = []
+    for leaf in jax.tree_util.tree_leaves(value):
+        dt = getattr(leaf, "dtype", None)
+        names.append(str(dt) if dt is not None else type(leaf).__name__)
+    return tuple(sorted(names))
+
+
+def record_collective(
+    comm: Any,
+    op: str,
+    operand: Any = None,
+    *,
+    rank: int | None = None,
+) -> None:
+    """One collective call on ``comm`` (op kind + dtype bucket).  With
+    ``rank`` the event applies to that rank only (per-rank traces and
+    seeded-defect tests); otherwise to every rank of the communicator."""
+
+    if not RECORDING:
+        return
+    ranks = (rank,) if rank is not None else tuple(range(_comm_size(comm)))
+    _LEDGER.append(
+        "collective",
+        comm=comm_id(comm),
+        op=op,
+        ranks=ranks,
+        data={"bucket": dtype_bucket(operand) if operand is not None else ()},
+    )
+
+
+def record_p2p_round(
+    comm: Any,
+    perm: Sequence[tuple[int, int]],
+    *,
+    mode: str = "sendrecv",
+    op: str = "send_recv",
+    size: int | None = None,
+) -> None:
+    """One matching round of point-to-point traffic.
+
+    ``mode="sendrecv"`` is the combined ``MPI_Sendrecv`` form (completes
+    atomically; cycles are legal — every ring schedule is one).
+    ``mode="sync"`` models unbuffered blocking sends issued before the
+    matching receives — the schedule the deadlock checker must reject when
+    the round's permutation contains a cycle.
+    """
+
+    if not RECORDING:
+        return
+    if size is None:
+        size = _comm_size(comm)
+    _LEDGER.append(
+        "p2p_round",
+        comm=comm_id(comm),
+        op=op,
+        data={"perm": tuple((int(s), int(d)) for s, d in perm),
+              "mode": mode, "size": int(size)},
+    )
+
+
+def record_p2p(kind: str, rank: int, peer: int, *, comm: str = "", op: str = "") -> None:
+    """A raw blocking ``send``/``recv`` op for one rank (per-rank traces and
+    seeded-defect schedules)."""
+
+    if not RECORDING:
+        return
+    _LEDGER.append(kind, comm=comm, op=op or kind, ranks=(int(rank),),
+                   data={"peer": int(peer)})
+
+
+def record(kind: str, **kw: Any) -> None:
+    """Generic escape hatch (lifecycle hooks use the typed wrappers below)."""
+
+    if not RECORDING:
+        return
+    _LEDGER.append(kind, **kw)
+
+
+# -- future / request lifecycle ---------------------------------------------
+
+
+def record_future_create(token: int, label: str = "") -> None:
+    if not RECORDING:
+        return
+    _LEDGER.append("tf_create", data={"token": int(token), "label": label})
+
+
+def record_future_consume(token: int, how: str = "get") -> None:
+    if not RECORDING:
+        return
+    _LEDGER.append("tf_consume", data={"token": int(token), "how": how})
+
+
+def record_persistent_init(token: int, *, donated: bool, label: str = "") -> None:
+    if not RECORDING:
+        return
+    _LEDGER.append(
+        "preq_init", data={"token": int(token), "donated": bool(donated),
+                           "label": label}
+    )
+
+
+def record_persistent_start(
+    token: int, *, donated: bool, prev_outstanding: bool, has_continuations: bool
+) -> None:
+    if not RECORDING:
+        return
+    _LEDGER.append(
+        "preq_start",
+        data={"token": int(token), "donated": bool(donated),
+              "prev_outstanding": bool(prev_outstanding),
+              "has_continuations": bool(has_continuations)},
+    )
+
+
+# -- RMA windows -------------------------------------------------------------
+
+
+def record_fence(win: int, epoch: int) -> None:
+    if not RECORDING:
+        return
+    _LEDGER.append("win_fence", data={"win": int(win), "epoch": int(epoch)})
+
+
+def record_rma_put(
+    win: int, epoch: int, targets: Iterable[int], page: Any, *, requested: bool
+) -> None:
+    if not RECORDING:
+        return
+    _LEDGER.append(
+        "rma_put",
+        data={"win": int(win), "epoch": int(epoch),
+              "targets": tuple(int(t) for t in targets),
+              "page": page, "requested": bool(requested)},
+    )
+
+
+def record_rma_apply(win: int, issue_epoch: int, apply_epoch: int) -> None:
+    if not RECORDING:
+        return
+    _LEDGER.append(
+        "rma_apply",
+        data={"win": int(win), "issue_epoch": int(issue_epoch),
+              "apply_epoch": int(apply_epoch)},
+    )
+
+
+def record_rma_pages(kind: str, win: int, count: int) -> None:
+    """``kind`` ∈ {"rma_attach", "rma_detach"} — dynamic-window page
+    registration traffic (mirrored from ``kvpool.bind_window``)."""
+
+    if not RECORDING:
+        return
+    _LEDGER.append(kind, data={"win": int(win), "count": int(count)})
+
+
+# -- file I/O / checkpoint ---------------------------------------------------
+
+
+def record_io_split(kind: str, path: str, name: str) -> None:
+    """``kind`` ∈ {"io_split_begin", "io_split_end"} — File split
+    collectives (one active per handle; unended begins are findings)."""
+
+    if not RECORDING:
+        return
+    _LEDGER.append(kind, data={"path": path, "name": name})
+
+
+def record_ckpt(kind: str, mgr: int, step: int | None = None) -> None:
+    """``kind`` ∈ {"ckpt_save", "ckpt_join"} — async checkpoint saves must
+    be joined before trace exit."""
+
+    if not RECORDING:
+        return
+    _LEDGER.append(kind, data={"mgr": int(mgr), "step": step})

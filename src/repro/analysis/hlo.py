@@ -1,0 +1,172 @@
+"""Reusable HLO predicate passes — layer 2 of the analyzer.
+
+`benchmarks/hlo_parity.py` proved schedule properties (no all-gathers, N−1
+collective-permutes, 1/N wire fractions) with ad-hoc regex/counting code,
+and the tier-1 tests re-implemented the same counting inline.  These passes
+are that logic, once: each takes a compiled module (or its HLO text) and
+returns a :class:`PassResult` with the evidence, so bench scripts and tests
+assert the *same* predicate and cannot drift apart.
+
+All passes accept either the HLO text or any object with ``as_text()``
+(``jax`` compiled executables and :class:`~repro.core.futures`
+persistent requests both qualify).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.core.hloanalysis import analyze_hlo
+from repro.core.tool import CollectiveStats
+
+
+@dataclasses.dataclass(frozen=True)
+class PassResult:
+    """One HLO predicate verdict: the claim, whether it holds, and the
+    measured evidence backing it."""
+
+    name: str
+    ok: bool
+    detail: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def __bool__(self) -> bool:
+        return self.ok
+
+    def __str__(self) -> str:
+        state = "ok" if self.ok else "FAIL"
+        return f"{self.name}: {state} {self.detail}"
+
+
+def _text(module: Any) -> str:
+    as_text = getattr(module, "as_text", None)
+    return as_text() if callable(as_text) else str(module)
+
+
+def collective_stats(module: Any) -> CollectiveStats:
+    """Trip-count-corrected collective stats of one compiled module."""
+
+    return analyze_hlo(_text(module)).collectives
+
+
+def stats_dict(module: Any) -> dict[str, Any]:
+    """The (counts, operand bytes, wire bytes) summary row the parity bench
+    records — two modules lower identically iff these compare equal."""
+
+    s = collective_stats(module)
+    return {
+        "counts": dict(s.count),
+        "operand_bytes": s.total_operand_bytes,
+        "wire_bytes": s.total_wire_bytes,
+    }
+
+
+def no_collective(module: Any, *kinds: str) -> PassResult:
+    """No collective of any of ``kinds`` appears (e.g. prove a sharded
+    schedule never materialises via ``all-gather``)."""
+
+    s = collective_stats(module)
+    present = {k: s.count[k] for k in kinds if s.count.get(k, 0)}
+    return PassResult(
+        "no-collective", not present,
+        {"forbidden": kinds, "present": present},
+    )
+
+
+def collective_count(module: Any, kind: str, expected: int) -> PassResult:
+    """Exactly ``expected`` collectives of ``kind`` (trip-count-corrected)."""
+
+    s = collective_stats(module)
+    got = int(s.count.get(kind, 0))
+    return PassResult(
+        "collective-count", got == expected,
+        {"kind": kind, "expected": expected, "got": got},
+    )
+
+
+def permute_count(module: Any, expected: int) -> PassResult:
+    """Exactly ``expected`` ``collective-permute`` ops — the round count of
+    a ring/halo schedule."""
+
+    res = collective_count(module, "collective-permute", expected)
+    return PassResult("permute-count", res.ok, res.detail)
+
+
+def wire_fraction_below(
+    module: Any, dense: Any, bound: float, *, name: str = "wire-fraction"
+) -> PassResult:
+    """Wire bytes of ``module`` are at most ``bound`` × those of the dense
+    reference — the sparsity proof for neighborhood collectives."""
+
+    mw = collective_stats(module).total_wire_bytes
+    dw = collective_stats(dense).total_wire_bytes
+    frac = (mw / dw) if dw else None
+    return PassResult(
+        name, frac is not None and frac <= bound,
+        {"wire_bytes": mw, "dense_wire_bytes": dw,
+         "fraction": frac, "bound": bound},
+    )
+
+
+def neighbor_sparsity(module: Any, dense: Any, *, max_fraction: float = 1.0) -> PassResult:
+    """A neighborhood collective lowered *sparse*: axis-local
+    collective-permutes only — zero dense ``all-to-all``/``all-reduce`` —
+    with wire bytes scaling with the topology degree, not world size."""
+
+    s = collective_stats(module)
+    sparse = (
+        s.count.get("all-to-all", 0) == 0
+        and s.count.get("all-reduce", 0) == 0
+        and s.count.get("collective-permute", 0) > 0
+    )
+    wf = wire_fraction_below(module, dense, max_fraction)
+    return PassResult(
+        "neighbor-sparsity", sparse and wf.ok,
+        {"counts": dict(s.count), "sparse": sparse, **wf.detail},
+    )
+
+
+def ring_schedule(
+    module: Any, n: int, *, shard_bytes: float | None = None, tol: float = 1e-9
+) -> PassResult:
+    """The ring-attention schedule proof: exactly ``n − 1``
+    collective-permutes, zero KV all-gathers, and (when ``shard_bytes`` —
+    the *global* rotated aggregate, e.g. K+V — is given) a per-step wire
+    fraction of ``1/n``: each step moves one shard of the aggregate."""
+
+    s = collective_stats(module)
+    permutes = int(s.count.get("collective-permute", 0))
+    allgathers = int(s.count.get("all-gather", 0))
+    per_step_fraction = None
+    fraction_ok = True
+    if shard_bytes:
+        per_step_fraction = s.total_wire_bytes / max(permutes, 1) / shard_bytes
+        fraction_ok = abs(per_step_fraction - 1.0 / n) < tol
+    return PassResult(
+        "ring-schedule",
+        permutes == n - 1 and allgathers == 0 and fraction_ok,
+        {"permutes": permutes, "expected_permutes": n - 1,
+         "kv_allgathers": allgathers,
+         "per_step_wire_fraction": per_step_fraction},
+    )
+
+
+def identical_lowering(a: Any, b: Any) -> PassResult:
+    """Two modules lower to the same collective program — the zero-overhead
+    parity claim (kinds, counts, payload and wire bytes all equal)."""
+
+    sa, sb = stats_dict(a), stats_dict(b)
+    return PassResult("identical-lowering", sa == sb, {"a": sa, "b": sb})
+
+
+def pvar_invariant(
+    counters: dict[str, Any], name: str, expected: int
+) -> PassResult:
+    """A ``trace:*`` pvar invariant: the counter must read exactly
+    ``expected`` (e.g. ``trace:train_step == 1`` — one AOT trace, ever)."""
+
+    got = int(counters.get(name, 0))
+    return PassResult(
+        "pvar-invariant", got == expected,
+        {"pvar": name, "expected": expected, "got": got},
+    )

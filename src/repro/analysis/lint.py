@@ -1,0 +1,161 @@
+"""The analyzer CLI — the CI gate.
+
+    python -m repro.analysis.lint examples/ --strict
+
+Two passes:
+
+1. **Static** — the source meta-checks (:mod:`repro.analysis.static`) over
+   ``src/`` and ``benchmarks/``: swallowed ``except Exception`` handlers and
+   unregistered pvar writes.
+2. **Dynamic** — every example script runs in a fresh subprocess with the
+   ``analysis_recording`` cvar enabled; at exit the event-graph checkers
+   (:mod:`repro.analysis.checkers`) walk the recorded ledger and report
+   findings over a line protocol (``ANALYSIS_FINDINGS <json>``).  A script
+   that crashes is itself a finding (``ERR_OTHER``).
+
+``--strict`` exits non-zero on any finding; without it the lint only
+reports.  ``--no-run`` skips the dynamic pass (static checks only).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shlex
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.analysis.checkers import Finding
+from repro.core.errors import ErrorClass
+
+ROOT = Path(__file__).resolve().parents[3]
+MARKER = "ANALYSIS_FINDINGS "
+
+_RUNNER = r"""
+import json, runpy, sys
+from repro.core import tool
+from repro.analysis import checkers
+
+path = sys.argv[1]
+sys.argv = [path] + sys.argv[2:]
+tool.cvar_set("analysis_recording", True)
+tool.pvar_strict(True)
+rc = 0
+try:
+    runpy.run_path(path, run_name="__main__")
+except SystemExit as exc:
+    rc = int(exc.code or 0) if not isinstance(exc.code, str) else 1
+findings = checkers.run_all()
+print(MARKER + json.dumps([f.as_dict() for f in findings]))
+sys.exit(rc)
+""".replace("MARKER", repr(MARKER))
+
+
+def _example_env() -> dict[str, str]:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    env.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return env
+
+
+def _lint_args(path: Path) -> list[str]:
+    """Per-script lint arguments: a ``# lint-args: …`` line in the script's
+    head scales a long-running example down to gate size (the demo defaults
+    stay untouched)."""
+
+    for line in path.read_text().splitlines()[:30]:
+        if line.strip().startswith("# lint-args:"):
+            return shlex.split(line.split(":", 1)[1])
+    return []
+
+
+def lint_script(path: Path, *, timeout: int = 900) -> list[Finding]:
+    """Run one script under recording; its event-graph findings."""
+
+    try:
+        proc = subprocess.run(
+            [sys.executable, "-c", _RUNNER, str(path), *_lint_args(path)],
+            capture_output=True, text=True, env=_example_env(),
+            timeout=timeout, cwd=str(ROOT),
+        )
+    except subprocess.TimeoutExpired:
+        return [Finding(
+            ErrorClass.ERR_OTHER, "script-timeout",
+            f"did not finish within {timeout}s under recording", str(path),
+        )]
+    findings: list[Finding] = []
+    payload = None
+    for line in proc.stdout.splitlines():
+        if line.startswith(MARKER):
+            payload = json.loads(line[len(MARKER):])
+    if proc.returncode != 0:
+        findings.append(Finding(
+            ErrorClass.ERR_OTHER, "script-failed",
+            f"exited {proc.returncode}: {proc.stderr.strip().splitlines()[-1] if proc.stderr.strip() else 'no stderr'}",
+            str(path),
+        ))
+    if payload is None:
+        if proc.returncode == 0:
+            findings.append(Finding(
+                ErrorClass.ERR_OTHER, "no-findings-channel",
+                "script produced no ANALYSIS_FINDINGS line", str(path),
+            ))
+    else:
+        for f in payload:
+            findings.append(Finding(
+                ErrorClass[f["code"]], f["check"], f["message"],
+                f.get("subject") or str(path),
+            ))
+    return findings
+
+
+def _scripts(paths: list[str]) -> list[Path]:
+    out: list[Path] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_dir():
+            out.extend(sorted(path.glob("*.py")))
+        elif path.suffix == ".py":
+            out.append(path)
+    return out
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.analysis.lint",
+        description="communication-correctness lint: static meta-checks + "
+                    "event-graph analysis of example runs",
+    )
+    ap.add_argument("paths", nargs="*", default=["examples"],
+                    help="scripts or directories to run under recording")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit non-zero on any finding")
+    ap.add_argument("--no-run", action="store_true",
+                    help="static meta-checks only; skip running scripts")
+    ap.add_argument("--static-paths", nargs="*",
+                    default=["src", "benchmarks"],
+                    help="trees for the static meta-checks")
+    ap.add_argument("--timeout", type=int, default=900)
+    args = ap.parse_args(argv)
+
+    from repro.analysis.static import run_static
+
+    findings = run_static([ROOT / p for p in args.static_paths])
+    scripts = [] if args.no_run else _scripts(args.paths or ["examples"])
+    for script in scripts:
+        print(f"[lint] {script}", flush=True)
+        findings.extend(lint_script(script, timeout=args.timeout))
+
+    for f in findings:
+        print(f"  {f}")
+    n = len(findings)
+    print(f"[lint] {len(scripts)} script(s) analyzed, {n} finding(s)")
+    return 1 if (args.strict and n) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -47,6 +47,7 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.analysis import events as analysis_events
 from repro.core import errors
 from repro.core import io as pio
 from repro.core.descriptors import Mode
@@ -221,6 +222,9 @@ class CheckpointManager:
         # the caller waiting; the returned request is the completion handle
         completion = pio.IORequest(f"ckpt[{step}] commit", drive)
         if self.async_save:
+            if analysis_events.RECORDING:
+                # only async saves can dangle: a sync save joins inline below
+                analysis_events.record_ckpt("ckpt_save", id(self), step)
             self._pending = completion
         else:
             # join inline — a failure raises from save() itself — but leave
@@ -245,6 +249,8 @@ class CheckpointManager:
         req, self._pending = self._pending, None
         if req is None:
             return None
+        if analysis_events.RECORDING:
+            analysis_events.record_ckpt("ckpt_join", id(self))
         if not req.valid():
             # caller consumed the returned request (get/then); only re-raise
             # a failure that was never actually delivered to anyone

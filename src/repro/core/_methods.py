@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import functools
 
+from repro.analysis import events
 from repro.core import collectives, datatypes, overlap, tool
 from repro.core.communicator import Communicator
 from repro.core.futures import (
@@ -54,9 +55,14 @@ def _bind() -> None:
         "barrier",
     ):
         fn = getattr(collectives, name)
+        tool.pvar_register(name, f"blocking {name} calls issued (MPI_{name.capitalize()})")
 
         def method(self, *a, _fn=fn, _name=name, **k):
             tool.pvar_count(_name)
+            if events.RECORDING and _name not in ("send_recv", "shift"):
+                # send_recv/shift record a p2p matching round in
+                # collectives.py instead (the deadlock checker's input)
+                events.record_collective(self, _name, a[0] if a else None)
             return _fn(self, *a, **k)
 
         method.__name__ = name
@@ -67,7 +73,9 @@ def _bind() -> None:
     def immediate(self, name, *a, **k):
         fn = getattr(collectives, name)
         tool.pvar_count(f"immediate_{name}")
-        return TraceFuture(lambda: fn(self, *a, **k))
+        if events.RECORDING and name not in ("send_recv", "shift"):
+            events.record_collective(self, name, a[0] if a else None)
+        return TraceFuture(lambda: fn(self, *a, **k), label=f"immediate_{name}")
 
     for name in (
         "broadcast",
@@ -84,6 +92,10 @@ def _bind() -> None:
         "shift",
         "barrier",
     ):
+        tool.pvar_register(
+            f"immediate_{name}",
+            f"nonblocking {name} futures issued (MPI_I{name.capitalize()})",
+        )
 
         def imethod(self, *a, _name=name, **k):
             return immediate(self, _name, *a, **k)
@@ -95,8 +107,13 @@ def _bind() -> None:
         setattr(Communicator, f"immediate_{name}", imethod)
 
     # decomposed/overlappable forms
+    tool.pvar_register("immediate_ring_allgather",
+                       "ring-decomposed allgather futures (overlappable)")
+
     def immediate_ring_allgather(self, x, *, axis=0):
         tool.pvar_count("immediate_ring_allgather")
+        if events.RECORDING:
+            events.record_collective(self, "ring_allgather", x)
         return overlap.immediate_all_gather(self, x, axis=axis)
 
     Communicator.immediate_ring_allgather = immediate_ring_allgather
@@ -165,6 +182,11 @@ def _bind() -> None:
         )
 
     def _bind_init(name, unpackable=True):
+        tool.pvar_register(
+            f"{name}_init",
+            f"persistent {name} constructors (MPI_{name.capitalize()}_init)",
+        )
+
         def init_method(self, example, _name=name, _u=unpackable, **k):
             tool.pvar_count(f"{_name}_init")
             return _persistent_collective(self, _name, example, unpackable=_u, **k)

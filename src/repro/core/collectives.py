@@ -32,9 +32,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.analysis import events as analysis_events
 from repro.core import datatypes, errors
 from repro.core.communicator import Communicator
-from repro.core.descriptors import Algorithm, CollectiveSpec, ReduceOp, resolve
+from repro.core.descriptors import CollectiveSpec, ReduceOp, resolve
 
 Axes = tuple[str, ...]
 
@@ -433,6 +434,10 @@ def send_recv(
         errors.ErrorClass.ERR_RANK,
         "a rank may send to at most one destination per send_recv",
     )
+    if analysis_events.RECORDING:
+        # the combined sendrecv form completes round-atomically — cycles are
+        # legal here; the deadlock checker only rejects mode="sync" rounds
+        analysis_events.record_p2p_round(comm, perm, mode="sendrecv", size=n)
 
     def p_leaf(x):
         return lax.ppermute(jnp.asarray(x), axis, list(map(tuple, perm)))

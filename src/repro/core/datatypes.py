@@ -60,8 +60,8 @@ def _dtype_ok(dtype) -> bool:
         return True
     try:  # extended ml_dtypes floats (bfloat16, fp8, ...) report kind 'V'
         return bool(jnp.issubdtype(dtype, jnp.floating))
-    except Exception:
-        return False
+    except TypeError:
+        return False    # not coercible to a dtype at all
 
 
 def _leaf_dtype(value: Any) -> Any | None:

@@ -68,11 +68,13 @@ nonblocking collectives; ``fence`` completes any outstanding RMA requests
 from __future__ import annotations
 
 import time
+import weakref
 from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import events as analysis_events
 from repro.core import errors
 
 
@@ -287,10 +289,22 @@ def when_any(
 class TraceFuture:
     """Trace-level future: a lazily forced value inside an SPMD region."""
 
-    def __init__(self, thunk: Callable[[], Any] | None = None, value: Any = None):
+    def __init__(
+        self,
+        thunk: Callable[[], Any] | None = None,
+        value: Any = None,
+        label: str = "",
+    ):
         self._thunk = thunk
         self._value = value
         self._forced = thunk is None
+        # under analysis recording, lazy futures carry a ledger token so the
+        # lifecycle checker can see which were never consumed at trace exit
+        # (already-forced ready() values hold no pending communication)
+        self._token = 0
+        if thunk is not None and analysis_events.RECORDING:
+            self._token = analysis_events.next_token()
+            analysis_events.record_future_create(self._token, label)
 
     @classmethod
     def ready(cls, value: Any) -> "TraceFuture":
@@ -299,10 +313,16 @@ class TraceFuture:
     def valid(self) -> bool:
         return True
 
+    def _consume(self, how: str) -> None:
+        if self._token:
+            analysis_events.record_future_consume(self._token, how)
+            self._token = 0
+
     def get(self) -> Any:
         """Force the communication into the trace and return its value."""
 
         if not self._forced:
+            self._consume("get")
             self._value = self._thunk()
             self._thunk = None
             self._forced = True
@@ -316,19 +336,23 @@ class TraceFuture:
         traced until the chain end is forced, letting decomposed collectives
         fuse continuations."""
 
+        self._consume("then")
+
         def thunk():
             result = fn(self)
             if isinstance(result, TraceFuture):
                 return result.get()
             return result
 
-        return TraceFuture(thunk)
+        return TraceFuture(thunk, label="then")
 
 
 def trace_when_all(futures: Sequence[TraceFuture]) -> TraceFuture:
     """``MPI_Waitall`` at trace level: forces all, yields the tuple."""
 
-    return TraceFuture(lambda: tuple(f.get() for f in futures))
+    for f in futures:
+        f._consume("when_all")
+    return TraceFuture(lambda: tuple(f.get() for f in futures), label="when_all")
 
 
 def trace_when_any(futures: Sequence[TraceFuture]) -> tuple[TraceFuture, int]:
@@ -416,6 +440,14 @@ class PersistentRequest:
         self._leaf_sigs = [_leaf_signature(l) for l in leaves]
         self._leaf_shardings = [_leaf_sharding(l) for l in leaves]
         self._started = 0
+        # analysis bookkeeping: the last start()'s chained future, held
+        # weakly so the analyzer never extends buffer lifetimes
+        self._token = 0
+        self._last_future: weakref.ref | None = None
+        if analysis_events.RECORDING:
+            self._token = analysis_events.next_token()
+            analysis_events.record_persistent_init(
+                self._token, donated=bool(self.donate_argnums))
         if warm_start:
             self._warm_start(leaves)
 
@@ -479,9 +511,11 @@ class PersistentRequest:
 
         try:
             out = self._compiled(*args)
-        except errors.Error:
-            raise
-        except Exception:
+        except (TypeError, ValueError):
+            # the compiled executable rejects drifted argument lists with
+            # TypeError (shape/dtype/pytree mismatch) or ValueError
+            # (sharding mismatch) — the expected failures; anything else
+            # propagates untouched
             if errors.error_checking_enabled():
                 self._validate(args)     # raises ERR_REQUEST if args drifted
             raise
@@ -494,9 +528,19 @@ class PersistentRequest:
         """``MPI_Start``: fire the persistent operation; returns a host
         future, chained through any registered ``then()`` continuations."""
 
+        if analysis_events.RECORDING and self._token:
+            prev = self._last_future() if self._last_future else None
+            analysis_events.record_persistent_start(
+                self._token,
+                donated=bool(self.donate_argnums),
+                prev_outstanding=prev is not None and prev.valid(),
+                has_continuations=bool(self._continuations),
+            )
         fut = Future(self(*args))
         for fn in self._continuations:
             fut = fut.then(fn)
+        if analysis_events.RECORDING and self._token:
+            self._last_future = weakref.ref(fut)
         return fut
 
     def then(self, fn: Callable[[Future], Any]) -> "PersistentRequest":

@@ -24,8 +24,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from collections import defaultdict
-from typing import Any
 
 from repro.core.tool import (
     COLLECTIVE_KINDS,

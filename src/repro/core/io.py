@@ -53,6 +53,7 @@ from typing import Any, Callable
 import jax
 import numpy as np
 
+from repro.analysis import events as analysis_events
 from repro.core import datatypes, errors
 from repro.core.descriptors import FileSpec, Mode
 from repro.core.futures import DeferredFuture
@@ -135,7 +136,7 @@ class IORequest(DeferredFuture):
                 self._result = fn()
             except errors.Error as e:
                 self._exc = e
-            except BaseException as e:  # noqa: BLE001 — forwarded, never dropped
+            except BaseException as e:  # lint: allow-broad-except — forwarded to the joiner, never dropped
                 exc = errors.exception(errors.ErrorClass.ERR_IO, f"{op}: {e!r}")
                 exc.__cause__ = e
                 self._exc = exc
@@ -539,6 +540,8 @@ class File:
 
         self._check_split_free()
         tool.pvar_count("io_split_begin")
+        if analysis_events.RECORDING:
+            analysis_events.record_io_split("io_split_begin", str(self.path), name)
         self._split = ("write", name, self.iwrite_at_all(name, array))
 
     def write_at_all_end(self, name: str) -> dict:
@@ -554,6 +557,8 @@ class File:
 
         self._check_split_free()
         tool.pvar_count("io_split_begin")
+        if analysis_events.RECORDING:
+            analysis_events.record_io_split("io_split_begin", str(self.path), name)
         self._split = ("read", name, self.iread_at_all(name, sharding))
 
     def read_at_all_end(self, name: str) -> Any:
@@ -581,6 +586,8 @@ class File:
             f"{kind}_at_all_end({name!r}) does not match the active split "
             f"collective {k}_at_all({n!r})",
         )
+        if analysis_events.RECORDING:
+            analysis_events.record_io_split("io_split_end", str(self.path), name)
         self._split = None
         return req.get()
 

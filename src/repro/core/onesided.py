@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.analysis import events as analysis_events
 from repro.core import collectives, datatypes, errors, tool
 from repro.core.communicator import Communicator
 from repro.core.descriptors import ReduceOp, WindowSpec
@@ -83,6 +84,10 @@ class Window:
             self._buffers = self._datatype.pack(local)
         self._epoch_open = False
         self._pending: list[TraceFuture] = []
+        # monotonically increasing fence-epoch id; with the window token it
+        # lets the analyzer prove a put was applied in its issue epoch
+        self._epoch_id = 0
+        self._win_token = analysis_events.next_token()
         # per-epoch write ledger: target rank -> page specs written (None =
         # the whole window); overlapping writes in one epoch are a data race
         self._writes: dict[int, list[tuple[int, int] | None]] = {}
@@ -157,6 +162,8 @@ class Window:
             )
         self._attached.update(ids)
         tool.pvar_add("rma_attach", len(ids))
+        if analysis_events.RECORDING:
+            analysis_events.record_rma_pages("rma_attach", self._win_token, len(ids))
         return self
 
     def detach(self, pages: Sequence[int]) -> "Window":
@@ -173,6 +180,8 @@ class Window:
             )
         self._attached.difference_update(ids)
         tool.pvar_add("rma_detach", len(ids))
+        if analysis_events.RECORDING:
+            analysis_events.record_rma_pages("rma_detach", self._win_token, len(ids))
         return self
 
     @property
@@ -255,6 +264,9 @@ class Window:
             self._buffers = list(lax.optimization_barrier(tuple(self._buffers)))
         self._epoch_open = not self._epoch_open
         self._writes = {}
+        self._epoch_id += 1
+        if analysis_events.RECORDING:
+            analysis_events.record_fence(self._win_token, self._epoch_id)
         return self
 
     def _check_epoch(self):
@@ -431,6 +443,12 @@ class Window:
         self._check_attached(page)
         self._note_writes(perm, page)
         tool.pvar_count("rma_put")
+        if analysis_events.RECORDING:
+            analysis_events.record_rma_put(
+                self._win_token, self._epoch_id,
+                (d for _, d in perm), page, requested=False)
+            analysis_events.record_rma_apply(
+                self._win_token, self._epoch_id, self._epoch_id)
         self._apply_put(value, perm, page)
         return self
 
@@ -451,7 +469,23 @@ class Window:
         self._check_attached(page)
         self._note_writes(perm, page)
         tool.pvar_count("rma_rput")
-        fut = TraceFuture(lambda: self._apply_put(value, perm, page))
+        if analysis_events.RECORDING:
+            issue_epoch = self._epoch_id
+            analysis_events.record_rma_put(
+                self._win_token, issue_epoch,
+                (d for _, d in perm), page, requested=True)
+
+            def _thunk():
+                # the apply records the epoch it actually runs in — a then()
+                # continuation forced after the closing fence shows up as a
+                # cross-epoch put in the ledger
+                analysis_events.record_rma_apply(
+                    self._win_token, issue_epoch, self._epoch_id)
+                return self._apply_put(value, perm, page)
+
+            fut = TraceFuture(_thunk, label="rput")
+        else:
+            fut = TraceFuture(lambda: self._apply_put(value, perm, page))
         self._pending.append(fut)
         return fut
 

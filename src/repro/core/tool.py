@@ -25,6 +25,7 @@ import threading
 from collections import defaultdict
 from typing import Any, Callable
 
+from repro.analysis import events as analysis_events
 from repro.core import errors
 
 # --------------------------------------------------------------------------
@@ -328,6 +329,16 @@ cvar_register(
     on_set=errors.set_error_checking,
 )
 
+cvar_register(
+    "analysis_recording",
+    bool,
+    False,
+    "record communication events into the repro.analysis ledger "
+    "(MUST-style event-graph lint; off by default — disabled cost is one "
+    "module-attribute read per call site)",
+    on_set=analysis_events.set_recording,
+)
+
 
 # --------------------------------------------------------------------------
 # pvar call-site counters
@@ -354,7 +365,35 @@ def pvar_register(name: str, doc: str) -> None:
     PVARS.setdefault(name, doc)
 
 
+#: When True, counting an unregistered pvar is an ``ERR_ARG`` instead of a
+#: silent new counter — the runtime half of the registry audit (the static
+#: half lives in :mod:`repro.analysis.static`; dynamically-formatted names
+#: can only be caught here).
+PVAR_STRICT = False
+
+
+def pvar_strict(enabled: bool) -> bool:
+    """Toggle fail-fast on unregistered pvar writes; returns the previous
+    value."""
+
+    global PVAR_STRICT
+    prev = PVAR_STRICT
+    PVAR_STRICT = bool(enabled)
+    return prev
+
+
+def _pvar_check(op: str) -> None:
+    if op not in PVARS:
+        errors.fail(
+            errors.ErrorClass.ERR_ARG,
+            f"pvar {op!r} written but never registered — add a "
+            f"pvar_register({op!r}, ...) where the counter is defined",
+        )
+
+
 def pvar_count(op: str) -> None:
+    if PVAR_STRICT:
+        _pvar_check(op)
     with _PVAR_LOCK:
         pvar_counters[op] += 1
 
@@ -362,6 +401,8 @@ def pvar_count(op: str) -> None:
 def pvar_add(op: str, amount: int) -> None:
     """Add to an accumulating pvar (byte counters and the like)."""
 
+    if PVAR_STRICT:
+        _pvar_check(op)
     with _PVAR_LOCK:
         pvar_counters[op] += int(amount)
 
@@ -402,6 +443,8 @@ pvar_register("rma_rput", "request-based window puts (MPI_Rput)")
 pvar_register("rma_get", "blocking window gets (MPI_Get)")
 pvar_register("rma_rget", "request-based window gets (MPI_Rget)")
 pvar_register("rma_accumulate", "window accumulates (MPI_Accumulate/Raccumulate)")
+pvar_register("rma_attach", "pages attached to dynamic windows (MPI_Win_attach)")
+pvar_register("rma_detach", "pages detached from dynamic windows (MPI_Win_detach)")
 
 # file-I/O pvars (chapter 14) and the checkpoint subsystem built on it
 pvar_register("io_write", "blocking collective file writes (MPI_File_write_at_all)")

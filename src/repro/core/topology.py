@@ -55,6 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro.analysis import events as analysis_events
 from repro.core import datatypes, errors, tool
 from repro.core.communicator import Communicator
 from repro.core.futures import (
@@ -338,6 +339,9 @@ class _NeighborComm(Communicator):
         rank = self.rank()
         axes = self.axis_names if len(self.axis_names) > 1 else self.axis_names[0]
         for out_slot, in_slot, perm in self._round_tables():
+            if analysis_events.RECORDING:
+                analysis_events.record_p2p_round(
+                    self, perm, mode="sendrecv", op="neighbor_exchange")
             if alltoall:
                 osl = jnp.asarray(out_slot)[rank]
                 send = lax.dynamic_index_in_dim(
@@ -363,7 +367,8 @@ class _NeighborComm(Communicator):
         :class:`TraceFuture` chaining into ``then()``/``when_all``."""
 
         tool.pvar_count("neighbor_allgather")
-        return TraceFuture(lambda: self._exchange(value, alltoall=False))
+        return TraceFuture(lambda: self._exchange(value, alltoall=False),
+                           label="neighbor_allgather")
 
     def neighbor_alltoall(self, value: Any) -> TraceFuture:
         """``MPI_Neighbor_alltoall``: block ``k`` of ``value`` (leading dim
@@ -371,7 +376,8 @@ class _NeighborComm(Communicator):
         holds the block sent by in-neighbor ``j``."""
 
         tool.pvar_count("neighbor_alltoall")
-        return TraceFuture(lambda: self._exchange(value, alltoall=True))
+        return TraceFuture(lambda: self._exchange(value, alltoall=True),
+                           label="neighbor_alltoall")
 
     def neighbor_alltoallv(
         self, value: Any, send_counts: Sequence[Sequence[int]] | Sequence[int]
@@ -426,7 +432,7 @@ class _NeighborComm(Communicator):
             mask = valid.reshape(valid.shape + (1,) * (blocks.ndim - 2))
             return jnp.where(mask, blocks, jnp.zeros_like(blocks)), rc
 
-        return TraceFuture(impl)
+        return TraceFuture(impl, label="neighbor_alltoallv")
 
     # -- persistent neighborhood collectives (MPI 4.0 §6.12 pattern) ---------
 
@@ -598,10 +604,15 @@ class CartComm(_NeighborComm):
         exchange can be overlapped (issue, compute, ``get()``)."""
 
         shift = self.cart_shift(dim, disp)
+        if analysis_events.RECORDING:
+            analysis_events.record_p2p_round(
+                self, shift.axis_perm, mode="sendrecv",
+                op=f"cart_shift[{dim}]", size=self.dims[dim])
         return TraceFuture(
             lambda: lax.ppermute(
                 jnp.asarray(value), shift.axis_name, list(shift.axis_perm)
-            )
+            ),
+            label=f"cart_shift[{dim}]",
         )
 
     def cart_sub(self, remain_dims: Sequence[bool]) -> "CartComm":
@@ -653,6 +664,11 @@ class CartComm(_NeighborComm):
         for dim in range(self.ndims):
             plus = self.cart_shift(dim, 1)
             minus = self.cart_shift(dim, -1)
+            if analysis_events.RECORDING:
+                for sh in (plus, minus):
+                    analysis_events.record_p2p_round(
+                        self, sh.axis_perm, mode="sendrecv",
+                        op=f"halo[{dim},{sh.disp:+d}]", size=self.dims[dim])
             if alltoall:
                 # send slot 2d to the − neighbor, slot 2d+1 to the +; the
                 # arrival fills the receiver's opposite slot
@@ -960,6 +976,11 @@ def fanout_rounds(
                 break
         else:
             rounds.append([(int(src), int(dst))])
+    if analysis_events.RECORDING and rounds:
+        size = 1 + max(max(s, d) for rnd in rounds for s, d in rnd)
+        for rnd in rounds:
+            analysis_events.record_p2p_round(
+                "fanout", rnd, mode="sendrecv", op="fanout_round", size=size)
     return rounds
 
 

@@ -11,7 +11,7 @@ training-loss curves are meaningful.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Iterator
+from typing import Iterator
 
 import jax
 import jax.numpy as jnp

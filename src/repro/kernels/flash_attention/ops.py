@@ -9,7 +9,6 @@ standard recompute-backward for memory-bound attention (no O(S²) residuals).
 from __future__ import annotations
 
 import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -8,8 +8,6 @@ VMEM.  ``BLOCK = 256`` (two 128-lane vregs) keeps reductions lane-aligned.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

@@ -125,7 +125,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, overrides: dict, tag: 
             - mem.get("alias_size_in_bytes", 0)
         )
         print("memory_analysis:", mem)
-    except Exception as e:  # pragma: no cover
+    except Exception as e:  # pragma: no cover  # lint: allow-broad-except — recorded in the artifact
         mem["error"] = repr(e)
 
     # -- cost analysis + roofline (per-device module) -------------------------

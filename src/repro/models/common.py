@@ -115,16 +115,16 @@ def _ambient_mesh_shape() -> dict[str, int]:
         m = jax.sharding.get_abstract_mesh()
         if m is not None and not m.empty:
             return dict(zip(m.axis_names, m.axis_sizes))
-    except Exception:
-        pass
+    except AttributeError:
+        pass  # jax without get_abstract_mesh / axis_sizes (pre-0.4.35 API)
     try:  # legacy resource env
         from jax._src import mesh as _mesh_mod
 
         pm = _mesh_mod.thread_resources.env.physical_mesh
         if pm is not None and not pm.empty:
             return {a: int(s) for a, s in pm.shape.items()}
-    except Exception:
-        pass
+    except (ImportError, AttributeError):
+        pass  # private module moved/renamed across jax versions
     return {}
 
 

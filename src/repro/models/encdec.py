@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from repro.models import attention as attn
 from repro.models import common, mlp
 from repro.models.attention import KVCache
-from repro.models.common import dense_init, key_iter
+from repro.models.common import key_iter
 from repro.kernels.flash_attention import ops as fa_ops
 
 

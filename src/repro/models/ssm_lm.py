@@ -4,7 +4,6 @@ hybrid (zamba2-7b)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -46,6 +46,11 @@ from repro.core.futures import PersistentRequest, argument_signature
 from repro.runtime.kvpool import KVBlockPool
 from repro.runtime.server import Request, Server
 
+tool.pvar_register("engine:admit", "requests admitted into a running decode batch")
+tool.pvar_register("engine:retire", "requests retired from the continuous batch")
+tool.pvar_register("engine:preempt", "requests preempted under block-pool pressure")
+tool.pvar_register("trace:insert_row", "decode-row insert kernels traced (want 1 per shape)")
+
 
 @dataclasses.dataclass
 class EngineConfig:

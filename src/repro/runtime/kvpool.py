@@ -28,6 +28,9 @@ import math
 
 from repro.core import errors, tool
 
+tool.pvar_register("kvpool_alloc", "KV blocks allocated (window pages attached)")
+tool.pvar_register("kvpool_free", "KV blocks released (window pages detached)")
+
 
 class KVBlockPool:
     """Free-list + per-slot block tables for a slot-major paged KV cache."""

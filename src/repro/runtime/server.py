@@ -42,6 +42,10 @@ from repro.core.session import Session, default_session
 from repro.models import api as model_api
 from repro.sharding import rules
 
+tool.pvar_register("trace:prefill_step", "prefill executables traced (want 1 per shape bucket)")
+tool.pvar_register("trace:decode_step", "decode executables traced (want 1 per shape bucket)")
+tool.pvar_register("trace:kv_transfer", "KV-transfer executables traced (want 1 per shape)")
+
 
 @dataclasses.dataclass
 class ServerConfig:

@@ -49,9 +49,8 @@ from __future__ import annotations
 
 import dataclasses
 import logging
-import math
 import time
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -71,6 +70,8 @@ from repro.runtime.faults import FaultInjector, StepGuard, StragglerPolicy, Work
 from repro.sharding import rules
 
 log = logging.getLogger("repro.trainer")
+
+tool.pvar_register("trace:train_step", "train-step executables traced (want exactly 1)")
 
 
 @dataclasses.dataclass

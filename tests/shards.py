@@ -18,6 +18,8 @@ from pathlib import Path
 
 SHARDS = {
     "core": [
+        "tests/test_analysis.py",
+        "tests/test_analysis_hlo.py",
         "tests/test_cell_specs.py",
         "tests/test_collectives.py",
         "tests/test_datatypes.py",

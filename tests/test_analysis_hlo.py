@@ -1,0 +1,77 @@
+"""repro.analysis.hlo — the reusable HLO predicate passes (layer 2).
+
+The passes are the single home of the schedule proofs that
+``benchmarks/hlo_parity.py`` and the tier-1 tests previously counted
+inline; here each predicate is exercised against real compiled modules
+(8 virtual devices, in a subprocess per conftest policy) on both its
+passing and failing side — a pass that cannot fail proves nothing.
+"""
+
+from __future__ import annotations
+
+from repro.analysis.hlo import PassResult, pvar_invariant
+
+
+def test_pass_result_protocol():
+    good = PassResult("p", True, {"x": 1})
+    bad = PassResult("p", False, {"x": 2})
+    assert good and not bad
+    assert "ok" in str(good) and "FAIL" in str(bad)
+
+
+def test_pvar_invariant():
+    counters = {"trace:train_step": 1}
+    assert pvar_invariant(counters, "trace:train_step", 1).ok
+    r = pvar_invariant(counters, "trace:train_step", 2)
+    assert not r.ok and r.detail["got"] == 1
+    assert not pvar_invariant({}, "trace:train_step", 1).ok
+
+
+def test_hlo_passes_on_compiled_modules(subproc):
+    out = subproc("""
+import jax, jax.numpy as jnp
+from repro import core as mpx
+from repro.analysis import hlo as hlo_passes
+
+comm = mpx.world()
+N, name, lax = comm.size(), comm.axis_names[0], jax.lax
+x = jax.ShapeDtypeStruct((8 * N, 16), jnp.float32)
+
+def compile_(fn):
+    return jax.jit(comm.spmd(fn, jit=False)).lower(x).compile()
+
+psum = compile_(lambda v: lax.psum(v, name))
+ring = compile_(lambda v: lax.ppermute(v, name, [(i, (i + 1) % N) for i in range(N)]))
+gather = compile_(lambda v: lax.all_gather(v, name))
+
+# no_collective: both verdicts
+assert hlo_passes.no_collective(psum, "all-gather", "all-to-all").ok
+bad = hlo_passes.no_collective(gather, "all-gather")
+assert not bad.ok and bad.detail["present"] == {"all-gather": 1}
+
+# counts
+assert hlo_passes.collective_count(psum, "all-reduce", 1).ok
+assert not hlo_passes.collective_count(psum, "all-reduce", 2).ok
+assert hlo_passes.permute_count(ring, 1).ok
+assert not hlo_passes.permute_count(psum, 1).ok
+
+# identical_lowering: reflexive yes, across different programs no
+assert hlo_passes.identical_lowering(psum, psum).ok
+assert not hlo_passes.identical_lowering(psum, gather).ok
+
+# parity with the persistent path (accepts PersistentRequest via as_text)
+req = comm.allreduce_init(x)
+assert hlo_passes.identical_lowering(req, compile_(lambda v: comm.allreduce(v))).ok
+
+# wire fractions: one permute moves 1 shard where the gather moves N-1
+wf = hlo_passes.wire_fraction_below(ring, gather, 1.0 / (N - 1) + 1e-9)
+assert wf.ok, wf
+assert not hlo_passes.wire_fraction_below(gather, ring, 0.5).ok
+
+# stats_dict is the parity row shape
+row = hlo_passes.stats_dict(psum)
+assert set(row) == {"counts", "operand_bytes", "wire_bytes"}
+assert row["counts"] == {"all-reduce": 1}
+print("HLO_PASSES_OK")
+""")
+    assert "HLO_PASSES_OK" in out

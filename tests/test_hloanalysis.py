@@ -6,7 +6,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.core.hloanalysis import analyze_hlo
 

@@ -11,7 +11,6 @@ import pytest
 from repro.kernels.flash_attention import ops as fa
 from repro.kernels.quant import ops as qo
 from repro.kernels.ssd_scan import ops as so
-from repro.kernels.ssd_scan import ref as sref
 
 
 def _qkv(key, B, S, H, Hk, D, dtype):

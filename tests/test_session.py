@@ -9,7 +9,6 @@ import textwrap
 import jax
 import pytest
 
-from repro import core as mpx
 from repro.core import errors
 from repro.core.communicator import Communicator, world
 from repro.core.session import (

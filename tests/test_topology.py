@@ -484,16 +484,15 @@ def run1(xl, router, wg, wu, wd):
     y, _ = mlp.moe_neighbor(
         {"router": router, "w_gate": wg, "w_up": wu, "w_down": wd}, xl, cfg, g1)
     return y
-from repro.core.hloanalysis import analyze_hlo
+from repro.analysis import hlo as hlo_passes
 c = jax.jit(g1.spmd(run1, in_specs=(P("world"), P(), P("world"), P("world"),
                                     P("world")), out_specs=P("world"),
                     jit=False)).lower(
     jax.ShapeDtypeStruct((T, 16), jnp.float32),
     *(jax.ShapeDtypeStruct(np.shape(v), jnp.float32)
       for v in (p["router"], p["w_gate"], p["w_up"], p["w_down"]))).compile()
-stats = analyze_hlo(c.as_text()).collectives
-assert "all-to-all" not in stats.count, stats.count
-assert stats.count.get("collective-permute", 0) > 0
+assert hlo_passes.no_collective(c, "all-to-all").ok, hlo_passes.stats_dict(c)
+assert hlo_passes.collective_stats(c).count.get("collective-permute", 0) > 0
 
 # top-k wider than the graph's reach is a setup error, not silent corruption
 cfg1 = ModelConfig(name="t1", family="moe", num_layers=2, d_model=16,

@@ -222,10 +222,10 @@ delta = abs(res["metrics"][0]["loss"] - float(ref_loss))
 assert delta < 2e-3, (res["metrics"][0]["loss"], float(ref_loss))
 
 # stage-boundary traffic is permutes; no dense world alltoall appears
-from repro.core.hloanalysis import analyze_hlo
-stats = analyze_hlo(t._compiled.as_text()).collectives
+from repro.analysis import hlo as hlo_passes
+stats = hlo_passes.collective_stats(t._compiled)
 assert stats.count.get("collective-permute", 0) > 0, stats.count
-assert "all-to-all" not in stats.count, stats.count
+assert hlo_passes.no_collective(t._compiled, "all-to-all").ok, stats.count
 print("PIPELINE_TRAINER_OK", delta)
 """
     assert "PIPELINE_TRAINER_OK" in subproc(code, n=4)
