@@ -51,6 +51,8 @@ TRACKED = {
     "serving_ttft_p99_ratio": "lower",      # continuous / fixed p99 TTFT
     "ring_attention_tax": "lower",          # fused ring / raw ppermute schedule
     "ring_steps_per_s": "higher",           # long-context ring train steps/s
+    "elastic_recovery_steps": "lower",      # steps replayed per evicted rank
+    "elastic_rebuild_ratio": "lower",       # shrink-rebuild-restore / clean step
 }
 
 
@@ -124,6 +126,12 @@ def summarize(out_dir: Path = OUT) -> dict:
         rows = [r for r in json.loads(ring_tp.read_text()) if r.get("ring", 0) > 1]
         if rows:
             summary["ring_steps_per_s"] = max(r["steps_per_s"] for r in rows)
+
+    el = out_dir / "elastic_bench.json"
+    if el.exists():
+        r = json.loads(el.read_text())
+        summary["elastic_recovery_steps"] = float(r["recovery_steps"])
+        summary["elastic_rebuild_ratio"] = float(r["rebuild_ratio"])
 
     parity = out_dir / "hlo_parity.json"
     if parity.exists():
@@ -295,6 +303,7 @@ def main(argv=None):
     rc = 0
     if not args.summary:
         from benchmarks import (
+            elastic_bench,
             hlo_parity,
             interface_overhead,
             roofline,
@@ -317,6 +326,8 @@ def main(argv=None):
             ("train_throughput(ring)", lambda: train_throughput.main(
                 ["--ring", "4", "--steps", "2", "--seq", "512"] if args.quick
                 else ["--ring", "4", "--steps", "3", "--seq", "1024"])),
+            # injected rank eviction: steps replayed + shrink-rebuild cost
+            ("elastic_bench", lambda: elastic_bench.main()),
         ]
         for name, fn in jobs:
             if any(s in name for s in args.skip):

@@ -1,0 +1,57 @@
+"""Elastic training demo: the job survives a rank eviction without a restart.
+
+A trainer on a ``(4, 2)`` fabric loses rank 2 at step 5.  ULFM-style, the
+epoch is revoked, the survivor group is ``Group.difference``-shrunk, the
+fabric rebuilds over 6 devices as ``(3, 2)``, the last committed manifest
+restores onto the survivors, and the loop continues — same process, new
+communicator generation.  At step 8 a spare device hot-joins and the data
+axis grows back to 4.
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/elastic_train.py
+"""
+
+import tempfile
+
+from repro.configs.base import ModelConfig, ParallelConfig
+from repro.core.communicator import Communicator
+from repro.core.session import Session
+from repro.runtime.faults import FaultInjector
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def main():
+    cfg = ModelConfig(
+        name="tiny", family="dense", num_layers=1, d_model=32, num_heads=2,
+        num_kv_heads=2, head_dim=16, d_ff=64, vocab_size=64,
+    )
+    world = Session.init().group("repro://world")
+    comm = Communicator.from_group(
+        world, tag="repro://train", shape=(4, 2), axis_names=("data", "model"))
+    injector = FaultInjector().evict_rank(5, 2).admit_rank(8)
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        trainer = Trainer(
+            cfg,
+            ParallelConfig(),
+            TrainerConfig(steps=10, lr=1e-3, checkpoint_dir=ckpt_dir,
+                          checkpoint_every=2, log_every=2, seed=7),
+            comm,
+            seq_len=32,
+            global_batch=12,
+            injector=injector,
+        )
+        result = trainer.run()
+    print(
+        f"finished step {result['final_step']} on epoch "
+        f"{result['epoch']} (world size {result['world_size']}): "
+        f"{result['evictions']} eviction(s), {result['joins']} hot-join(s), "
+        f"0 job restarts"
+    )
+    assert result["final_step"] == 10
+    assert result["evictions"] == 1 and result["joins"] == 1
+    assert result["restarts"] == 0
+    assert result["epoch"] == 2 and result["world_size"] == 8
+
+
+if __name__ == "__main__":
+    main()

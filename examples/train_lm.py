@@ -61,6 +61,12 @@ def main():
     )
     result = trainer.run()
     losses = [m["loss"] for m in result["metrics"]]
+    if not losses:
+        # a previous run's checkpoint in --checkpoint-dir already reached
+        # --steps; the restore resumes past the last step and trains nothing
+        print(f"already complete at step {result['final_step']} "
+              f"(stale {args.checkpoint_dir}; remove it to retrain)")
+        return
     print(f"steps: {result['final_step']}  loss: {losses[0]:.3f} -> {losses[-1]:.3f}")
     assert losses[-1] < losses[0], "loss did not decrease"
     if args.out:

@@ -105,7 +105,14 @@ class CheckpointManager:
 
     # -- save ----------------------------------------------------------------
 
-    def save(self, step: int, tree: Any, *, extra: dict | None = None) -> Future:
+    def save(
+        self,
+        step: int,
+        tree: Any,
+        *,
+        extra: dict | None = None,
+        meta: dict | None = None,
+    ) -> Future:
         """Save a pytree checkpoint for ``step``.
 
         Returns the completion request: a host future resolving to the step
@@ -115,6 +122,11 @@ class CheckpointManager:
         and the caller overlaps it with further work; :meth:`wait` (called
         automatically before the next save and at exit) joins it and
         **re-raises any failure** as ``ERR_IO``.
+
+        ``meta`` tags the manifest with writer context (``manifest["meta"]``
+        — the elastic runtime records ``{"epoch", "world_size"}`` so a
+        restore onto a different survivor set knows the fragments were
+        sharded under another fabric); read back via :meth:`manifest_meta`.
         """
 
         from repro.core import tool
@@ -201,7 +213,7 @@ class CheckpointManager:
             for sums in joined.get():
                 for fragname, digest in sums.items():
                     entry_by_frag[fragname]["checksum"] = digest
-            f.commit_manifest(records)  # ONE manifest sync point per step
+            f.commit_manifest(records, meta)  # ONE manifest sync point per step
             if extra:
                 pio._atomic_write(
                     os.path.join(step_dir, "extra.json"), json.dumps(extra).encode()
@@ -346,3 +358,15 @@ class CheckpointManager:
             with open(p) as fh:
                 return json.load(fh)
         return {}
+
+    def manifest_meta(self, step: int | None = None) -> dict:
+        """The writer-context tags of a step's manifest (``{"epoch":
+        ..., "world_size": ...}`` under the elastic runtime); ``{}`` for
+        pre-elastic checkpoints."""
+
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return {}
+        step_dir = os.path.join(self.directory, f"step_{step:08d}")
+        f = pio.open(step_dir, Mode.RDONLY)
+        return f.manifest().get("meta", {})

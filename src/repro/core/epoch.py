@@ -1,0 +1,413 @@
+"""Elastic communicator epochs: ULFM-style shrink/grow on the Sessions model.
+
+A long-running parallel job outlives its hardware.  The ULFM fault-tolerance
+proposal (the chapter MPI 4.x reserves error classes 75/76 for) spells the
+recovery loop as: detect → ``MPI_Comm_revoke`` → ``MPI_Comm_shrink`` →
+rebuild from the survivor group → continue.  The Sessions model (MPI 4.0
+§11, the paper's ch. 11) makes that loop *constructive*: process sets are
+first-class and re-enumerable, groups have a full algebra
+(``Group.difference`` is the shrink), and ``Communicator.from_group`` is the
+one canonical constructor a rebuilt fabric routes through.
+
+What was missing in this repo was a *home* for the loop's state: every layer
+(Trainer, PartitionedGradSync, CheckpointManager, the serving engine) cached
+a communicator and its AOT persistent requests privately, as if the world
+were immortal.  :class:`CommEpoch` is that home — a **generation-numbered
+bundle** of
+
+* the session **process set** the epoch registered (``repro://epoch/<n>/<g>``),
+* the member :class:`~repro.core.session.Group` (survivors fold row-major),
+* the :class:`~repro.core.communicator.Communicator` (a
+  :class:`~repro.core.topology.CartComm` when the epoch carries a Cartesian
+  :class:`TopologySpec`),
+* a **persistent-request cache**: named AOT executables derived from the
+  epoch's fabric, built lazily, and *gone* when the epoch is (a persistent
+  request is bound to its shardings — after a shrink it raises
+  ``ERR_REQUEST`` on drift, and the new epoch rebuilds it on first use).
+
+Every fabric consumer derives its comm state *from the current epoch*
+instead of storing it.  On failure the runtime revokes the epoch (any
+further use raises ``ERR_REVOKED``), shrinks the group
+(``Group.difference``), and constructs generation ``g+1``; the reverse path
+(:meth:`CommEpoch.grow`) hot-joins new members and re-folds the elastic
+axis.  Excess survivors that do not fold onto the topology (e.g. 3 ranks
+onto a ``(data, stage=2)`` grid) keep pool membership but get no comm —
+MPI's ``MPI_COMM_NULL`` for them — and fold back in when a later grow makes
+the count divisible.
+
+The :class:`TopologySpec` marks **one elastic dimension** (``-1``, the data
+axis in training) and any number of fixed dimensions (pipeline stages, ring
+size, tensor width): re-folding resolves the elastic dim to
+``floor(size / prod(fixed))``.
+
+Groups and specs are device-agnostic, so epoch algebra (generations,
+shrink/grow, cache invalidation) is testable without multi-device hardware;
+only :attr:`CommEpoch.comm` touches jax, and it is built lazily.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Iterable, Sequence
+
+from repro.core import errors, tool
+from repro.core.communicator import Communicator
+from repro.core.session import Group, Session, default_session
+
+tool.pvar_register("epoch:create", "communicator epochs constructed (generation 0)")
+tool.pvar_register("epoch:advance", "epoch transitions (shrink + grow)")
+tool.pvar_register("epoch:revoke", "epochs revoked (MPI_Comm_revoke analogue)")
+tool.pvar_register("epoch:rebuild", "communicator fabrics built from an epoch's group")
+tool.pvar_register(
+    "epoch:request_rebuild",
+    "per-epoch cached derivations built (persistent requests, topologies)",
+)
+
+#: The elastic-dimension placeholder in a :class:`TopologySpec` shape.
+ELASTIC = -1
+
+_EPOCH_PSET_PREFIX = "repro://epoch/"
+
+
+@dataclasses.dataclass(frozen=True)
+class TopologySpec:
+    """How an epoch folds its group onto a fabric.
+
+    ``shape`` may mark at most one dimension :data:`ELASTIC` (``-1``); it
+    resolves to ``floor(size / prod(fixed))`` at fold time, so the same spec
+    describes the topology at every world size.  ``periods=None`` builds a
+    plain multi-axis communicator; a periods tuple builds a Cartesian
+    topology (:func:`repro.core.topology.cart_create`) with the resolved
+    dims.
+    """
+
+    shape: tuple[int, ...]
+    axis_names: tuple[str, ...]
+    periods: tuple[bool, ...] | None = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "shape", tuple(int(d) for d in self.shape))
+        object.__setattr__(self, "axis_names", tuple(self.axis_names))
+        if self.periods is not None:
+            object.__setattr__(
+                self, "periods", tuple(bool(p) for p in self.periods)
+            )
+        errors.check(
+            len(self.shape) == len(self.axis_names),
+            errors.ErrorClass.ERR_DIMS,
+            f"{len(self.axis_names)} axis names for shape {self.shape}",
+        )
+        errors.check(
+            self.periods is None or len(self.periods) == len(self.shape),
+            errors.ErrorClass.ERR_DIMS,
+            f"{len(self.periods or ())} periods for shape {self.shape}",
+        )
+        elastic = [d for d in self.shape if d == ELASTIC]
+        fixed = [d for d in self.shape if d != ELASTIC]
+        errors.check(
+            len(elastic) <= 1,
+            errors.ErrorClass.ERR_DIMS,
+            f"at most one elastic (-1) dimension, got shape {self.shape}",
+        )
+        errors.check(
+            all(d > 0 for d in fixed),
+            errors.ErrorClass.ERR_DIMS,
+            f"fixed dims must be positive, got shape {self.shape}",
+        )
+
+    @property
+    def is_cart(self) -> bool:
+        return self.periods is not None
+
+    @property
+    def fixed_size(self) -> int:
+        """Product of the non-elastic dims — the fold granularity."""
+
+        return math.prod(d for d in self.shape if d != ELASTIC)
+
+    def resolve(self, size: int) -> tuple[int, ...]:
+        """Concrete dims for a group of ``size`` members: the elastic dim
+        becomes ``floor(size / fixed_size)`` (``ERR_DIMS`` when not even one
+        fold fits).  Members beyond ``prod(dims)`` do not fold — they idle
+        (``MPI_COMM_NULL``) until a grow makes the count divisible."""
+
+        fixed = self.fixed_size
+        errors.check(
+            size >= fixed,
+            errors.ErrorClass.ERR_DIMS,
+            f"{size} members cannot fold onto {self.shape} "
+            f"(needs at least {fixed})",
+        )
+        if ELASTIC not in self.shape:
+            return self.shape
+        return tuple(size // fixed if d == ELASTIC else d for d in self.shape)
+
+    @classmethod
+    def from_communicator(cls, comm: Communicator, *, elastic_axis: int = 0) -> "TopologySpec":
+        """Derive a spec from an existing communicator: its axes and sizes,
+        with ``elastic_axis`` marked elastic (the data axis by convention).
+        Cartesian communicators keep their periods."""
+
+        from repro.core import topology
+
+        shape = tuple(
+            ELASTIC if i == elastic_axis else int(comm.mesh.shape[a])
+            for i, a in enumerate(comm.axis_names)
+        )
+        periods = (
+            comm.periods if isinstance(comm, topology.CartComm) else None
+        )
+        return cls(shape, comm.axis_names, periods)
+
+
+def _sanitize(name: str) -> str:
+    return "".join(c if c.isalnum() or c in "_-" else "_" for c in name) or "epoch"
+
+
+class CommEpoch:
+    """One generation of a rebuildable communication fabric.
+
+    The epoch owns a **pool** (every device currently enrolled, survivors in
+    fold order) and derives from it the **active** group — the leading
+    ``prod(dims)`` members after :meth:`TopologySpec.resolve` — plus the
+    communicator and any cached per-epoch state.  Construction of the jax
+    fabric is lazy: epoch algebra works on plain groups.
+
+    Lifecycle (the ULFM loop)::
+
+        epoch = CommEpoch.create(comm)          # generation 0 adopts comm
+        ...
+        epoch.revoke()                          # MPI_Comm_revoke
+        epoch = epoch.shrink([dead_rank])       # MPI_Comm_shrink -> gen+1
+        step = epoch.cached("train_step", build)  # rebuilt lazily
+        ...
+        epoch = epoch.grow(spare_devices)       # hot-join -> gen+1
+    """
+
+    def __init__(
+        self,
+        pool: Group,
+        spec: TopologySpec,
+        *,
+        session: Session | None = None,
+        name: str = "train",
+        generation: int = 0,
+        _comm: Communicator | None = None,
+    ):
+        errors.check(
+            isinstance(pool, Group) and pool.size() > 0,
+            errors.ErrorClass.ERR_GROUP,
+            "an epoch needs a non-empty member Group",
+        )
+        self.pool = pool
+        self.spec = spec
+        self.name = _sanitize(name)
+        self.generation = int(generation)
+        self._session = session
+        self._revoked = False
+        self._comm = _comm
+        self._cache: dict[str, Any] = {}
+        self.dims = spec.resolve(pool.size())
+        #: the active group: leading prod(dims) pool members, fold order
+        self.active = pool.incl(range(math.prod(self.dims)))
+        if generation == 0:
+            tool.pvar_count("epoch:create")
+
+    # -- construction --------------------------------------------------------
+
+    @classmethod
+    def create(
+        cls,
+        comm_or_group: Communicator | Group,
+        spec: TopologySpec | None = None,
+        *,
+        session: Session | None = None,
+        name: str = "train",
+    ) -> "CommEpoch":
+        """Generation 0.  From a :class:`Communicator`, the epoch *adopts*
+        it — the existing fabric (mesh identity included) stays live and the
+        spec defaults to :meth:`TopologySpec.from_communicator`.  From a
+        :class:`Group`, ``spec`` is required and the fabric is built lazily.
+        """
+
+        if isinstance(comm_or_group, Communicator):
+            comm = comm_or_group
+            derived = TopologySpec.from_communicator(comm)
+            spec = spec if spec is not None else derived
+            # adopt the live fabric (mesh identity preserved) only when the
+            # requested spec IS the comm's own shape — a Cartesian spec over
+            # a plain communicator must rebuild through cart_create
+            return cls(
+                comm.group(), spec, session=session, name=name,
+                _comm=comm if spec == derived else None,
+            )
+        errors.check(
+            spec is not None,
+            errors.ErrorClass.ERR_ARG,
+            "CommEpoch.create from a Group needs an explicit TopologySpec",
+        )
+        return cls(comm_or_group, spec, session=session, name=name)
+
+    # -- liveness ------------------------------------------------------------
+
+    @property
+    def revoked(self) -> bool:
+        return self._revoked
+
+    def revoke(self) -> None:
+        """``MPI_Comm_revoke``: mark the epoch dead.  Idempotent.  Every
+        subsequent fabric access raises ``ERR_REVOKED`` — consumers must
+        re-derive from the successor epoch.  Cooperative, like everything in
+        the single-host SPMD simulation: nothing interrupts in-flight work.
+        """
+
+        if not self._revoked:
+            tool.pvar_count("epoch:revoke")
+        self._revoked = True
+
+    def _live(self) -> None:
+        if self._revoked:
+            errors.fail(
+                errors.ErrorClass.ERR_REVOKED,
+                f"epoch {self.generation} of {self.name!r} is revoked; "
+                f"re-derive from the successor epoch",
+            )
+
+    # -- the fabric ----------------------------------------------------------
+
+    @property
+    def session(self) -> Session:
+        if self._session is None:
+            self._session = default_session()
+        return self._session
+
+    @property
+    def pset_name(self) -> str:
+        return f"{_EPOCH_PSET_PREFIX}{self.name}/{self.generation}"
+
+    @property
+    def comm(self) -> Communicator:
+        """The epoch's communicator, built lazily from the active group via
+        the canonical constructors (``Communicator.from_group`` /
+        ``cart_create``) and registered as the epoch's process set."""
+
+        self._live()
+        if self._comm is None:
+            self._comm = self._build_comm()
+        return self._comm
+
+    @property
+    def mesh(self):
+        return self.comm.mesh
+
+    def _build_comm(self) -> Communicator:
+        from repro.core import topology
+
+        tool.pvar_count("epoch:rebuild")
+        self.session.register_pset(self.pset_name, self.active)
+        if self.spec.is_cart:
+            # epoch-scoped cart tag: membership changes across generations,
+            # so the dims-keyed default tag would trip the clobber guard
+            dims_str = "x".join(str(d) for d in self.dims)
+            return topology.cart_create(
+                self.active,
+                self.dims,
+                self.spec.periods,
+                axis_names=self.spec.axis_names,
+                session=self.session,
+                tag=f"{self.pset_name}/cart/{dims_str}",
+            )
+        return Communicator.from_group(
+            self.active,
+            tag=self.pset_name,
+            shape=self.dims,
+            axis_names=self.spec.axis_names,
+        )
+
+    def axis_size(self, name: str) -> int:
+        return self.dims[self.spec.axis_names.index(name)]
+
+    # -- per-epoch derived state (persistent requests, topologies, buckets) --
+
+    def cached(self, key: str, build: Callable[["CommEpoch"], Any]) -> Any:
+        """Derived state bound to THIS epoch's fabric, built lazily once.
+
+        The canonical tenant is a :class:`~repro.core.futures.PersistentRequest`
+        AOT-compiled against the epoch's shardings: after a shrink the old
+        epoch's request raises ``ERR_REQUEST`` on the new mesh's arrays, so
+        consumers ask the *current* epoch and the request is rebuilt here on
+        first use — lazy, exactly once per (epoch, key)."""
+
+        self._live()
+        if key not in self._cache:
+            tool.pvar_count("epoch:request_rebuild")
+            self._cache[key] = build(self)
+        return self._cache[key]
+
+    def peek(self, key: str) -> Any | None:
+        """The cached value if already built (no build trigger)."""
+
+        return self._cache.get(key)
+
+    def invalidate(self, key: str | None = None) -> None:
+        if key is None:
+            self._cache.clear()
+        else:
+            self._cache.pop(key, None)
+
+    # -- the ULFM transitions --------------------------------------------------
+
+    def _successor(self, pool: Group) -> "CommEpoch":
+        errors.check(
+            pool.size() > 0,
+            errors.ErrorClass.ERR_PROC_FAILED,
+            f"epoch {self.generation} of {self.name!r} has no survivors",
+        )
+        tool.pvar_count("epoch:advance")
+        return CommEpoch(
+            pool,
+            self.spec,
+            session=self._session,
+            name=self.name,
+            generation=self.generation + 1,
+        )
+
+    def _as_devices(self, members: Iterable[Any]) -> list[Any]:
+        """Ranks (ints, resolved in the ACTIVE group) or devices, mixed."""
+
+        out = []
+        for m in members:
+            out.append(self.active.device(m) if isinstance(m, int) else m)
+        return out
+
+    def shrink(self, dead: Iterable[Any] | Group) -> "CommEpoch":
+        """``MPI_Comm_shrink``: the successor epoch over the survivor pool
+        (``Group.difference``).  ``dead`` is a Group, or an iterable of
+        devices / active-group ranks.  Revokes this epoch."""
+
+        dead_group = (
+            dead if isinstance(dead, Group) else Group(self._as_devices(dead))
+        )
+        self.revoke()
+        return self._successor(self.pool.difference(dead_group))
+
+    def grow(self, new_members: Iterable[Any] | Group) -> "CommEpoch":
+        """The reverse path: hot-join ``new_members`` (appended in pool
+        order — ``Group.union`` keeps survivors' ranks stable) and re-fold
+        the elastic axis.  Revokes this epoch."""
+
+        new_group = (
+            new_members
+            if isinstance(new_members, Group)
+            else Group(new_members)
+        )
+        self.revoke()
+        return self._successor(self.pool.union(new_group))
+
+    def __repr__(self) -> str:
+        state = "revoked" if self._revoked else "live"
+        return (
+            f"CommEpoch({self.name!r}, gen={self.generation}, "
+            f"dims={self.dims}, pool={self.pool.size()}, {state})"
+        )

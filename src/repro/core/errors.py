@@ -45,6 +45,11 @@ class ErrorClass(enum.IntEnum):
     ERR_RMA_RANGE = 55
     ERR_RMA_ATTACH = 56
     ERR_SESSION = 78
+    # ULFM fault-tolerance classes (MPI 4.x errhandler proposal): a peer
+    # process failed, or the communicator was revoked by the recovery
+    # protocol and must be rebuilt from a shrunken group
+    ERR_PROC_FAILED = 75
+    ERR_REVOKED = 76
     ERR_OTHER = 16
 
 
@@ -148,6 +153,14 @@ class SessionError(Error):
     klass = ErrorClass.ERR_SESSION
 
 
+class ProcFailedError(Error):
+    klass = ErrorClass.ERR_PROC_FAILED
+
+
+class RevokedError(Error):
+    klass = ErrorClass.ERR_REVOKED
+
+
 #: ``mpi::error`` namespace analogue — default codes as scoped variables.
 buffer = ErrorClass.ERR_BUFFER
 count = ErrorClass.ERR_COUNT
@@ -170,6 +183,8 @@ rma_range = ErrorClass.ERR_RMA_RANGE
 rma_attach = ErrorClass.ERR_RMA_ATTACH
 group = ErrorClass.ERR_GROUP
 session = ErrorClass.ERR_SESSION
+proc_failed = ErrorClass.ERR_PROC_FAILED
+revoked = ErrorClass.ERR_REVOKED
 other = ErrorClass.ERR_OTHER
 
 
@@ -196,6 +211,8 @@ _CLASS_TO_EXC: dict[ErrorClass, Any] = {
     ErrorClass.ERR_UNSUPPORTED_OPERATION: UnsupportedError,
     ErrorClass.ERR_GROUP: GroupError,
     ErrorClass.ERR_SESSION: SessionError,
+    ErrorClass.ERR_PROC_FAILED: ProcFailedError,
+    ErrorClass.ERR_REVOKED: RevokedError,
 }
 
 

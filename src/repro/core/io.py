@@ -507,11 +507,18 @@ class File:
 
     # -- the manifest sync point ----------------------------------------------
 
-    def commit_manifest(self, records: dict[str, dict]) -> None:
+    def commit_manifest(
+        self, records: dict[str, dict], meta: dict | None = None
+    ) -> None:
         """Merge ``records`` and write the manifest **once**, atomically —
         the explicit ``MPI_File_sync``.  N arrays cost a single
         read-modify-write, not N rewrites of an ever-growing JSON (the old
-        per-array update was O(n²) over a whole checkpoint)."""
+        per-array update was O(n²) over a whole checkpoint).
+
+        ``meta`` — writer-context tags merged into ``manifest["meta"]``
+        (the elastic runtime records the communicator epoch and world size
+        the fragments were sharded under, so a restore onto a different
+        survivor set knows it is resharding)."""
 
         from repro.core import tool
 
@@ -519,6 +526,8 @@ class File:
             manifest = self.manifest()
             for name, record in records.items():
                 manifest["arrays"][name] = record
+            if meta:
+                manifest.setdefault("meta", {}).update(meta)
             _atomic_write(
                 os.path.join(self.path, MANIFEST),
                 json.dumps(manifest, indent=1).encode(),

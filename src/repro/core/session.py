@@ -282,17 +282,28 @@ class Session:
 
     # -- lifecycle ---------------------------------------------------------
 
-    def refresh(self) -> "Session":
+    def refresh(self, devices: "Sequence[Any] | None" = None) -> "Session":
         """Re-enumerate the platform (elastic resize): builtin process sets
         are rebuilt from the current device set; user-registered sets are
-        preserved."""
+        preserved *modulo reality* — members that vanished from the platform
+        are pruned (a pset naming dead hardware is a stale handle, the bug
+        ULFM's revoke exists to prevent), and a user pset whose members all
+        vanished is dropped entirely.
+
+        ``devices`` overrides the enumeration source (default
+        ``jax.devices()``) so elastic tests can model devices disappearing
+        and re-appearing between refreshes on a single host."""
 
         self._live()
         user = {k: v for k, v in self._psets.items() if not _is_builtin_pset(k)}
-        self._devices = tuple(jax.devices())
+        self._devices = tuple(jax.devices() if devices is None else devices)
         self._psets = {}
         self._enumerate()
-        self._psets.update(user)
+        alive = set(self._devices)
+        for name, members in user.items():
+            survivors = tuple(d for d in members if d in alive)
+            if survivors:
+                self._psets[name] = survivors
         return self
 
     @property

@@ -61,6 +61,21 @@ def main(argv=None):
         "ring and rotates KV via cart_shift(+1) permutes (0/1 = dense attn)",
     )
     ap.add_argument("--inject-failure-at", type=int, default=None)
+    ap.add_argument(
+        "--evict-at",
+        default=None,
+        metavar="STEP:RANK",
+        help="elastic fault drill: evict RANK at STEP; the trainer shrinks "
+        "its epoch to the survivors, restores the last committed manifest "
+        "and continues — no job restart",
+    )
+    ap.add_argument(
+        "--admit-at",
+        default=None,
+        metavar="STEP[:COUNT]",
+        help="elastic grow drill: hot-join COUNT spare ranks (default 1) at "
+        "STEP, re-folding the data axis",
+    )
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--out", default=None, help="write metrics history JSON here")
     args = ap.parse_args(argv)
@@ -91,11 +106,15 @@ def main(argv=None):
         pipeline_microbatches=args.pipeline_microbatches,
         ring_attention=args.ring_attention,
     )
-    injector = (
-        FaultInjector(fail_at_steps=(args.inject_failure_at,))
-        if args.inject_failure_at is not None
-        else None
-    )
+    injector = None
+    if args.inject_failure_at is not None:
+        injector = FaultInjector(fail_at_steps=(args.inject_failure_at,))
+    if args.evict_at is not None:
+        step, _, rank = args.evict_at.partition(":")
+        injector = (injector or FaultInjector()).evict_rank(int(step), int(rank or 0))
+    if args.admit_at is not None:
+        step, _, count = args.admit_at.partition(":")
+        injector = (injector or FaultInjector()).admit_rank(int(step), int(count or 1))
     trainer = Trainer(
         cfg, pcfg, tcfg, comm, seq_len=args.seq, global_batch=args.batch, injector=injector
     )

@@ -93,6 +93,25 @@ class PartitionedGradSync:
         self.compression = compression
         self.mean = mean
 
+    @classmethod
+    def for_epoch(
+        cls,
+        epoch,
+        *,
+        compression: Compression = Compression.NONE,
+        mean: bool = True,
+        key: str = "grad_sync",
+    ) -> "PartitionedGradSync":
+        """The epoch-derived sync: one instance per
+        :class:`~repro.core.epoch.CommEpoch`, held in the epoch's cache so a
+        shrink/grow re-initialises the buckets against the successor fabric
+        on first use (the revoked epoch raises ``ERR_REVOKED`` instead of
+        silently reducing over dead ranks)."""
+
+        return epoch.cached(
+            key, lambda ep: cls(ep.comm, compression=compression, mean=mean)
+        )
+
     # -- one bucket -----------------------------------------------------------
 
     def _reduce_bucket(self, index: int, buf: jax.Array) -> jax.Array:

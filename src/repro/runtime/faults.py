@@ -25,9 +25,25 @@ import time
 from collections import deque
 from typing import Callable
 
+from repro.core import tool
+
+tool.pvar_register("elastic:evictions", "ranks evicted by the fault injector")
+tool.pvar_register("elastic:joins", "ranks hot-joined into a grown epoch")
+
 
 class WorkerFailure(RuntimeError):
     """A (possibly injected) unrecoverable worker/device failure."""
+
+
+class RankEvicted(WorkerFailure):
+    """A *specific* rank died (ULFM ``MPI_ERR_PROC_FAILED`` analogue): the
+    elastic recovery path shrinks the epoch to the survivors instead of
+    restarting the whole job."""
+
+    def __init__(self, step: int, rank: int):
+        super().__init__(f"injected eviction of rank {rank} at step {step}")
+        self.step = step
+        self.rank = rank
 
 
 @dataclasses.dataclass
@@ -42,17 +58,53 @@ class FaultInjector:
       background save must surface the error as ``ERR_IO`` from
       ``CheckpointManager.wait()`` and ``latest`` must not advance — a
       silently "successful" failed save is the defect this exists to catch.
+    * ``evict_rank(step, rank)`` — raise :class:`RankEvicted` for that rank
+      at that step (fires once): the ULFM shrink path.  Deterministic by
+      construction — schedules key on the step counter, and the trainer's
+      ``StepGuard.clock`` is frozen in elastic tests, so the same schedule
+      replays bit-identically.
+    * ``admit_rank(step, count)`` — offer ``count`` new ranks at that step
+      (consumed once via :meth:`take_admissions`): the grow path.  Not an
+      exception — joining is voluntary, the trainer polls.
     """
 
     fail_at_steps: tuple[int, ...] = ()
     kind: type[Exception] = WorkerFailure
     fail_fragments: tuple[str, ...] = ()
     _fired: set = dataclasses.field(default_factory=set)
+    _evictions: dict = dataclasses.field(default_factory=dict)
+    _admissions: dict = dataclasses.field(default_factory=dict)
+
+    def evict_rank(self, step: int, rank: int) -> "FaultInjector":
+        """Schedule rank ``rank`` to die at step ``step``."""
+
+        self._evictions[int(step)] = int(rank)
+        return self
+
+    def admit_rank(self, step: int, count: int = 1) -> "FaultInjector":
+        """Schedule ``count`` new ranks to offer themselves at ``step``."""
+
+        self._admissions[int(step)] = self._admissions.get(int(step), 0) + int(count)
+        return self
+
+    def take_admissions(self, step: int) -> int:
+        """Consume (once) the number of ranks joining at this step."""
+
+        key = ("admit", step)
+        if step in self._admissions and key not in self._fired:
+            self._fired.add(key)
+            return self._admissions[step]
+        return 0
 
     def check(self, step: int) -> None:
         if step in self.fail_at_steps and step not in self._fired:
             self._fired.add(step)
             raise self.kind(f"injected worker failure at step {step}")
+        key = ("evict", step)
+        if step in self._evictions and key not in self._fired:
+            self._fired.add(key)
+            tool.pvar_count("elastic:evictions")
+            raise RankEvicted(step, self._evictions[step])
 
     def check_io(self, fragment: str) -> None:
         """Fragment-write hook (wired as ``File.write_hook``)."""

@@ -62,16 +62,27 @@ from repro.checkpoint import CheckpointManager
 from repro.configs.base import ModelConfig, ParallelConfig
 from repro.core import errors, tool
 from repro.core.communicator import Communicator
+from repro.core.epoch import ELASTIC, CommEpoch, TopologySpec
 from repro.core.futures import PersistentRequest
 from repro.data import TokenPipeline
 from repro.models import api as model_api
 from repro.optim import AdamW, clip_by_global_norm, cosine_warmup
-from repro.runtime.faults import FaultInjector, StepGuard, StragglerPolicy, WorkerFailure
+from repro.runtime.faults import (
+    FaultInjector,
+    RankEvicted,
+    StepGuard,
+    StragglerPolicy,
+    WorkerFailure,
+)
 from repro.sharding import rules
 
 log = logging.getLogger("repro.trainer")
 
-tool.pvar_register("trace:train_step", "train-step executables traced (want exactly 1)")
+tool.pvar_register("trace:train_step", "train-step executables traced (want exactly 1 per epoch)")
+tool.pvar_register(
+    "elastic:recovery_steps",
+    "steps replayed per eviction (restore point back to eviction point)",
+)
 
 
 @dataclasses.dataclass
@@ -237,57 +248,20 @@ class Trainer:
         clock: Callable[[], float] | None = None,
     ):
         self.cfg, self.pcfg, self.tcfg = cfg, pcfg, tcfg
+        self.injector = injector
         # Session-derived communicator is the canonical handle onto the
-        # training process set; a bare Mesh is wrapped unmanaged.
-        self.comm = comm if isinstance(comm, Communicator) else Communicator(comm)
-        errors.check(
-            not (tcfg.pipeline_stages > 1 and tcfg.ring_attention > 1),
-            errors.ErrorClass.ERR_TOPOLOGY,
-            "pipeline_stages and ring_attention both re-form the communicator; "
-            "pick one per trainer",
-        )
-        if tcfg.pipeline_stages > 1:
-            # re-form the process set as a (data, stage) Cartesian topology:
-            # stage boundaries become cart_shift(+1) neighbor exchanges
-            from repro.core import topology
-
-            s = tcfg.pipeline_stages
-            size = self.comm.group().size()
-            errors.check(
-                size % s == 0,
-                errors.ErrorClass.ERR_DIMS,
-                f"{size} devices do not fold onto {s} pipeline stages",
-            )
-            self.comm = topology.cart_create(
-                self.comm, (size // s, s), (False, False),
-                axis_names=("data", "stage"),
-            )
-        elif tcfg.ring_attention > 1:
-            # re-form the process set as a (data, ring) Cartesian topology
-            # with a *periodic* ring dim folded onto the model axis: the
-            # attention layers shard the sequence over the ring and rotate
-            # KV shards via cart_shift(+1) collective-permutes
-            from repro.core import topology
-
-            r = tcfg.ring_attention
-            size = self.comm.group().size()
-            errors.check(
-                size % r == 0,
-                errors.ErrorClass.ERR_DIMS,
-                f"{size} devices do not fold onto a ring of {r}",
-            )
-            self.comm = topology.cart_create(
-                self.comm, (size // r, r), (False, True),
-                axis_names=("data", "model"),
-            )
-            self.pcfg = pcfg = dataclasses.replace(pcfg, ring_attention=True)
-        self.mesh = self.comm.mesh
+        # training process set; a bare Mesh is wrapped unmanaged.  All comm
+        # state lives in the current CommEpoch — the rebuildable fabric the
+        # elastic shrink/grow path advances — and `self.comm`/`self.mesh`
+        # read through to it.
+        comm = comm if isinstance(comm, Communicator) else Communicator(comm)
+        self._epoch = self._reform_topology(comm)
         self.seq_len, self.global_batch = seq_len, global_batch
         self.bundle = model_api.build(cfg)
         self.opt = AdamW(
             lr=cosine_warmup(tcfg.lr, tcfg.warmup_steps, tcfg.steps),
             weight_decay=tcfg.weight_decay,
-            moment_dtype=pcfg.moment_dtype,
+            moment_dtype=self.pcfg.moment_dtype,
         )
         self.guard = StepGuard(
             straggler or StragglerPolicy(), injector,
@@ -319,6 +293,63 @@ class Trainer:
         self._bshard = None
         self.metrics_history: list[dict] = []
         self.restarts = 0
+        self.evictions = 0
+        self.joins = 0
+
+    # -- the fabric: everything comm-shaped reads through the current epoch ---
+
+    @property
+    def epoch(self) -> CommEpoch:
+        return self._epoch
+
+    @property
+    def comm(self) -> Communicator:
+        return self._epoch.comm
+
+    @property
+    def mesh(self):
+        return self._epoch.comm.mesh
+
+    def _reform_topology(self, comm: Communicator) -> CommEpoch:
+        """The one place the trainer shapes its fabric: derive the epoch's
+        :class:`TopologySpec` from the config (pipeline and ring were two
+        near-identical cart-reform blocks before) and bundle it with the
+        communicator's group into generation 0.  The data axis is the
+        elastic dim — shrink/grow re-folds it; stage/ring dims are fixed."""
+
+        tcfg = self.tcfg
+        errors.check(
+            not (tcfg.pipeline_stages > 1 and tcfg.ring_attention > 1),
+            errors.ErrorClass.ERR_TOPOLOGY,
+            "pipeline_stages and ring_attention both re-form the communicator; "
+            "pick one per trainer",
+        )
+        size = comm.group().size()
+        if tcfg.pipeline_stages > 1:
+            # re-form the process set as a (data, stage) Cartesian topology:
+            # stage boundaries become cart_shift(+1) neighbor exchanges
+            s = tcfg.pipeline_stages
+            errors.check(
+                size % s == 0,
+                errors.ErrorClass.ERR_DIMS,
+                f"{size} devices do not fold onto {s} pipeline stages",
+            )
+            spec = TopologySpec((ELASTIC, s), ("data", "stage"), (False, False))
+        elif tcfg.ring_attention > 1:
+            # (data, ring) Cartesian topology with a *periodic* ring dim
+            # folded onto the model axis: attention shards the sequence over
+            # the ring and rotates KV via cart_shift(+1) collective-permutes
+            r = tcfg.ring_attention
+            errors.check(
+                size % r == 0,
+                errors.ErrorClass.ERR_DIMS,
+                f"{size} devices do not fold onto a ring of {r}",
+            )
+            spec = TopologySpec((ELASTIC, r), ("data", "model"), (False, True))
+            self.pcfg = dataclasses.replace(self.pcfg, ring_attention=True)
+        else:
+            spec = None  # adopt the communicator's own shape
+        return CommEpoch.create(comm, spec, name="train")
 
     # -- assembly -------------------------------------------------------------
 
@@ -371,6 +402,18 @@ class Trainer:
         return pshard, oshard, bshard
 
     def compile(self, params, opt_state):
+        """The epoch's persistent step executable, built lazily exactly once
+        per epoch (``epoch.cached``).  A shrink/grow revokes the old epoch —
+        and with it the request whose shardings the new mesh would reject
+        with ``ERR_REQUEST`` — so the successor epoch rebuilds here on first
+        use: ``trace:train_step`` is 1 per epoch by construction."""
+
+        self._compiled, self._bshard = self._epoch.cached(
+            "train_step", lambda _ep: self._build_step(params, opt_state)
+        )
+        return self._compiled
+
+    def _build_step(self, params, opt_state):
         batch = self.pipeline.device_batch(0, self.mesh, self.pcfg)
         if self.tcfg.pipeline_stages > 1:
             base_step = make_pipeline_train_step(
@@ -406,10 +449,10 @@ class Trainer:
                     out_shardings=(pshard, oshard, None),
                     donate_argnums=donate,
                 )
-                self._compiled = PersistentRequest(
-                    jitted, example, donate_argnums=donate
+                return (
+                    PersistentRequest(jitted, example, donate_argnums=donate),
+                    bshard,
                 )
-                self._bshard = bshard
             else:
                 # NOTE: no donation here — the straggler policy re-dispatches
                 # the same step with the same inputs, which donated buffers
@@ -417,12 +460,14 @@ class Trainer:
                 # params and opt state; at scale the straggler retry path
                 # instead restores from the last checkpoint (the failure
                 # path below).
-                self._compiled = jax.jit(
-                    step_fn,
-                    in_shardings=(pshard, oshard, bshard),
-                    out_shardings=(pshard, oshard, None),
+                return (
+                    jax.jit(
+                        step_fn,
+                        in_shardings=(pshard, oshard, bshard),
+                        out_shardings=(pshard, oshard, None),
+                    ),
+                    bshard,
                 )
-        return self._compiled
 
     # -- the loop --------------------------------------------------------------
 
@@ -432,26 +477,37 @@ class Trainer:
         start = 0
         if self.ckpt is not None and self.ckpt.latest_step() is not None:
             params, opt_state, start = self._restore(params, opt_state)
-        step_fn = self.compile(params, opt_state)
+        self.compile(params, opt_state)
 
         step = start
         while step < steps:
             try:
                 params, opt_state, step = self._run_span(
-                    step_fn, params, opt_state, step, steps
+                    params, opt_state, step, steps
                 )
+            except RankEvicted as e:
+                # ULFM path: no job restart — revoke, shrink to survivors,
+                # rebuild the fabric, restore the last committed manifest
+                self.evictions += 1
+                if self.evictions + self.restarts > self.tcfg.max_restarts:
+                    raise
+                log.warning("rank %d evicted at step %d; shrinking", e.rank, e.step)
+                params, opt_state, step = self._shrink(e)
             except WorkerFailure as e:
                 self.restarts += 1
                 if self.restarts > self.tcfg.max_restarts:
                     raise
                 log.warning("worker failure at step %d (%s); restarting", step, e)
                 params, opt_state, step = self._recover()
-                step_fn = self._compiled
         if self.ckpt is not None:
             self._checkpoint(step, params, opt_state, join=True)
         return {
             "final_step": step,
             "restarts": self.restarts,
+            "evictions": self.evictions,
+            "joins": self.joins,
+            "epoch": self._epoch.generation,
+            "world_size": self.comm.size(),
             "ckpt_failures": self.ckpt_failures,
             "metrics": self.metrics_history,
         }
@@ -472,7 +528,15 @@ class Trainer:
             self._note_ckpt_failure(step, e)
         try:
             self.ckpt.save(
-                step, {"params": params, "opt": opt_state}, extra={"step": step}
+                step,
+                {"params": params, "opt": opt_state},
+                extra={"step": step},
+                # manifests carry the fabric they were written under, so an
+                # elastic restore knows it is resharding across world sizes
+                meta={
+                    "epoch": self._epoch.generation,
+                    "world_size": self.comm.size(),
+                },
             )
             if join:
                 self.ckpt.wait()
@@ -484,11 +548,16 @@ class Trainer:
         tool.pvar_count("ckpt_save_failed")
         log.warning("checkpoint save failed at step %d: %s", step, e)
 
-    def _run_span(self, step_fn, params, opt_state, step, steps):
+    def _run_span(self, params, opt_state, step, steps):
         # donated buffers cannot be re-dispatched: stragglers under the
         # persistent engine take the failure path (checkpoint restore)
         retry_safe = not (self.tcfg.persistent and self.tcfg.donate)
         while step < steps:
+            if self.injector is not None:
+                joiners = self.injector.take_admissions(step)
+                if joiners:
+                    params, opt_state = self._grow(joiners, params, opt_state)
+            step_fn = self._compiled
             batch = self.pipeline.device_batch(step, self.mesh, self.pcfg)
             if self.tcfg.persistent:
                 # no-op when device_batch already matches the bound sharding
@@ -535,6 +604,56 @@ class Trainer:
         return params, opt_state, step
 
     # -- recovery ---------------------------------------------------------------
+
+    def _shrink(self, evt: RankEvicted):
+        """The ULFM recovery loop, one method: revoke → ``Group.difference``
+        shrink → ``Communicator.from_group`` / cart re-fold rebuild →
+        restore from the last committed manifest → continue on the
+        survivors.  The old epoch's persistent request dies with it (its
+        shardings would raise ``ERR_REQUEST`` on the shrunken mesh); the
+        successor epoch rebuilds it lazily in :meth:`compile`."""
+
+        self._epoch = self._epoch.shrink([evt.rank])
+        log.warning(
+            "epoch %d: %s survivors fold onto %s",
+            self._epoch.generation, self._epoch.pool.size(), self._epoch.dims,
+        )
+        params, opt_state = self.init_state()
+        if self.ckpt is not None and self.ckpt.latest_step() is not None:
+            params, opt_state, step = self._restore(params, opt_state)
+        else:
+            step = 0
+        tool.pvar_add("elastic:recovery_steps", max(0, evt.step - step))
+        self.compile(params, opt_state)
+        return params, opt_state, step
+
+    def _grow(self, count: int, params, opt_state):
+        """The reverse path: hot-join up to ``count`` spare ranks (world
+        minus the epoch's pool), re-fold the elastic data axis, and reshard
+        the *live* state onto the grown mesh — growing loses no steps, so
+        there is nothing to restore."""
+
+        spares = (
+            self._epoch.session.group("repro://world")
+            .difference(self._epoch.pool)
+            .devices[:count]
+        )
+        if not spares:
+            log.warning("admission requested but no spare ranks; continuing")
+            return params, opt_state
+        self._epoch = self._epoch.grow(spares)
+        self.joins += len(spares)
+        tool.pvar_count("elastic:joins")
+        log.warning(
+            "epoch %d: %d rank(s) joined, folding onto %s",
+            self._epoch.generation, len(spares), self._epoch.dims,
+        )
+        with self.mesh:
+            pshard, oshard = self._state_shardings(params, opt_state)
+            params = jax.device_put(params, pshard)
+            opt_state = jax.device_put(opt_state, oshard)
+        self.compile(params, opt_state)
+        return params, opt_state
 
     def _recover(self):
         """Restart protocol: re-form mesh (elastic), restore newest complete

@@ -23,6 +23,7 @@ SHARDS = {
         "tests/test_cell_specs.py",
         "tests/test_collectives.py",
         "tests/test_datatypes.py",
+        "tests/test_epoch.py",
         "tests/test_errors_and_tool.py",
         "tests/test_futures.py",
         "tests/test_hloanalysis.py",
@@ -44,6 +45,7 @@ SHARDS = {
         "tests/test_distributed_paths.py",
         "tests/test_dryrun_integration.py",
         "tests/test_elastic_multidevice.py",
+        "tests/test_elastic_runtime.py",
         "tests/test_engine.py",
         "tests/test_models.py",
         "tests/test_server.py",

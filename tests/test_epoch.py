@@ -1,0 +1,196 @@
+"""Communicator epochs (ULFM-style shrink/grow): TopologySpec resolution,
+epoch generation algebra, revocation, the per-epoch derived-state cache, and
+cart re-folding onto arbitrary survivor groups.
+
+Epoch algebra is device-agnostic (Groups over any hashables); only the
+``.comm`` fabric needs jax devices, and those tests run on the single
+default device."""
+
+from __future__ import annotations
+
+import pytest
+
+from repro.core import errors, tool, topology
+from repro.core.communicator import Communicator, world
+from repro.core.epoch import ELASTIC, CommEpoch, TopologySpec
+from repro.core.session import Group, default_session
+
+# ---------------------------------------------------------------------------
+# TopologySpec
+# ---------------------------------------------------------------------------
+
+
+def test_spec_resolves_elastic_dim():
+    spec = TopologySpec((ELASTIC, 2), ("data", "stage"), (False, False))
+    assert spec.fixed_size == 2
+    assert spec.resolve(8) == (4, 2)
+    assert spec.resolve(7) == (3, 2)  # floor: one survivor idles
+    assert spec.resolve(2) == (1, 2)
+    with pytest.raises(errors.DimsError):
+        spec.resolve(1)  # not even one fold fits
+
+
+def test_spec_fixed_shape_passthrough():
+    spec = TopologySpec((4, 2), ("data", "model"))
+    assert spec.resolve(8) == (4, 2)
+    assert spec.resolve(100) == (4, 2)
+    assert not spec.is_cart
+    assert TopologySpec((ELASTIC,), ("data",), (True,)).is_cart
+
+
+def test_spec_validation():
+    with pytest.raises(errors.DimsError):
+        TopologySpec((ELASTIC, ELASTIC), ("a", "b"))  # two elastic dims
+    with pytest.raises(errors.DimsError):
+        TopologySpec((2, 2), ("only_one",))
+    with pytest.raises(errors.DimsError):
+        TopologySpec((2,), ("a",), (False, False))  # periods arity
+    with pytest.raises(errors.DimsError):
+        TopologySpec((0,), ("a",))
+
+
+def test_spec_from_communicator_marks_data_elastic():
+    comm = world(refresh=True)
+    spec = TopologySpec.from_communicator(comm)
+    assert spec.shape == (ELASTIC,)
+    assert spec.axis_names == ("world",)
+    assert spec.periods is None
+
+
+# ---------------------------------------------------------------------------
+# epoch generation algebra (device-agnostic)
+# ---------------------------------------------------------------------------
+
+
+def _toy(n=8, shape=(ELASTIC, 2), periods=(False, False)):
+    spec = TopologySpec(shape, ("data", "stage"), periods)
+    return CommEpoch(Group("abcdefgh"[:n]), spec, name="toy")
+
+
+def test_epoch_folds_leading_members():
+    ep = _toy()
+    assert ep.generation == 0
+    assert ep.dims == (4, 2)
+    assert ep.active.devices == tuple("abcdefgh")
+    assert ep.axis_size("stage") == 2
+
+
+def test_shrink_advances_generation_and_refolds():
+    ep = _toy()
+    ep1 = ep.shrink([3])  # rank 3 of the active group == device 'd'
+    assert ep.revoked and not ep1.revoked
+    assert ep1.generation == 1
+    assert ep1.pool.devices == tuple("abcefgh")
+    assert ep1.dims == (3, 2)  # 7 survivors -> 6 fold, 1 idles
+    assert ep1.active.devices == tuple("abcefg")
+    # devices and Groups are accepted too
+    ep2 = ep1.shrink(Group("a"))
+    assert ep2.dims == (3, 2) and ep2.pool.size() == 6
+
+
+def test_grow_rejoins_and_expands():
+    ep = _toy().shrink(["d"])
+    ep2 = ep.grow(["d"])
+    assert ep2.generation == 2
+    assert ep2.dims == (4, 2)
+    # survivors keep their ranks; the joiner appends
+    assert ep2.pool.devices == tuple("abcefgh") + ("d",)
+
+
+def test_revoked_epoch_rejects_fabric_access():
+    ep = _toy()
+    ep.revoke()
+    ep.revoke()  # idempotent
+    with pytest.raises(errors.RevokedError):
+        _ = ep.comm
+    with pytest.raises(errors.RevokedError):
+        ep.cached("x", lambda e: 1)
+    with pytest.raises(errors.RevokedError):
+        ep._live()
+
+
+def test_no_survivors_is_proc_failed():
+    spec = TopologySpec((ELASTIC,), ("data",))
+    ep = CommEpoch(Group("ab"), spec, name="toy")
+    with pytest.raises(errors.ProcFailedError):
+        ep.shrink(["a", "b"])
+
+
+def test_cached_builds_lazily_once_per_epoch():
+    ep = _toy()
+    builds = []
+    build = lambda e: builds.append(e.generation) or len(builds)  # noqa: E731
+    assert ep.peek("step") is None
+    assert ep.cached("step", build) == 1
+    assert ep.cached("step", build) == 1  # cached, no rebuild
+    assert builds == [0]
+    ep1 = ep.shrink([0])
+    assert ep1.peek("step") is None  # successor starts empty
+    assert ep1.cached("step", build) == 2
+    assert builds == [0, 1]
+    ep1.invalidate("step")
+    assert ep1.cached("step", build) == 3
+
+
+# ---------------------------------------------------------------------------
+# the fabric (single-device: world-sized epochs)
+# ---------------------------------------------------------------------------
+
+
+def test_epoch_adopts_matching_communicator():
+    comm = world(refresh=True)
+    ep = CommEpoch.create(comm, name="adopt")
+    assert ep.comm is comm  # mesh identity preserved at generation 0
+    assert ep.dims == (comm.size(),)
+
+
+def test_epoch_builds_fabric_and_registers_pset():
+    sess = default_session()
+    g = sess.group("repro://world")
+    spec = TopologySpec((ELASTIC,), ("data",))
+    before = tool.pvar_read().get("epoch:rebuild", 0)
+    ep = CommEpoch.create(g, spec, name="fabric")
+    comm = ep.comm
+    assert comm.size() == g.size()
+    assert ep.pset_name == "repro://epoch/fabric/0"
+    assert sess.group(ep.pset_name).compare(ep.active).name != "UNEQUAL"
+    assert tool.pvar_read()["epoch:rebuild"] == before + 1
+    assert ep.comm is comm  # built once
+
+
+def test_epoch_cart_fabric():
+    g = default_session().group("repro://world")
+    spec = TopologySpec((ELASTIC,), ("ring",), (True,))
+    ep = CommEpoch.create(g, spec, name="ring")
+    cart = ep.comm
+    assert isinstance(cart, topology.CartComm)
+    assert cart.periods == (True,)
+    assert cart.dims == ep.dims
+
+
+def test_create_from_group_requires_spec():
+    g = default_session().group("repro://world")
+    with pytest.raises(errors.ArgError):
+        CommEpoch.create(g)
+
+
+def test_cart_refold_keeps_fixed_dims():
+    g = default_session().group("repro://world")
+    cart = topology.cart_create(g, (g.size(),), (True,), tag="repro://cart/refold0")
+    ref = topology.cart_refold(cart, g, tag="repro://cart/refold1")
+    assert ref.dims == cart.dims and ref.periods == cart.periods
+    with pytest.raises(errors.DimsError):
+        topology.cart_refold(cart, Group())
+
+
+def test_grad_sync_reinits_per_epoch():
+    from repro.optim.grad_sync import PartitionedGradSync
+
+    g = default_session().group("repro://world")
+    ep = CommEpoch.create(g, TopologySpec((ELASTIC,), ("data",)), name="gs")
+    sync = PartitionedGradSync.for_epoch(ep)
+    assert sync.inner is ep.comm
+    assert PartitionedGradSync.for_epoch(ep) is sync  # one per epoch
+    ep.revoke()
+    with pytest.raises(errors.RevokedError):
+        PartitionedGradSync.for_epoch(ep)

@@ -141,6 +141,50 @@ def test_default_session_caching():
     assert not default_session().finalized
 
 
+class _FakeDev:
+    """Stands in for a device that appears/disappears between refreshes."""
+
+    def __init__(self, i: int):
+        self.id = 1000 + i
+        self.process_index = 0
+        self.platform = "elastic"
+
+    def __repr__(self):
+        return f"FakeDev({self.id})"
+
+
+def test_refresh_rederives_world_when_devices_appear():
+    sess = Session.init()
+    real = sess.pset("repro://world")
+    joined = tuple(real) + (_FakeDev(0), _FakeDev(1))
+    sess.refresh(devices=joined)
+    assert sess.group("repro://world").size() == len(real) + 2
+    assert sess.group("repro://platform/elastic").size() == 2
+    # back to reality: the builtin sets re-derive, the fakes are gone
+    sess.refresh()
+    assert sess.group("repro://world").size() == len(real)
+    assert "repro://platform/elastic" not in sess.psets()
+
+
+def test_refresh_prunes_vanished_devices_from_user_psets():
+    sess = Session.init()
+    real = sess.pset("repro://world")
+    fakes = (_FakeDev(0), _FakeDev(1))
+    sess.refresh(devices=tuple(real) + fakes)
+    sess.register_pset("repro://doomed", Group(fakes))
+    sess.register_pset("repro://mixed", Group([real[0], fakes[0]]))
+    sess.register_pset("repro://stable", Group([real[0]]))
+
+    sess.refresh(devices=tuple(real))  # the fake devices disappear
+    # a pset whose members all vanished is dropped; survivors are pruned —
+    # no user pset may keep naming hardware the platform no longer has
+    assert "repro://doomed" not in sess.psets()
+    assert sess.pset("repro://mixed") == (real[0],)
+    assert sess.pset("repro://stable") == (real[0],)
+    with pytest.raises(errors.ArgError):
+        sess.group("repro://doomed")
+
+
 def test_from_group_shape_axis_mismatch():
     g = default_session().group("repro://world")
     with pytest.raises(errors.DimsError):

@@ -231,6 +231,35 @@ print("PIPELINE_TRAINER_OK", delta)
     assert "PIPELINE_TRAINER_OK" in subproc(code, n=4)
 
 
+def test_pipeline_ring_mutual_exclusion_message():
+    """Both modes re-form the fabric through ``_reform_topology``; asking
+    for both is ``ERR_TOPOLOGY`` with a stable, actionable message."""
+
+    from repro.core import errors
+
+    with pytest.raises(errors.TopologyError) as ei:
+        Trainer(
+            _tiny_cfg(), ParallelConfig(),
+            TrainerConfig(pipeline_stages=2, ring_attention=2),
+            make_host_mesh(),
+        )
+    assert (
+        "pipeline_stages and ring_attention both re-form the communicator; "
+        "pick one per trainer"
+    ) in str(ei.value)
+
+
+def test_trainer_state_derives_from_epoch():
+    """The trainer caches no fabric: comm and mesh read through the current
+    :class:`~repro.core.epoch.CommEpoch`, and generation 0 adopts the
+    incoming communicator (mesh identity preserved)."""
+
+    t = _trainer(steps=1)
+    assert t.epoch.generation == 0
+    assert t.comm is t.epoch.comm
+    assert t.mesh is t.comm.mesh
+
+
 def test_elastic_remesh_restore(tmp_path):
     """Checkpoint written under one mesh restores under a different
     data-parallel size (elastic rescale)."""
