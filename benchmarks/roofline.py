@@ -74,11 +74,69 @@ def table(rows: list[dict]) -> str:
     return "\n".join(lines)
 
 
+#: the regret matrix: architectures with genuinely different legal spaces
+#: (dense GQA, wide dense, fine-grained MoE, coarse MoE), all on the train
+#: cell at pod scale — enough devices that the axes actually compete.
+REGRET_CELLS = (
+    ("gemma2_9b", "train_4k", 256),
+    ("qwen1_5_32b", "train_4k", 256),
+    ("deepseek_v2_236b", "train_4k", 256),
+    ("grok_1_314b", "train_4k", 256),
+)
+
+
+def regret(argv_cells=REGRET_CELLS) -> dict:
+    """``autotuner_regret``: coordinate-descent score ÷ exhaustive minimum
+    per cell; the tracked series is the worst (max) ratio.  Deterministic —
+    both searches are pure arithmetic over the same candidate set — so the
+    gate can hold a tight tolerance: 1.0 means greedy found the optimum
+    everywhere, and the brute-force denominator IS the enumerated minimum
+    (the tuner's acceptance criterion, checked on every CI run)."""
+
+    from repro import tune
+
+    cells = []
+    worst = 1.0
+    for arch, shape, devices in argv_cells:
+        best = tune.tune(arch, shape, devices, mode="exhaustive",
+                         register=False, calibrate=False, slices=1)
+        greedy = tune.tune(arch, shape, devices, mode="coordinate",
+                           register=False, calibrate=False, slices=1)
+        ratio = greedy.score.step_s / best.score.step_s
+        worst = max(worst, ratio)
+        cells.append({
+            "arch": arch, "shape": shape, "devices": devices,
+            "best": best.plan.slug(), "best_step_s": best.score.step_s,
+            "greedy": greedy.plan.slug(), "greedy_step_s": greedy.score.step_s,
+            "regret": ratio,
+            "n_candidates": best.n_candidates,
+            "greedy_scored": greedy.n_scored,
+        })
+        print(f"regret {arch} x {shape} @{devices}: {ratio:.4f} "
+              f"(greedy {greedy.plan.slug()} vs best {best.plan.slug()}, "
+              f"{greedy.n_scored}/{best.n_candidates} scored)")
+    out = {"autotuner_regret": worst, "cells": cells}
+    OUT.mkdir(parents=True, exist_ok=True)
+    (OUT / "autotuner_regret.json").write_text(json.dumps(out, indent=1))
+    print(f"autotuner_regret (worst cell): {worst:.4f}")
+    return out
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="pod_16x16")
     ap.add_argument("--tag", default="")
+    ap.add_argument(
+        "--regret",
+        action="store_true",
+        help="score the autotuner: coordinate-descent vs brute-force minimum "
+        "over the fixed regret matrix; writes autotuner_regret.json",
+    )
     args = ap.parse_args(argv)
+
+    if args.regret:
+        regret()
+        return 0
 
     rows = load(args.mesh, args.tag)
     if not rows:

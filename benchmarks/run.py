@@ -53,6 +53,7 @@ TRACKED = {
     "ring_steps_per_s": "higher",           # long-context ring train steps/s
     "elastic_recovery_steps": "lower",      # steps replayed per evicted rank
     "elastic_rebuild_ratio": "lower",       # shrink-rebuild-restore / clean step
+    "autotuner_regret": "lower",            # greedy plan score / brute-force best
 }
 
 
@@ -132,6 +133,11 @@ def summarize(out_dir: Path = OUT) -> dict:
         r = json.loads(el.read_text())
         summary["elastic_recovery_steps"] = float(r["recovery_steps"])
         summary["elastic_rebuild_ratio"] = float(r["rebuild_ratio"])
+
+    regret = out_dir / "autotuner_regret.json"
+    if regret.exists():
+        r = json.loads(regret.read_text())
+        summary["autotuner_regret"] = float(r["autotuner_regret"])
 
     parity = out_dir / "hlo_parity.json"
     if parity.exists():
@@ -328,6 +334,9 @@ def main(argv=None):
                 else ["--ring", "4", "--steps", "3", "--seq", "1024"])),
             # injected rank eviction: steps replayed + shrink-rebuild cost
             ("elastic_bench", lambda: elastic_bench.main()),
+            # autotuner: greedy coordinate-descent vs the brute-force
+            # roofline minimum over the fixed regret matrix (deterministic)
+            ("roofline(regret)", lambda: roofline.main(["--regret"])),
         ]
         for name, fn in jobs:
             if any(s in name for s in args.skip):

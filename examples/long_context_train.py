@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ModelConfig, ParallelConfig
+from repro.configs.base import ModelConfig, ParallelConfig, ParallelPlan
 from repro.core import _compat, topology
 from repro.kernels.flash_attention import ops as fa
 from repro.kernels.ring_attention import ops as ring_ops
@@ -48,7 +48,8 @@ def train_long(seq_len: int = 1024, ring_size: int = 4) -> None:
     )
     trainer = Trainer(  # re-forms the 8 devices as a (2, 4) (data, ring) cart
         cfg, ParallelConfig(),
-        TrainerConfig(steps=3, lr=1e-3, log_every=1, ring_attention=ring_size),
+        TrainerConfig(steps=3, lr=1e-3, log_every=1,
+                      plan=ParallelPlan(ring=ring_size)),
         make_host_communicator(), seq_len=seq_len, global_batch=2,
     )
     result = trainer.run()

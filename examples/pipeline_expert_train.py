@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import core as mpx
-from repro.configs.base import ModelConfig, ParallelConfig
+from repro.configs.base import ModelConfig, ParallelConfig, ParallelPlan
 from repro.core import tool, topology
 from repro.core.hloanalysis import analyze_hlo
 from repro.models import mlp
@@ -45,8 +45,8 @@ def pipeline_demo():
         return
     trainer = Trainer(
         tiny_cfg(), ParallelConfig(),
-        TrainerConfig(steps=10, lr=1e-3, log_every=5, pipeline_stages=stages,
-                      pipeline_microbatches=2),
+        TrainerConfig(steps=10, lr=1e-3, log_every=5,
+                      plan=ParallelPlan(stage=stages, microbatches=2)),
         comm, seq_len=64, global_batch=8,
     )
     print(f"pipeline topology: {trainer.comm}")

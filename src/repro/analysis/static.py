@@ -122,6 +122,7 @@ def unregistered_pvars(paths: Iterable[str | Path]) -> list[Finding]:
     import repro.runtime.kvpool       # noqa: F401
     import repro.runtime.server       # noqa: F401
     import repro.runtime.trainer      # noqa: F401
+    import repro.tune                 # noqa: F401
     from repro.core import tool
 
     findings: list[Finding] = []

@@ -6,7 +6,21 @@ first layer dense (d_ff=12288), remaining 59 MoE with expert d_ff=1536.
 vocab=102400.
 """
 
-from repro.configs.base import ModelConfig, ParallelConfig
+from repro.configs.base import ModelConfig, ParallelConfig, PlanSpace
+
+
+def plan_space() -> PlanSpace:
+    # 60 layers minus the leading dense layer pipeline awkwardly past 4
+    # stages; 160 routed experts divide by every power of two up to 8, and
+    # expert parallelism rides the tensor (model) axis.
+    return PlanSpace(
+        stages=(1, 2, 4),
+        rings=(1, 2, 4),
+        experts=(1, 2, 4, 8),
+        tensors=(1, 2, 4, 8),
+        microbatches=(1, 2, 4, 8),
+        remats=("full",),          # 236B never trains without full remat
+    )
 
 
 def config() -> ModelConfig:

@@ -6,7 +6,18 @@ d_ff=14336 vocab=256000; sliding window 4096 on local layers, attn softcap
 50, final softcap 30, pre+post sandwich norms, tied + scaled embeddings.
 """
 
-from repro.configs.base import ModelConfig, ParallelConfig
+from repro.configs.base import ModelConfig, ParallelConfig, PlanSpace
+
+
+def plan_space() -> PlanSpace:
+    # 42 layers factor as 2·3·7: stages beyond (1, 2, 6) leave ragged
+    # stacks, and 16 GQA heads cap tensor at 8 without splitting a KV head.
+    return PlanSpace(
+        stages=(1, 2, 6),
+        rings=(1, 2, 4, 8),
+        tensors=(1, 2, 4, 8),
+        remats=("none", "dots", "full"),
+    )
 
 
 def config() -> ModelConfig:

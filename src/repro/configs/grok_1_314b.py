@@ -4,7 +4,20 @@
 vocab=131072, 8 experts top-2, attention + final logit softcap 30.
 """
 
-from repro.configs.base import ModelConfig, ParallelConfig
+from repro.configs.base import ModelConfig, ParallelConfig, PlanSpace
+
+
+def plan_space() -> PlanSpace:
+    # 64 layers pipeline cleanly to 8 stages; 48 heads cap tensor at 8
+    # (16 would split a head).  Experts stay replicated — 8 experts shard
+    # each expert's d_ff via TP rather than true EP (see parallel()).
+    return PlanSpace(
+        stages=(1, 2, 4, 8),
+        rings=(1, 2, 4),
+        tensors=(1, 2, 4, 8),
+        grad_buckets=(1, 2, 4, 8),
+        remats=("full",),
+    )
 
 
 def config() -> ModelConfig:

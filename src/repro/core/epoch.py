@@ -144,6 +144,20 @@ class TopologySpec:
         return tuple(size // fixed if d == ELASTIC else d for d in self.shape)
 
     @classmethod
+    def from_plan(cls, plan) -> "TopologySpec":
+        """The spec a :class:`~repro.configs.base.ParallelPlan` folds to: the
+        plan's fixed axes stay fixed, the data axis is marked
+        :data:`ELASTIC` so the same plan re-folds at every survivor count.
+        """
+
+        dims = plan.fold_dims()
+        return cls(
+            (ELASTIC,) + tuple(dims[1:]),
+            plan.fold_axes(),
+            plan.fold_periods(),
+        )
+
+    @classmethod
     def from_communicator(cls, comm: Communicator, *, elastic_axis: int = 0) -> "TopologySpec":
         """Derive a spec from an existing communicator: its axes and sizes,
         with ``elastic_axis`` marked elastic (the data axis by convention).

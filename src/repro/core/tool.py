@@ -35,7 +35,9 @@ from repro.core import errors
 PEAK_FLOPS_BF16 = 197e12     # FLOP/s per chip
 HBM_BANDWIDTH = 819e9        # bytes/s per chip
 ICI_BANDWIDTH = 50e9         # bytes/s per link
+DCN_BANDWIDTH = 12.5e9       # bytes/s per host NIC (inter-slice collectives)
 HBM_BYTES = 16 * 1024**3     # HBM capacity per chip
+COLLECTIVE_LAUNCH_S = 3e-6   # fixed per-collective launch/latency cost
 
 # --------------------------------------------------------------------------
 # HLO parsing: collective bytes (pvars from compiled artifacts)

@@ -17,6 +17,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 # crash-safe), running each cell in a subprocess.
 
 import argparse
+import dataclasses
 import json
 import math
 import subprocess
@@ -36,7 +37,8 @@ _ARG_ORDER = {
 _DONATE = {"train": (0, 1), "prefill": (), "decode": (1,)}
 
 
-def run_cell(arch: str, shape_name: str, multi_pod: bool, overrides: dict, tag: str) -> dict:
+def run_cell(arch: str, shape_name: str, multi_pod: bool, overrides: dict, tag: str,
+             plan_spec: str | None = None) -> dict:
     import jax
 
     from repro.configs import base
@@ -178,6 +180,34 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, overrides: dict, tag: 
         active_params=n_active,
         n_hlo_lines=hlo.count("\n"),
     )
+
+    # --plan: record the candidate's ANALYTIC roofline next to the measured
+    # cell terms, so the tuner's predicted-vs-measured validation
+    # (repro.tune.predicted_vs_measured, benchmarks/roofline.py --regret)
+    # reads both sides from one artifact
+    if plan_spec:
+        from repro.tune import score as tune_score
+
+        plan = (
+            base.parse_plan(plan_spec, devices=chips)
+            if plan_spec != "auto"
+            else None
+        )
+        if plan is None:
+            from repro.tune import search as tune_search
+
+            plan = tune_search.search(
+                cfg, shape, chips, space=base.plan_space(arch),
+                default_remat=pcfg.remat,
+            ).plan
+        predicted = tune_score.score_plan(
+            cfg, shape, plan, default_remat=pcfg.remat
+        )
+        record.update(
+            plan=dataclasses.asdict(plan),
+            plan_slug=plan.slug(),
+            predicted_roofline=predicted.as_dict(),
+        )
     return record
 
 
@@ -185,6 +215,21 @@ def artifact_path(arch: str, shape: str, multi_pod: bool, tag: str) -> Path:
     mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
     stem = f"{arch}__{shape}__{mesh_name}" + (f"__{tag}" if tag else "")
     return ARTIFACTS / f"{stem}.json"
+
+
+def _cell_done(path: Path, overrides: dict, tag: str) -> bool:
+    """Incremental-skip key: the cell is done only when the artifact on disk
+    was produced by the SAME (overrides, tag) request.  Existence alone used
+    to be the key, so ``--all --overrides ...`` silently reused artifacts
+    recorded under different overrides."""
+
+    if not path.exists():
+        return False
+    try:
+        rec = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError):
+        return False          # unreadable/torn artifact: rerun the cell
+    return rec.get("overrides", {}) == overrides and rec.get("tag", "") == tag
 
 
 def _cell_cmd(arch, shape, multi_pod, overrides, tag):
@@ -208,7 +253,7 @@ def orchestrate(jobs: int, multi_pod_modes: list[bool], overrides: dict, tag: st
         for arch in archs or base.ARCHITECTURES:
             for shape in shapes or list(base.SHAPES):
                 p = artifact_path(arch, shape, mp, tag)
-                if p.exists():
+                if _cell_done(p, overrides, tag):
                     continue
                 cells.append((arch, shape, mp))
     print(f"{len(cells)} cells to run ({jobs} workers)")
@@ -245,6 +290,13 @@ def main(argv=None):
     ap.add_argument("--jobs", type=int, default=3)
     ap.add_argument("--overrides", default="{}", help="ParallelConfig overrides (JSON)")
     ap.add_argument("--tag", default="", help="artifact suffix for perf experiments")
+    ap.add_argument(
+        "--plan",
+        default=None,
+        help="record this ParallelPlan candidate's analytic roofline terms "
+        "in the artifact ('auto' = the repro.tune winner for the cell); "
+        "the artifact tag defaults to the plan slug",
+    )
     ap.add_argument("--timeout", type=int, default=3600)
     args = ap.parse_args(argv)
     overrides = json.loads(args.overrides)
@@ -256,13 +308,19 @@ def main(argv=None):
         return orchestrate(args.jobs, modes, overrides, args.tag, archs, shapes, args.timeout)
 
     assert args.arch and args.shape, "--arch and --shape required (or --all)"
+    tag = args.tag
+    if args.plan and not tag:
+        # per-candidate artifacts must not clobber the base cell
+        tag = "plan-" + (args.plan if args.plan != "auto" else "auto").replace(
+            ",", "_").replace("=", "-").replace(":", "-")
     try:
-        record = run_cell(args.arch, args.shape, args.multi_pod, overrides, args.tag)
+        record = run_cell(args.arch, args.shape, args.multi_pod, overrides, tag,
+                          plan_spec=args.plan)
     except Exception:
         traceback.print_exc()
         return 1
     ARTIFACTS.mkdir(parents=True, exist_ok=True)
-    path = artifact_path(args.arch, args.shape, args.multi_pod, args.tag)
+    path = artifact_path(args.arch, args.shape, args.multi_pod, tag)
     path.write_text(json.dumps(record, indent=1))
     print("wrote", path, "status:", record["status"])
     return 0

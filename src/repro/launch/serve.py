@@ -43,11 +43,19 @@ def main(argv=None):
     ap.add_argument("--prefill-fraction", type=float, default=0.5)
     ap.add_argument("--kv-pages", type=int, default=4)
     ap.add_argument(
+        "--plan",
+        default=None,
+        help="the unified parallelism plan: 'auto' (repro.tune roofline "
+        "search on the prefill cell), 'DxT' dims, or key=value pairs; "
+        "'fanout=P:D' selects the heterogeneous disaggregated split",
+    )
+    ap.add_argument(
         "--fanout",
         default=None,
         metavar="P:D",
-        help="heterogeneous prefill:decode worker split (e.g. 2:6, 3:5); "
-        "implies --disaggregate and replaces --prefill-fraction",
+        help="alias for --plan fanout=P:D (same parser): heterogeneous "
+        "prefill:decode worker split (e.g. 2:6, 3:5); implies "
+        "--disaggregate and replaces --prefill-fraction",
     )
     ap.add_argument(
         "--continuous-batching",
@@ -56,16 +64,19 @@ def main(argv=None):
         "pool, in-flight admission) instead of one fixed batch",
     )
     args = ap.parse_args(argv)
+    if args.plan and args.fanout:
+        ap.error("--fanout is an alias for --plan fanout=P:D; pass one")
+    if args.plan and args.mesh != "auto":
+        ap.error("--plan subsumes --mesh (the plan's data/model dims are "
+                 "the mesh); drop one of the two")
     if args.fanout is not None:
         args.disaggregate = True
     if args.disaggregate and args.mesh != "auto":
         ap.error("--mesh has no effect with --disaggregate (group layouts "
                  "come from --prefill-fraction/--fanout); drop one of the two")
-    if args.continuous_batching and args.disaggregate:
-        ap.error("--continuous-batching schedules a single-group Server; "
-                 "it does not compose with --disaggregate/--fanout yet")
 
     from repro.configs import base
+    from repro.core.session import default_session
     from repro.launch.mesh import make_host_communicator
     from repro.runtime.server import (
         DisaggregatedServer,
@@ -76,9 +87,43 @@ def main(argv=None):
 
     cfg = base.get_smoke_config(args.arch) if args.smoke else base.get_config(args.arch)
     pcfg = base.get_parallel(args.arch)
+
+    # one parser for every layout flag: --plan wins; --fanout routes through
+    # the same grammar as "fanout=P:D"
+    plan = None
+    if args.plan == "auto":
+        shape = base.ShapeConfig(
+            f"prefill_{args.prompt_len}", args.prompt_len, args.requests,
+            "prefill",
+        )
+        from repro import tune as tune_mod
+
+        result = tune_mod.tune(
+            args.arch, shape, config=cfg, space=base.plan_space(args.arch),
+        )
+        plan = result.plan
+        print(f"autotuned plan: {plan.slug()} "
+              f"(predicted {result.score.step_s:.4f}s)")
+    elif args.plan:
+        plan = base.parse_plan(
+            args.plan, devices=default_session().group().size()
+        )
+    elif args.fanout is not None:
+        plan = base.parse_plan(
+            f"fanout={args.fanout}", devices=default_session().group().size()
+        )
+    if plan is not None and plan.fanout is not None:
+        args.disaggregate = True
+    if args.continuous_batching and args.disaggregate:
+        ap.error("--continuous-batching schedules a single-group Server; "
+                 "it does not compose with --disaggregate/--fanout yet")
+
     comm = None
     if not args.disaggregate:
-        if args.mesh == "auto":
+        if plan is not None:
+            d, m = (plan.fold_dims() + (1,))[:2]
+            comm = make_host_communicator(d, m, pset=args.pset)
+        elif args.mesh == "auto":
             comm = make_host_communicator(pset=args.pset)
         else:
             d, m = (int(t) for t in args.mesh.split("x"))
@@ -104,10 +149,7 @@ def main(argv=None):
                         max_new_tokens=args.new_tokens,
                         temperature=args.temperature)
     if args.disaggregate:
-        fanout = None
-        if args.fanout is not None:
-            p, d = (int(t) for t in args.fanout.split(":"))
-            fanout = (p, d)
+        fanout = plan.fanout if plan is not None else None
         server = DisaggregatedServer(
             cfg, pcfg, scfg,
             pset=args.pset,

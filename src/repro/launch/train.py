@@ -16,6 +16,43 @@ import json
 import logging
 
 
+def resolve_plan(args, cfg, devices):
+    """One parser for every layout flag: ``--plan`` wins (``auto`` runs the
+    repro.tune roofline search for this cell); the deprecated
+    ``--pipeline-stages``/``--ring-attention`` flags are aliases that build
+    the equivalent spec and route through :func:`repro.configs.base.parse_plan`.
+    Returns ``None`` (pure data plan) when nothing asked for a fold."""
+
+    from repro.configs import base
+
+    if args.plan:
+        if args.plan == "auto":
+            from repro import tune as tune_mod
+
+            shape = base.ShapeConfig(
+                f"train_{args.seq}", args.seq, args.batch, "train"
+            )
+            result = tune_mod.tune(
+                args.arch, shape, devices, config=cfg,
+                space=base.plan_space(args.arch),
+            )
+            logging.getLogger("repro.launch").info(
+                "autotuned plan: %s (predicted %.4fs over %d candidates)",
+                result.plan.slug(), result.score.step_s, result.n_candidates,
+            )
+            return result.plan
+        return base.parse_plan(args.plan, devices=devices)
+    parts = []
+    if args.pipeline_stages > 1:
+        parts.append(f"stage={args.pipeline_stages}")
+        parts.append(f"micro={args.pipeline_microbatches}")
+    if args.ring_attention > 1:
+        parts.append(f"ring={args.ring_attention}")
+    if parts:
+        return base.parse_plan(",".join(parts), devices=devices)
+    return None
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -40,25 +77,32 @@ def main(argv=None):
         "next persistent step (--no-async-checkpoint joins each save)",
     )
     ap.add_argument(
+        "--plan",
+        default=None,
+        help="the unified parallelism plan: 'auto' (run the repro.tune "
+        "roofline autotuner for this cell), positional dims 'DxSxExT' "
+        "(e.g. '2x4' = 2-way data x 4 pipeline stages), or key=value pairs "
+        "'data=2,ring=4,micro=2,buckets=4,remat=dots'",
+    )
+    ap.add_argument(
         "--pipeline-stages",
         type=int,
         default=0,
-        help="fold the process set onto a (data, stage) cart topology and "
-        "pipeline the layer stack over the stage axis (0/1 = GSPMD step)",
+        help="alias for --plan stage=N (same parser; 0/1 = GSPMD step)",
     )
     ap.add_argument(
         "--pipeline-microbatches",
         type=int,
         default=2,
-        help="microbatches streamed through the pipeline per step",
+        help="alias for --plan micro=N (with --pipeline-stages)",
     )
     ap.add_argument(
         "--ring-attention",
         type=int,
         default=0,
-        help="fold the process set onto a (data, ring) cart topology with a "
-        "periodic ring of this size; attention shards the sequence over the "
-        "ring and rotates KV via cart_shift(+1) permutes (0/1 = dense attn)",
+        help="alias for --plan ring=N: a periodic cart ring folded onto the "
+        "model axis; attention shards the sequence over the ring and "
+        "rotates KV via cart_shift(+1) permutes (0/1 = dense attn)",
     )
     ap.add_argument("--inject-failure-at", type=int, default=None)
     ap.add_argument(
@@ -95,6 +139,7 @@ def main(argv=None):
         d, m = (int(t) for t in args.mesh.split("x"))
         comm = make_host_communicator(d, m, pset=args.pset)
 
+    plan = resolve_plan(args, cfg, comm.group().size())
     tcfg = TrainerConfig(
         steps=args.steps,
         lr=args.lr,
@@ -102,9 +147,7 @@ def main(argv=None):
         checkpoint_every=args.checkpoint_every or max(1, args.steps // 2),
         async_checkpoint=args.async_checkpoint,
         log_every=args.log_every,
-        pipeline_stages=args.pipeline_stages,
-        pipeline_microbatches=args.pipeline_microbatches,
-        ring_attention=args.ring_attention,
+        plan=plan,
     )
     injector = None
     if args.inject_failure_at is not None:

@@ -27,7 +27,11 @@ buffers cannot be re-dispatched, the straggler policy runs with
 (checkpoint restore), the production behaviour for donated step buffers.
 ``TrainerConfig(persistent=False)`` restores the plain-``jit`` path.
 
-**Pipeline-parallel mode** (``TrainerConfig.pipeline_stages > 1``): the
+**Layout** comes from one :class:`~repro.configs.base.ParallelPlan`
+(``TrainerConfig.plan``, or the deprecated ``pipeline_stages``/
+``ring_attention`` int knobs shimmed through ``resolved_plan()``).
+
+**Pipeline-parallel mode** (``plan.stage > 1``): the
 trainer re-forms its process set as a ``(data, stage)`` Cartesian topology
 (``cart_create`` — MPI 4.0 ch. 8) and the step streams microbatches through
 the stages with :func:`repro.core.overlap.pipeline_spmd`; every stage
@@ -50,6 +54,7 @@ from __future__ import annotations
 import dataclasses
 import logging
 import time
+import warnings
 from typing import Callable
 
 import jax
@@ -59,7 +64,7 @@ from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.checkpoint import CheckpointManager
-from repro.configs.base import ModelConfig, ParallelConfig
+from repro.configs.base import ModelConfig, ParallelConfig, ParallelPlan
 from repro.core import errors, tool
 from repro.core.communicator import Communicator
 from repro.core.epoch import ELASTIC, CommEpoch, TopologySpec
@@ -83,6 +88,31 @@ tool.pvar_register(
     "elastic:recovery_steps",
     "steps replayed per eviction (restore point back to eviction point)",
 )
+tool.pvar_register(
+    "config:deprecated_knob",
+    "TrainerConfig layouts built through the deprecated "
+    "pipeline_stages/ring_attention int knobs instead of a ParallelPlan",
+)
+
+_deprecated_knob_warned = False
+
+
+def _warn_deprecated_knobs() -> None:
+    """One DeprecationWarning per process for the legacy int knobs; the pvar
+    still counts every shimmed construction so the lint sees the usage."""
+
+    global _deprecated_knob_warned
+    tool.pvar_count("config:deprecated_knob")
+    if _deprecated_knob_warned:
+        return
+    _deprecated_knob_warned = True
+    warnings.warn(
+        "TrainerConfig.pipeline_stages/pipeline_microbatches/ring_attention "
+        "are deprecated; pass plan=ParallelPlan(stage=..., ring=..., "
+        "microbatches=...) instead",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 @dataclasses.dataclass
@@ -105,18 +135,43 @@ class TrainerConfig:
     # checkpoint writes ride the I/O request engine and overlap the next
     # step; False joins each save before the next step starts
     async_checkpoint: bool = True
-    # pipeline parallelism over a Cartesian 'stage' axis (MPI 4.0 ch. 8):
-    # > 1 re-forms the communicator as cart_create((data, stages)) and the
-    # step streams microbatches through cart_shift(+1) stage boundaries
-    # (repro.core.overlap.pipeline_spmd).  0/1 = the GSPMD step.
+    # the unified layout: one frozen ParallelPlan covers the cart fold
+    # (data x stage x ring x tensor), microbatching, grad-sync buckets and
+    # remat — what `python -m repro.tune` emits and `--plan` parses.
+    # None = a pure data plan (adopt the communicator's own shape), unless
+    # the deprecated knobs below ask for a fold.
+    plan: ParallelPlan | None = None
+    # DEPRECATED pipeline/ring int knobs — shims that construct the
+    # equivalent ParallelPlan via resolved_plan() and warn once.  Kept so
+    # pre-plan examples and configs run unchanged; pvar
+    # `config:deprecated_knob` counts every shimmed construction.
     pipeline_stages: int = 0
     pipeline_microbatches: int = 2
-    # ring attention (kernels/ring_attention): > 1 re-forms the communicator
-    # as cart_create((data, ring)) with a *periodic* ring dim folded onto the
-    # model axis; attention shards the sequence over the ring and rotates KV
-    # shards via cart_shift(+1) permutes hidden behind blockwise compute —
-    # sequences larger than one device's KV budget become admissible.
     ring_attention: int = 0
+
+    def resolved_plan(self) -> ParallelPlan:
+        """The one layout truth: ``plan`` when set, else the deprecated int
+        knobs shimmed through :meth:`ParallelPlan.from_legacy` (warning
+        once), else the pure data plan."""
+
+        legacy = self.pipeline_stages > 1 or self.ring_attention > 1
+        if self.plan is not None:
+            errors.check(
+                not legacy,
+                errors.ErrorClass.ERR_ARG,
+                "TrainerConfig.plan and the deprecated pipeline_stages/"
+                "ring_attention knobs are both set; the plan is the only "
+                "layout input — drop the legacy knobs",
+            )
+            return self.plan
+        if legacy:
+            _warn_deprecated_knobs()
+            return ParallelPlan.from_legacy(
+                pipeline_stages=self.pipeline_stages,
+                pipeline_microbatches=self.pipeline_microbatches,
+                ring_attention=self.ring_attention,
+            )
+        return ParallelPlan()
 
 
 def make_train_step(
@@ -164,7 +219,12 @@ def _pipeline_param_specs(params, stages: int):
 
 
 def make_pipeline_train_step(
-    cfg: ModelConfig, pcfg: ParallelConfig, tcfg: TrainerConfig, opt: AdamW, cart
+    cfg: ModelConfig,
+    pcfg: ParallelConfig,
+    tcfg: TrainerConfig,
+    opt: AdamW,
+    cart,
+    plan: ParallelPlan | None = None,
 ):
     """Pipeline-parallel train step over a ``(data, stage)`` Cartesian
     topology (MPI 4.0 ch. 8 as the pipeline fabric).
@@ -186,7 +246,8 @@ def make_pipeline_train_step(
     from repro.models import transformer
 
     embed_mb, apply_units, loss_mb = transformer.pipeline_stage_fns(cfg, pcfg)
-    m = max(1, tcfg.pipeline_microbatches)
+    plan = plan if plan is not None else tcfg.resolved_plan()
+    m = max(1, plan.microbatches)
     mesh = cart.mesh
 
     def spmd_loss(params, batch):
@@ -311,42 +372,31 @@ class Trainer:
         return self._epoch.comm.mesh
 
     def _reform_topology(self, comm: Communicator) -> CommEpoch:
-        """The one place the trainer shapes its fabric: derive the epoch's
-        :class:`TopologySpec` from the config (pipeline and ring were two
-        near-identical cart-reform blocks before) and bundle it with the
-        communicator's group into generation 0.  The data axis is the
-        elastic dim — shrink/grow re-folds it; stage/ring dims are fixed."""
+        """The one place the trainer shapes its fabric: resolve the
+        :class:`~repro.configs.base.ParallelPlan` (pipeline and ring were
+        two near-identical cart-reform special cases before the plan
+        subsumed them), derive the epoch's :class:`TopologySpec` from it,
+        and bundle it with the communicator's group into generation 0.  The
+        data axis is the elastic dim — shrink/grow re-folds it; the plan's
+        stage/ring/tensor dims are fixed."""
 
-        tcfg = self.tcfg
-        errors.check(
-            not (tcfg.pipeline_stages > 1 and tcfg.ring_attention > 1),
-            errors.ErrorClass.ERR_TOPOLOGY,
-            "pipeline_stages and ring_attention both re-form the communicator; "
-            "pick one per trainer",
-        )
+        self.plan = plan = self.tcfg.resolved_plan()
         size = comm.group().size()
-        if tcfg.pipeline_stages > 1:
-            # re-form the process set as a (data, stage) Cartesian topology:
-            # stage boundaries become cart_shift(+1) neighbor exchanges
-            s = tcfg.pipeline_stages
+        if plan.remat is not None:
+            self.pcfg = dataclasses.replace(self.pcfg, remat=plan.remat)
+        if plan.reforms_fabric:
             errors.check(
-                size % s == 0,
+                size % plan.fixed_size == 0,
                 errors.ErrorClass.ERR_DIMS,
-                f"{size} devices do not fold onto {s} pipeline stages",
+                f"{size} devices do not fold onto plan {plan.slug()!r} "
+                f"(fixed axes need a multiple of {plan.fixed_size})",
             )
-            spec = TopologySpec((ELASTIC, s), ("data", "stage"), (False, False))
-        elif tcfg.ring_attention > 1:
-            # (data, ring) Cartesian topology with a *periodic* ring dim
-            # folded onto the model axis: attention shards the sequence over
-            # the ring and rotates KV via cart_shift(+1) collective-permutes
-            r = tcfg.ring_attention
-            errors.check(
-                size % r == 0,
-                errors.ErrorClass.ERR_DIMS,
-                f"{size} devices do not fold onto a ring of {r}",
-            )
-            spec = TopologySpec((ELASTIC, r), ("data", "model"), (False, True))
-            self.pcfg = dataclasses.replace(self.pcfg, ring_attention=True)
+            spec = TopologySpec.from_plan(plan)
+            if plan.ring > 1:
+                # the periodic ring dim rides the model axis: attention
+                # shards the sequence over the ring and rotates KV via
+                # cart_shift(+1) collective-permutes hidden behind compute
+                self.pcfg = dataclasses.replace(self.pcfg, ring_attention=True)
         else:
             spec = None  # adopt the communicator's own shape
         return CommEpoch.create(comm, spec, name="train")
@@ -366,8 +416,8 @@ class Trainer:
         return params, opt_state
 
     def _param_pspecs(self, params):
-        if self.tcfg.pipeline_stages > 1:
-            return _pipeline_param_specs(params, self.tcfg.pipeline_stages)
+        if self.plan.stage > 1:
+            return _pipeline_param_specs(params, self.plan.stage)
         return rules.param_specs(params, self.mesh, self.pcfg)
 
     def _state_shardings(self, params, opt_state):
@@ -415,9 +465,10 @@ class Trainer:
 
     def _build_step(self, params, opt_state):
         batch = self.pipeline.device_batch(0, self.mesh, self.pcfg)
-        if self.tcfg.pipeline_stages > 1:
+        if self.plan.stage > 1:
             base_step = make_pipeline_train_step(
-                self.cfg, self.pcfg, self.tcfg, self.opt, self.comm
+                self.cfg, self.pcfg, self.tcfg, self.opt, self.comm,
+                plan=self.plan,
             )
         else:
             base_step = make_train_step(

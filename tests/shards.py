@@ -50,6 +50,7 @@ SHARDS = {
         "tests/test_models.py",
         "tests/test_server.py",
         "tests/test_trainer.py",
+        "tests/test_tune.py",
     ],
 }
 

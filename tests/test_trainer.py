@@ -244,8 +244,8 @@ def test_pipeline_ring_mutual_exclusion_message():
             make_host_mesh(),
         )
     assert (
-        "pipeline_stages and ring_attention both re-form the communicator; "
-        "pick one per trainer"
+        "plan axes stage (pipeline_stages) and ring (ring_attention) both "
+        "re-form the communicator; pick one per plan"
     ) in str(ei.value)
 
 

@@ -1,0 +1,401 @@
+"""The parallelism autotuner and its ``ParallelPlan`` API.
+
+Covers the plan value itself (validation, fold mapping, parsing), the legal
+space enumeration, the deterministic roofline search (exhaustive minimum ==
+acceptance criterion, coordinate descent never beats it), the multi-slice
+device interleave, the ``TrainerConfig`` deprecation shims, and one
+end-to-end trainer built from a plan (subprocess, 8 virtual devices).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import warnings
+
+import pytest
+
+from repro.configs.base import (
+    SHAPES,
+    ParallelPlan,
+    PlanSpace,
+    legal_plans,
+    parse_plan,
+    plan_space,
+)
+from repro.core import errors
+
+
+def _gemma():
+    from repro.configs.base import get_config
+
+    return get_config("gemma2_9b")
+
+
+# -- the plan value -----------------------------------------------------------
+
+
+def test_plan_defaults_are_pure_data():
+    p = ParallelPlan(data=8)
+    assert p.fold_dims() == (8,)
+    assert p.fold_axes() == ("data",)
+    assert p.fold_periods() is None
+    assert not p.reforms_fabric
+    assert p.fixed_size == 1
+    assert p.cart_pset == "repro://cart/8"
+    assert p.slug() == "d8"
+
+
+def test_plan_fold_mapping_per_fabric():
+    stage = ParallelPlan(data=2, stage=4, microbatches=2)
+    assert stage.fold_dims() == (2, 4)
+    assert stage.fold_axes() == ("data", "stage")
+    assert stage.fold_periods() == (False, False)
+
+    ring = ParallelPlan(data=2, ring=4)
+    assert ring.fold_dims() == (2, 4)
+    assert ring.fold_axes() == ("data", "model")
+    assert ring.fold_periods() == (False, True)   # KV rotates all the way
+
+    tensor = ParallelPlan(data=2, tensor=4)
+    assert tensor.fold_dims() == (2, 4)
+    assert tensor.fold_axes() == ("data", "model")
+    assert tensor.fold_periods() is None
+
+    for p in (stage, ring, tensor):
+        assert p.reforms_fabric and p.total_devices == 8 and p.fixed_size == 4
+
+
+def test_plan_mutual_exclusions():
+    with pytest.raises(errors.TopologyError, match="pick one per plan"):
+        ParallelPlan(stage=2, ring=2)
+    with pytest.raises(errors.TopologyError, match="model mesh axis"):
+        ParallelPlan(ring=2, tensor=2)
+    with pytest.raises(errors.TopologyError, match="does not compose"):
+        ParallelPlan(stage=2, tensor=2)
+    with pytest.raises(errors.TopologyError, match="rides the model axis"):
+        ParallelPlan(expert=4, tensor=2)
+    with pytest.raises(errors.ArgError, match="remat"):
+        ParallelPlan(remat="everything")
+    with pytest.raises(errors.ArgError, match="positive int"):
+        ParallelPlan(data=0)
+    with pytest.raises(errors.TopologyError, match="not a fold axis"):
+        ParallelPlan(data=2, tensor=4, dcn_axis="stage")
+
+
+def test_plan_resolved_fills_data_axis():
+    p = ParallelPlan(stage=2, microbatches=2)
+    assert p.resolved(8).data == 4
+    with pytest.raises(errors.DimsError, match="multiple of 2"):
+        p.resolved(7)
+
+
+def test_plan_from_legacy_matches_old_knobs():
+    p = ParallelPlan.from_legacy(pipeline_stages=2, pipeline_microbatches=4)
+    assert (p.stage, p.microbatches, p.ring) == (2, 4, 1)
+    r = ParallelPlan.from_legacy(ring_attention=4)
+    assert (r.ring, r.stage, r.microbatches) == (4, 1, 1)
+    assert ParallelPlan.from_legacy() == ParallelPlan()
+
+
+# -- the --plan grammar -------------------------------------------------------
+
+
+def test_parse_plan_positional():
+    p = parse_plan("2x4")
+    assert (p.data, p.stage) == (2, 4)
+    assert p.microbatches == 2            # pipeline default rides along
+    e = parse_plan("2x1x4")               # DxSxE: expert implies tensor
+    assert (e.expert, e.tensor) == (4, 4)
+
+
+def test_parse_plan_key_value_and_aliases():
+    p = parse_plan("data=2,ring=4,micro=2,buckets=4,remat=dots")
+    assert (p.data, p.ring, p.microbatches, p.grad_buckets, p.remat) == (
+        2, 4, 2, 4, "dots",
+    )
+    assert parse_plan("tensor=2,dcn=model").dcn_axis == "model"
+    assert parse_plan("fanout=2:6").fanout == (2, 6)
+
+
+def test_parse_plan_derives_data_from_devices():
+    p = parse_plan("stage=2", devices=8)
+    assert (p.data, p.stage, p.microbatches) == (4, 2, 2)
+    with pytest.raises(errors.DimsError):
+        parse_plan("stage=3", devices=8)
+
+
+def test_parse_plan_rejects_bad_specs():
+    with pytest.raises(errors.ArgError, match="auto"):
+        parse_plan("auto")
+    with pytest.raises(errors.ArgError, match="unknown plan key"):
+        parse_plan("warp=9")
+    with pytest.raises(errors.ArgError, match="P:D"):
+        parse_plan("fanout=26")
+    with pytest.raises(errors.ArgError, match="1-4 dims"):
+        parse_plan("2x2x2x2x2")
+
+
+# -- legal space enumeration --------------------------------------------------
+
+
+def test_legal_plans_respect_model_constraints():
+    cfg = _gemma()
+    shape = SHAPES["train_4k"]
+    plans = legal_plans(cfg, shape, 8, plan_space("gemma2_9b"))
+    assert plans, "gemma2_9b train_4k must have a legal space at 8 devices"
+    for p in plans:
+        assert sum(x > 1 for x in (p.stage, p.ring, p.tensor)) <= 1
+        assert p.expert in (1, p.tensor)
+        assert 8 % p.fixed_size == 0 and p.data == 8 // p.fixed_size
+        if p.stage > 1:
+            assert cfg.num_layers % p.stage == 0 and p.microbatches >= 2
+        if p.ring > 1:
+            assert shape.seq_len % p.ring == 0
+        if p.tensor > 1:
+            assert cfg.num_heads % p.tensor == 0
+    # enumeration is deterministic
+    assert plans == legal_plans(cfg, shape, 8, plan_space("gemma2_9b"))
+
+
+def test_legal_plans_multi_slice_emit_dcn_axes():
+    plans = legal_plans(
+        _gemma(), SHAPES["train_4k"], 16, plan_space("gemma2_9b"), slices=2
+    )
+    axes = {p.dcn_axis for p in plans}
+    assert "data" in axes                 # d16 splits over 2 slices
+    for p in plans:
+        if p.dcn_axis is not None:
+            i = p.fold_axes().index(p.dcn_axis)
+            assert p.fold_dims()[i] % 2 == 0
+
+
+def test_plan_space_family_defaults():
+    assert plan_space("mamba2_2_7b").rings == (1,)     # no attention ring
+    moe = plan_space("deepseek_v2_236b")
+    assert all(e in (1, 2, 4, 8) for e in moe.experts)
+    # declared per-arch space wins over the family default
+    assert plan_space("gemma2_9b").stages == (1, 2, 6)  # 42 layers
+
+
+def test_ssm_family_has_no_ring_plans():
+    cfg = dataclasses.replace(_gemma(), family="ssm")
+    plans = legal_plans(cfg, SHAPES["train_4k"], 8, PlanSpace())
+    assert plans and all(p.ring == 1 for p in plans)
+
+
+# -- plan → topology ----------------------------------------------------------
+
+
+def test_topology_from_plan_round_trip():
+    from repro.core.epoch import ELASTIC, TopologySpec
+
+    plan = ParallelPlan(data=2, ring=4)
+    spec = TopologySpec.from_plan(plan)
+    assert spec.shape == (ELASTIC, 4)
+    assert spec.axis_names == ("data", "model")
+    assert spec.periods == (False, True)
+
+    stage = TopologySpec.from_plan(ParallelPlan(data=4, stage=2, microbatches=2))
+    assert stage.shape == (ELASTIC, 2)
+    assert stage.axis_names == ("data", "stage")
+
+
+# -- scoring + search ---------------------------------------------------------
+
+
+def test_score_plan_is_deterministic_and_memory_aware():
+    from repro.tune import score_plan
+
+    cfg, shape = _gemma(), SHAPES["train_4k"]
+    lean = ParallelPlan(data=8, microbatches=8, grad_buckets=4, remat="full")
+    fat = ParallelPlan(data=8, remat="none")
+    a, b = score_plan(cfg, shape, lean), score_plan(cfg, shape, lean)
+    assert a == b                         # pure arithmetic, no clocks
+    assert a.step_s > 0 and a.peak_bytes > 0
+    # full remat at 8 microbatches holds less state than rm-none at mb=1
+    assert a.peak_bytes < score_plan(cfg, shape, fat).peak_bytes
+
+
+def test_exhaustive_search_is_the_brute_force_minimum():
+    from repro.tune import score_plan, search
+
+    cfg, shape = _gemma(), SHAPES["train_4k"]
+    space = plan_space("gemma2_9b")
+    result = search(cfg, shape, 8, space=space, mode="exhaustive")
+    best = min(
+        score_plan(cfg, shape, p).step_s
+        for p in legal_plans(cfg, shape, 8, space)
+    )
+    assert result.score.step_s == best
+    # deterministic: same cell, same verdict
+    again = search(cfg, shape, 8, space=space, mode="exhaustive")
+    assert again.plan == result.plan and again.score == result.score
+
+
+def test_coordinate_search_never_beats_exhaustive_and_scores_less():
+    from repro.tune import search
+
+    cfg, shape = _gemma(), SHAPES["train_4k"]
+    space = plan_space("gemma2_9b")
+    best = search(cfg, shape, 256, space=space, mode="exhaustive")
+    greedy = search(cfg, shape, 256, space=space, mode="coordinate")
+    assert greedy.score.step_s >= best.score.step_s    # regret >= 1.0
+    assert greedy.n_scored < best.n_scored
+    with pytest.raises(errors.ArgError, match="unknown search mode"):
+        search(cfg, shape, 8, space=space, mode="simulated-annealing")
+
+
+def test_search_rejects_empty_cell():
+    from repro.tune import search
+
+    with pytest.raises(errors.TopologyError, match="no legal plan"):
+        # 7 devices: no gemma2 fold divides them except data=7, but the
+        # global batch (SHAPES train_4k) does not split 7 ways
+        search(_gemma(), SHAPES["train_4k"], 7, space=plan_space("gemma2_9b"))
+
+
+# -- multi-slice device interleave -------------------------------------------
+
+
+class _FakeDev:
+    def __init__(self, i, slice_index):
+        self.id = i
+        self.slice_index = slice_index
+        self.process_index = 0
+        self.platform = "fake"
+
+    def __repr__(self):
+        return f"dev{self.id}@s{self.slice_index}"
+
+
+def _two_slice_session():
+    from repro.core.session import Session
+
+    return Session([_FakeDev(i, i // 4) for i in range(8)])
+
+
+def test_fold_group_splits_dcn_axis_per_slice():
+    from repro import tune
+
+    sess = _two_slice_session()
+    assert sorted(p for p in sess.psets() if "slice" in p) == [
+        "repro://slice/0", "repro://slice/1",
+    ]
+    # dcn on the data axis: the fold's leading blocks sit whole in a slice
+    g = tune.fold_group(sess, ParallelPlan(data=4, ring=2, dcn_axis="data"))
+    assert [d.slice_index for d in g.devices] == [0, 0, 0, 0, 1, 1, 1, 1]
+    # dcn on the model axis: the ring itself straddles the slice boundary
+    g = tune.fold_group(sess, ParallelPlan(data=4, ring=2, dcn_axis="model"))
+    assert [d.slice_index for d in g.devices] == [0, 1, 0, 1, 0, 1, 0, 1]
+    # no dcn axis: leading world devices, fold order untouched
+    g = tune.fold_group(sess, ParallelPlan(data=8))
+    assert [d.id for d in g.devices] == list(range(8))
+
+
+def test_fold_group_rejects_indivisible_dcn_axis():
+    from repro import tune
+
+    with pytest.raises(errors.TopologyError, match="does not split"):
+        tune.fold_group(
+            _two_slice_session(),
+            ParallelPlan(data=2, tensor=3, dcn_axis="model"),
+        )
+    with pytest.raises(errors.GroupError, match="needs 16 devices"):
+        tune.fold_group(_two_slice_session(), ParallelPlan(data=16))
+
+
+def test_tune_registers_cart_pset():
+    from repro import tune
+    from repro.core import tool
+
+    sess = _two_slice_session()
+    before = tool.pvar_read().get("tune:winner_registered", 0)
+    result = tune.tune(
+        "gemma2_9b", "train_4k", 8, session=sess, calibrate=False,
+        space=plan_space("gemma2_9b"),
+    )
+    assert result.plan.cart_pset in sess.psets()
+    assert tool.pvar_read().get("tune:winner_registered", 0) == before + 1
+    assert len(sess.pset(result.plan.cart_pset)) == result.plan.total_devices
+
+
+# -- TrainerConfig shims ------------------------------------------------------
+
+
+def test_legacy_knobs_resolve_through_shim_with_warning():
+    import repro.runtime.trainer as rt
+    from repro.core import tool
+
+    rt._deprecated_knob_warned = False
+    tcfg = rt.TrainerConfig(pipeline_stages=2, pipeline_microbatches=4)
+    before = tool.pvar_read().get("config:deprecated_knob", 0)
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        plan = tcfg.resolved_plan()
+    assert plan == ParallelPlan(stage=2, microbatches=4)
+    # the warning fires once per process; the pvar counts every resolution
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert tcfg.resolved_plan() == plan
+    assert tool.pvar_read().get("config:deprecated_knob", 0) == before + 2
+
+
+def test_plan_and_legacy_knobs_are_mutually_exclusive():
+    from repro.runtime.trainer import TrainerConfig
+
+    tcfg = TrainerConfig(plan=ParallelPlan(stage=2, microbatches=2),
+                         pipeline_stages=2)
+    with pytest.raises(errors.ArgError, match="deprecated"):
+        tcfg.resolved_plan()
+
+
+def test_default_trainer_config_resolves_to_identity_plan():
+    from repro.runtime.trainer import TrainerConfig
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert TrainerConfig().resolved_plan() == ParallelPlan()
+
+
+# -- dryrun incremental key ---------------------------------------------------
+
+
+def test_dryrun_cell_done_keys_on_overrides_and_tag(tmp_path):
+    from repro.launch.dryrun import _cell_done
+
+    p = tmp_path / "cell.json"
+    assert not _cell_done(p, {}, "")                   # missing: run
+    p.write_text(json.dumps({"overrides": {"remat": "dots"}, "tag": "x"}))
+    assert _cell_done(p, {"remat": "dots"}, "x")       # same request: skip
+    assert not _cell_done(p, {"remat": "full"}, "x")   # other overrides: run
+    assert not _cell_done(p, {"remat": "dots"}, "y")   # other tag: run
+    p.write_text("{torn")
+    assert not _cell_done(p, {}, "")                   # unreadable: run
+
+
+# -- end to end: a trainer built from the tuned plan --------------------------
+
+
+def test_trainer_from_plan_subprocess(subproc):
+    code = """
+from repro.configs.base import ModelConfig, ParallelConfig, ParallelPlan
+from repro.core import tool
+from repro.launch.mesh import make_host_communicator
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+cfg = ModelConfig(name="tiny", family="dense", num_layers=2, d_model=64,
+                  num_heads=4, num_kv_heads=2, head_dim=16, d_ff=128,
+                  vocab_size=128, dtype="float32")
+t = Trainer(cfg, ParallelConfig(),
+            TrainerConfig(steps=2, log_every=1,
+                          plan=ParallelPlan(stage=2, microbatches=2)),
+            make_host_communicator(), seq_len=64, global_batch=8,
+            clock=lambda: 0.0)
+assert t.comm.dims == (4, 2), t.comm.dims       # data axis fills 8 devices
+assert t.comm.axis_names == ("data", "stage")
+res = t.run()
+assert res["final_step"] == 2
+assert tool.pvar_read().get("trace:train_step", 0) == 1, "re-traced!"
+print("PLAN_TRAINER_OK")
+"""
+    assert "PLAN_TRAINER_OK" in subproc(code, n=8)
